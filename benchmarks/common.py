@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: corpora caching, recall/latency sweeps."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+CACHE = os.path.join(os.path.dirname(__file__), "results", "cache")
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def cached_corpus(name: str, scale: float, seed: int = 0):
+    from repro.data.synthetic import make_corpus
+
+    os.makedirs(CACHE, exist_ok=True)
+    fp = os.path.join(CACHE, f"{name}_{scale}_{seed}.npy")
+    if os.path.exists(fp):
+        return np.load(fp, mmap_mode="r")
+    db = make_corpus(name, scale=scale, seed=seed)
+    np.save(fp, db)
+    return db
+
+
+def ground_truth(db, queries, k=10, tag=None):
+    from repro.core.brute import brute_search
+
+    if tag is not None:
+        os.makedirs(CACHE, exist_ok=True)
+        fp = os.path.join(CACHE, f"gt_{tag}.npz")
+        if os.path.exists(fp):
+            z = np.load(fp)
+            return z["d"], z["i"]
+    d, i = brute_search(queries, np.asarray(db), k)
+    if tag is not None:
+        np.savez(os.path.join(CACHE, f"gt_{tag}.npz"), d=d, i=i)
+    return d, i
+
+
+def heldout_split(db, n_queries: int):
+    """Hold out the corpus tail as queries (SIFT-style true held-out —
+    near-duplicate queries make one-level trees trivially strong and
+    misrepresent Table 1; EXPERIMENTS.md §Paper-validation)."""
+    db = np.asarray(db)
+    return db[:-n_queries], db[-n_queries:].copy()
+
+
+def timed(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,99 @@
+"""Paper Fig. 1: QLBT latency gain vs query-likelihood unbalance score.
+
+Reproduces the §4.2 simulation: 256 radio-station-like entities, traffic
+from Beta distributions swept over unbalance scores, queries sampled from
+the likelihood.  We report, per unbalance level:
+
+  * E[Depth] for balanced SPPT vs QLBT (the paper's objective),
+  * mean + P90 *work* (distance evaluations + node dot products) at
+    recall@10 >= 0.95 — the machine-independent latency proxy,
+  * wall-clock per query on this host (relative numbers are what the paper
+    reports; DESIGN.md §2),
+  * the beyond-paper greedy-split variant, recorded separately.
+
+Paper claims: gain grows with unbalance; ~15% at U=0.23 (the real Radio
+Station traffic's score).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.core.likelihood import beta_for_unbalance, sample_queries
+from repro.core.metrics import recall_at_k
+from repro.core.tree import build_qlbt, build_rp_tree, tree_search
+
+import jax.numpy as jnp
+
+
+def _corpus(rng, n=256, d=256):
+    # mild cluster structure like real entity embeddings
+    c = rng.normal(size=(n // 8, d)).astype(np.float32)
+    x = (c[:, None, :] + 0.8 * rng.normal(size=(n // 8, 8, d))) \
+        .reshape(n, d)
+    return x.astype(np.float32)
+
+
+def _work_at_recall(tree, db, q, gt, target=0.95):
+    dbj = jnp.asarray(db)
+    qj = jnp.asarray(q)
+    best = None
+    for w in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32):
+        res = tree_search(tree.device_arrays(), dbj, qj, beam_width=w,
+                          k=10, max_steps=tree.max_depth + 4)
+        r = recall_at_k(np.asarray(res.ids), gt)
+        if r >= target:
+            work = (np.asarray(res.internal_visits)
+                    + np.asarray(res.candidates))
+            _, wall = timed(
+                lambda: tree_search(tree.device_arrays(), dbj, qj,
+                                    beam_width=w, k=10,
+                                    max_steps=tree.max_depth + 4
+                                    ).ids.block_until_ready(), iters=3)
+            best = dict(beam=w, recall=r, mean=float(work.mean()),
+                        p90=float(np.percentile(work, 90)),
+                        wall_us=wall / q.shape[0] * 1e6)
+            break
+    return best
+
+
+def run(n_queries: int = 2000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    db = _corpus(rng)
+    rows = []
+    for target_u in (0.02, 0.12, 0.23, 0.35, 0.45):
+        _, u, p = beta_for_unbalance(target_u, db.shape[0], seed=3)
+        q, gt = sample_queries(rng, db, p, n_queries, noise_scale=0.05)
+        bal = build_rp_tree(db, seed=1, n_candidates=16)
+        ql = build_qlbt(db, p, seed=1, n_candidates=16, lam=0.2)
+        gr = build_qlbt(db, p, seed=1, n_candidates=16, lam=0.2,
+                        objective="greedy")
+        wb = _work_at_recall(bal, db, q, gt)
+        wq = _work_at_recall(ql, db, q, gt)
+        wg = _work_at_recall(gr, db, q, gt)
+        if not (wb and wq and wg):
+            continue
+        row = dict(
+            unbalance=round(u, 3),
+            e_depth_bal=round(bal.expected_depth(p), 2),
+            e_depth_qlbt=round(ql.expected_depth(p), 2),
+            e_depth_greedy=round(gr.expected_depth(p), 2),
+            mean_gain_qlbt=round(1 - wq["mean"] / wb["mean"], 3),
+            p90_gain_qlbt=round(1 - wq["p90"] / wb["p90"], 3),
+            mean_gain_greedy=round(1 - wg["mean"] / wb["mean"], 3),
+            wall_us_bal=round(wb["wall_us"], 1),
+            wall_us_qlbt=round(wq["wall_us"], 1),
+        )
+        rows.append(row)
+        csv_row(
+            f"fig1_qlbt_u{row['unbalance']}", row["wall_us_qlbt"],
+            f"mean_gain={row['mean_gain_qlbt']};"
+            f"p90_gain={row['p90_gain_qlbt']};"
+            f"greedy_gain={row['mean_gain_greedy']};"
+            f"ED={row['e_depth_bal']}->{row['e_depth_qlbt']}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

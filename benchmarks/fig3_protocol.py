@@ -1,0 +1,84 @@
+"""Paper Fig. 3 + §5.3: footprint & latency vs corpus size; the 30K
+crossover; the configuration protocol end-to-end.
+
+For sizes 5K..300K builds (a) one-level tree, (b) the protocol-selected
+index, and reports footprint bytes (excluding raw vectors, which both need)
+and P90 per-query wall time at recall@10 >= 0.9.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_corpus, csv_row, ground_truth
+from repro.core.index import auto_build_index, build_index
+from repro.core.metrics import recall_at_k
+from repro.core.protocol import IndexSpec
+from repro.core.tree import build_rp_tree, tree_search
+
+import jax.numpy as jnp
+
+
+def _tree_p90_at_recall(db, q, gt, target=0.9):
+    t = build_rp_tree(db, leaf_size=8, n_candidates=4, seed=0)
+    dbj, qj = jnp.asarray(db), jnp.asarray(q)
+    for w in (2, 4, 8, 16, 32, 64, 128, 256, 512):
+        if w * 8 > db.shape[0]:
+            break
+        res = tree_search(t.device_arrays(), dbj, qj, beam_width=w, k=10,
+                          max_steps=t.max_depth + 4)
+        if recall_at_k(np.asarray(res.ids), gt) >= target:
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                tree_search(t.device_arrays(), dbj, qj, beam_width=w,
+                            k=10, max_steps=t.max_depth + 4
+                            ).ids.block_until_ready()
+                times.append((time.perf_counter() - t0) / q.shape[0])
+            return float(np.median(times)), t.footprint_bytes(), w
+    return np.inf, t.footprint_bytes(), None
+
+
+def _proto_p90_at_recall(db, q, gt, target=0.9):
+    idx = auto_build_index(db)
+    kind = idx.spec.kind
+    sweep = ((4, 8, 16, 32, 64, 128, 256) if kind == "two_level" else
+             (2, 4, 8, 16, 32, 64))
+    for v in sweep:
+        kw = dict(nprobe=v) if kind == "two_level" else dict(beam_width=v)
+        _, ids, _ = idx.search(q, 10, **kw)
+        if recall_at_k(ids, gt) >= target:
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                idx.search(q, 10, **kw)
+                times.append((time.perf_counter() - t0) / q.shape[0])
+            return (float(np.median(times)),
+                    idx.footprint_bytes(include_db=False), v, kind)
+    return np.inf, idx.footprint_bytes(include_db=False), None, kind
+
+
+def run(n_queries: int = 256, seed: int = 0):
+    from benchmarks.common import heldout_split
+
+    rows = []
+    for n in (5_000, 10_000, 30_000, 100_000, 300_000):
+        scale = (n + n_queries) / 1_000_000
+        db, q = heldout_split(
+            np.asarray(cached_corpus("sift", scale, seed))[: n + n_queries],
+            n_queries,
+        )
+        _, gt = ground_truth(db, q, 10, tag=f"fig3_ho_{n}_{seed}")
+        t_tree, fp_tree, w = _tree_p90_at_recall(db, q, gt)
+        t_pro, fp_pro, v, kind = _proto_p90_at_recall(db, q, gt)
+        rows.append(dict(n=n, tree_us=t_tree * 1e6, proto_us=t_pro * 1e6,
+                         tree_fp=fp_tree, proto_fp=fp_pro, kind=kind))
+        csv_row(f"fig3_n{n}", t_pro * 1e6,
+                f"kind={kind};tree_us={t_tree * 1e6:.0f};"
+                f"fp_tree={fp_tree};fp_proto={fp_pro}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

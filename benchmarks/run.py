@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+  python -m benchmarks.run             # default (CPU-sized) tiers
+  python -m benchmarks.run --full      # paper-scale corpora (slow)
+  python -m benchmarks.run --only fig1,roofline
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.csv_row).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale corpora (1M SIFT / 10M DEEP)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,table1,fig2d,fig3,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("fig1"):
+        from benchmarks import fig1_qlbt
+
+        fig1_qlbt.run()
+    if want("table1"):
+        from benchmarks import table1_twolevel
+
+        table1_twolevel.run(scale=1.0 if args.full else 0.2)
+    if want("fig2d"):
+        from benchmarks import fig2d_deep
+
+        fig2d_deep.run(scale=1.0 if args.full else 0.1)
+    if want("fig3"):
+        from benchmarks import fig3_protocol
+
+        fig3_protocol.run()
+    if want("roofline"):
+        from benchmarks import roofline
+
+        try:
+            roofline.run()
+        except FileNotFoundError:
+            print("roofline: no dryrun.json yet — run "
+                  "python -m repro.launch.dryrun --all first",
+                  file=sys.stderr)
+    print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Paper Table 1 + Fig. 2(b,c): one-level vs two-level on SIFT-scale data.
+
+Sweeps split counts 2^s and bottom algorithms {tree, lsh, brute} with a PQ
+top level, against one-level tree and LSH baselines, on a synthetic
+SIFT-analog corpus (DESIGN.md §8).  Reports recall@10 at a matched
+wall-clock budget (the budget = P90 time of the paper-optimal config,
+analogous to the paper's 80 ms on t3.xlarge) plus the full recall/latency
+frontier.
+
+Paper claims validated here: (1) neither one-level method reaches the
+recall target at budget; (2) two-level dominates; (3) brute is the best
+bottom level; (4) the optimum sits near ~100 entities per bucket.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_corpus, csv_row, ground_truth
+from repro.core.metrics import recall_at_k
+from repro.core.tree import build_rp_tree, tree_search
+from repro.core.lsh import lsh_build, lsh_search
+from repro.core.two_level import TwoLevelConfig, build_two_level
+
+import jax.numpy as jnp
+
+
+def _one_level_tree(db, q, gt, budget_s):
+    t = build_rp_tree(db, leaf_size=8, n_candidates=4, seed=0)
+    dbj, qj = jnp.asarray(db), jnp.asarray(q)
+    best = 0.0
+    for w in (4, 16, 64, 256):
+        t0 = time.perf_counter()
+        res = tree_search(t.device_arrays(), dbj, qj, beam_width=w, k=10,
+                          max_steps=t.max_depth + 4)
+        np.asarray(res.ids)
+        dt = (time.perf_counter() - t0) / q.shape[0]
+        r = recall_at_k(np.asarray(res.ids), gt)
+        if dt <= budget_s:
+            best = max(best, r)
+    return best
+
+
+def _one_level_lsh(db, q, gt, budget_s):
+    idx = lsh_build(db, n_bits=96, seed=0)
+    best = 0.0
+    for cand in (64, 256, 1024):
+        t0 = time.perf_counter()
+        _, ids = lsh_search(idx, db, q, 10, n_candidates=cand)
+        dt = (time.perf_counter() - t0) / q.shape[0]
+        r = recall_at_k(ids, gt)
+        if dt <= budget_s:
+            best = max(best, r)
+    return best
+
+
+def _two_level(db, q, gt, n_clusters, bottom, budget_s, nprobes):
+    cfg = TwoLevelConfig(
+        n_clusters=n_clusters, top="pq", bottom=bottom,
+        kmeans_iters=6, kmeans_minibatch=min(131072, db.shape[0]),
+        tree_candidates=2,
+    )
+    idx = build_two_level(db, cfg)
+    out = []
+    for nprobe in nprobes:
+        # warm then measure
+        idx.search(q[:32], 10, nprobe=nprobe)
+        t0 = time.perf_counter()
+        _, ids, work = idx.search(q, 10, nprobe=nprobe, beam_width=8)
+        dt = (time.perf_counter() - t0) / q.shape[0]
+        out.append((recall_at_k(ids, gt), dt, work))
+    within = [r for r, dt, _ in out if dt <= budget_s]
+    return (max(within) if within else 0.0), out
+
+
+def run(scale: float = 0.2, n_queries: int = 512, seed: int = 0):
+    """Default tier: 200K x 128 (=0.2 x SIFT); --full uses scale=1.0."""
+    from benchmarks.common import heldout_split
+
+    db, q = heldout_split(cached_corpus("sift", scale, seed), n_queries)
+    gt_d, gt_i = ground_truth(db, q, 10, tag=f"sift_ho_{scale}_{seed}")
+    n = db.shape[0]
+
+    # paper-optimal config defines the latency budget (~100/bucket)
+    s_opt = int(round(np.log2(n / 100)))
+    _, curve = _two_level(db, q, gt_i, 1 << s_opt, "brute", np.inf,
+                          (8, 16, 32))
+    # budget = time of the config that first reaches recall 0.9
+    budget = max(dt for r, dt, _ in curve if r >= max(
+        0.8, min(r for r, _, _ in curve)))
+    rows = []
+    r_tree = _one_level_tree(db, q, gt_i, budget)
+    r_lsh = _one_level_lsh(db, q, gt_i, budget)
+    rows.append(("one-level/tree", r_tree))
+    rows.append(("one-level/lsh", r_lsh))
+    csv_row("table1_onelevel_tree", budget * 1e6, f"recall={r_tree:.3f}")
+    csv_row("table1_onelevel_lsh", budget * 1e6, f"recall={r_lsh:.3f}")
+
+    best = {}
+    for s in (s_opt - 2, s_opt - 1, s_opt, s_opt + 1):
+        for bottom in ("tree", "lsh", "brute"):
+            r, _ = _two_level(db, q, gt_i, 1 << s, bottom, budget,
+                              (4, 8, 16, 32))
+            name = f"PQ-2^{s}/{bottom}"
+            rows.append((name, r))
+            best[name] = r
+            csv_row(f"table1_{name.replace('/', '_')}", budget * 1e6,
+                    f"recall={r:.3f};avg_bucket={n / (1 << s):.0f}")
+    return {"budget_s": budget, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

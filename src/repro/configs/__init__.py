@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shapes
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "get_shapes"]

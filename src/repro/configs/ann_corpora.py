@@ -1,0 +1,16 @@
+"""The paper's own serving corpora (§4.1) as arch configs.
+
+radio-station : 10 K x 256  (private VA traffic; QLBT territory, <30 K)
+sift-1m       : 1 M  x 128  (public SIFT; two-level PQ+brute, 2^13 buckets)
+deep-10m      : 10 M x 96   (public DEEP subset; two-level, 2^15 buckets)
+"""
+from repro.configs.base import AnnConfig
+
+RADIO_STATION = AnnConfig(name="radio-station", n=10_000, d=256,
+                          n_clusters=128, top="brute", bottom="brute",
+                          nprobe=8)
+SIFT_1M = AnnConfig(name="sift-1m", n=1_000_000, d=128, n_clusters=8192,
+                    top="pq", bottom="brute", nprobe=32)
+DEEP_10M = AnnConfig(name="deep-10m", n=10_000_000, d=96, n_clusters=32768,
+                     top="pq", bottom="brute", nprobe=32)
+FAMILY = "ann"

@@ -1,0 +1,20 @@
+# The paper's primary contribution: QLBT (tree.py), two-level approximate
+# search (two_level.py), the §5.3 configuration protocol (protocol.py), and
+# the mesh-sharded datacenter extension (distributed.py).
+from repro.core.index import SearchIndex, auto_build_index, build_index
+from repro.core.likelihood import (
+    beta_for_unbalance,
+    simulate_beta_likelihood,
+    unbalance_score,
+)
+from repro.core.protocol import IndexSpec, select_index_spec
+from repro.core.tree import build_kd_tree, build_qlbt, build_rp_tree, tree_search
+from repro.core.two_level import TwoLevelConfig, TwoLevelIndex, build_two_level
+
+__all__ = [
+    "SearchIndex", "auto_build_index", "build_index",
+    "beta_for_unbalance", "simulate_beta_likelihood", "unbalance_score",
+    "IndexSpec", "select_index_spec",
+    "build_kd_tree", "build_qlbt", "build_rp_tree", "tree_search",
+    "TwoLevelConfig", "TwoLevelIndex", "build_two_level",
+]

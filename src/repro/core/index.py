@@ -1,0 +1,124 @@
+"""Unified index API: build from an IndexSpec, search with one signature.
+
+This is the public entry point used by the serving engine, the examples,
+and the benchmark harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_mod
+from repro.core.protocol import IndexSpec, select_index_spec
+from repro.core.tree import FlatTree, build_qlbt, build_rp_tree
+from repro.core.two_level import TwoLevelIndex, build_two_level
+
+__all__ = ["SearchIndex", "build_index", "auto_build_index"]
+
+
+@dataclasses.dataclass
+class SearchIndex:
+    spec: IndexSpec
+    db: np.ndarray
+    tree: Optional[FlatTree] = None
+    two_level: Optional[TwoLevelIndex] = None
+
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        beam_width: int = 8,
+        nprobe: int = 8,
+        query_chunk: int = 1024,
+    ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Returns (dists, ids, work)."""
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        if self.spec.kind in ("qlbt", "tree"):
+            res = tree_mod.tree_search(
+                self.tree.device_arrays(), jnp.asarray(self.db),
+                jnp.asarray(q), kind=self.tree.kind, beam_width=beam_width,
+                k=k, max_steps=self.tree.max_depth + 4,
+            )
+            work = {
+                "internal_visits": int(np.asarray(res.internal_visits).sum()),
+                "candidates": int(np.asarray(res.candidates).sum()),
+                "steps_mean": float(np.asarray(res.steps).mean()),
+            }
+            return np.asarray(res.dists), np.asarray(res.ids), work
+        d, i, work = self.two_level.search(
+            q, k, nprobe=nprobe, beam_width=beam_width,
+            query_chunk=query_chunk,
+        )
+        return d, i, work
+
+    def footprint_bytes(self, include_db: bool = True) -> int:
+        tot = self.db.nbytes if include_db else 0
+        if self.tree is not None:
+            tot += self.tree.footprint_bytes()
+        if self.two_level is not None:
+            tot += self.two_level.footprint_bytes(include_db=False)
+        return tot
+
+    def rebuild_with_likelihood(self, p: np.ndarray, *, seed: int = 0):
+        """Paper §3.1: 'if only this distribution changes, a new search
+        tree can be easily built, keeping other configurations the same'
+        — the personalization path.  Rebuilds the QLBT in place from the
+        stored vectors and the new traffic estimate; no effect on
+        two-level indexes (their buckets don't depend on p)."""
+        if self.spec.kind not in ("qlbt", "tree"):
+            return self
+        self.tree = build_qlbt(self.db, p, seed=seed)
+        self.spec = dataclasses.replace(self.spec, kind="qlbt")
+        return self
+
+
+def build_index(
+    spec: IndexSpec,
+    db: np.ndarray,
+    *,
+    p: Optional[np.ndarray] = None,
+    partition_features: Optional[np.ndarray] = None,
+    seed: int = 0,
+) -> SearchIndex:
+    db = np.ascontiguousarray(db, dtype=np.float32)
+    if spec.kind == "qlbt":
+        if p is None:
+            raise ValueError("QLBT requires a query-likelihood vector p")
+        t = build_qlbt(db, p, seed=seed)
+        return SearchIndex(spec=spec, db=db, tree=t)
+    if spec.kind == "tree":
+        return SearchIndex(spec=spec, db=db, tree=build_rp_tree(db, seed=seed))
+    if spec.kind == "two_level":
+        tl = build_two_level(
+            db, spec.two_level, p=p, partition_features=partition_features
+        )
+        return SearchIndex(spec=spec, db=db, two_level=tl)
+    raise ValueError(f"unknown index kind {spec.kind!r}")
+
+
+def auto_build_index(
+    db: np.ndarray,
+    *,
+    p: Optional[np.ndarray] = None,
+    partition_features: Optional[np.ndarray] = None,
+    seed: int = 0,
+) -> SearchIndex:
+    """Apply the paper's §5.3 protocol end-to-end."""
+    part_dim = (
+        partition_features.shape[1]
+        if partition_features is not None
+        else None
+    )
+    spec = select_index_spec(
+        db.shape[0],
+        traffic_available=p is not None,
+        partition_dim=part_dim,
+        embedding_dim=db.shape[1],
+    )
+    return build_index(
+        spec, db, p=p, partition_features=partition_features, seed=seed
+    )

@@ -1,0 +1,115 @@
+"""Footprint-reduced LSH (paper §3.2 bottom-level option 3).
+
+Sign-random-projection LSH with a *fixed, shared* projection set (the
+paper's footprint reduction: one (d, n_bits) matrix reused by every bucket
+instead of per-bucket hash tables).  Codes are bit-packed into int32 lanes;
+search = XOR + popcount Hamming ranking, then exact rerank of the top
+candidates.  The packed XOR-popcount loop is the `kernels/hamming` Pallas
+kernel; `hamming_scores` is the jnp oracle/CPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LSHIndex", "lsh_build", "pack_bits", "hamming_scores",
+           "lsh_search"]
+
+
+def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-twiddling popcount on int32 lanes (TPU has no popcnt op)."""
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """(N, n_bits) {0,1} -> (N, ceil(n_bits/32)) int32 little-endian."""
+    n, nb = bits.shape
+    pad = (-nb) % 32
+    if pad:
+        bits = np.pad(bits, ((0, 0), (0, pad)))
+    b = bits.reshape(n, -1, 32).astype(np.uint64)
+    weights = (1 << np.arange(32, dtype=np.uint64))
+    packed = (b * weights).sum(axis=2)
+    return packed.astype(np.uint32).view(np.int32).reshape(n, -1)
+
+
+@dataclasses.dataclass
+class LSHIndex:
+    proj: np.ndarray      # (d, n_bits) float32 — the fixed shared projections
+    codes: np.ndarray     # (N, W) int32 packed sign bits
+    n_bits: int
+
+    @property
+    def n(self) -> int:
+        return int(self.codes.shape[0])
+
+    def footprint_bytes(self) -> int:
+        return self.proj.nbytes + self.codes.nbytes
+
+
+def lsh_build(x: np.ndarray, n_bits: int = 64, seed: int = 0,
+              proj: np.ndarray | None = None) -> LSHIndex:
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    d = x.shape[1]
+    if proj is None:
+        rng = np.random.default_rng(seed)
+        proj = rng.normal(size=(d, n_bits)).astype(np.float32)
+        proj /= np.linalg.norm(proj, axis=0, keepdims=True)
+    bits = (x @ proj > 0).astype(np.uint8)
+    return LSHIndex(proj=proj, codes=pack_bits(bits), n_bits=n_bits)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def hamming_scores(qcodes: jnp.ndarray, codes: jnp.ndarray,
+                   chunk: int = 262144) -> jnp.ndarray:
+    """(B, N) Hamming distances between packed codes (jnp oracle)."""
+    B, w = qcodes.shape
+    n = codes.shape[0]
+    chunk = min(chunk, n)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    cp = jnp.pad(codes, ((0, pad), (0, 0)))
+
+    def step(_, cs):                                     # (chunk, w)
+        x = jnp.bitwise_xor(qcodes[:, None, :], cs[None, :, :])
+        return None, _popcount32(x).sum(-1)              # (B, chunk)
+
+    _, out = jax.lax.scan(step, None, cp.reshape(n_chunks, chunk, w))
+    return jnp.moveaxis(out, 0, 1).reshape(B, -1)[:, :n]
+
+
+def lsh_search(
+    index: LSHIndex,
+    db: np.ndarray,
+    queries: np.ndarray,
+    k: int,
+    *,
+    n_candidates: int = 128,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Hamming shortlist of ``n_candidates`` then exact rerank to top-k."""
+    q = np.ascontiguousarray(queries, dtype=np.float32)
+    qbits = (q @ index.proj > 0).astype(np.uint8)
+    qcodes = jnp.asarray(pack_bits(qbits))
+    ham = hamming_scores(qcodes, jnp.asarray(index.codes))
+    n_candidates = min(n_candidates, index.n)
+    _, cand = jax.lax.top_k(-ham.astype(jnp.float32), n_candidates)
+    # exact rerank
+    dbj = jnp.asarray(db, dtype=jnp.float32)
+    qj = jnp.asarray(q)
+    vecs = dbj[cand]                                     # (B, C, d)
+    d2 = (
+        jnp.sum(vecs * vecs, -1)
+        - 2.0 * jnp.einsum("bcd,bd->bc", vecs, qj)
+        + jnp.sum(qj * qj, -1, keepdims=True)
+    )
+    k = min(k, n_candidates)
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    return np.asarray(-neg), np.asarray(ids, dtype=np.int32)

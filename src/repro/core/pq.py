@@ -1,0 +1,139 @@
+"""Product quantization (paper §2/§3.2 — top-level index over centroids).
+
+Classic Jégou-style PQ: split d dims into M subspaces, k-means a 256-entry
+codebook per subspace, encode vectors as M uint8 codes.  Query-time
+asymmetric distance computation (ADC) builds a (M, 256) LUT of exact
+subspace distances and scores a code as ``sum_m LUT[m, code[n, m]]``.
+
+The hot loop (LUT gather-accumulate over millions of codes) is the
+`kernels/pq_adc` Pallas kernel; `adc_scores` below is the jnp path used on
+CPU and as the kernel oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_fit
+
+__all__ = ["ProductQuantizer", "pq_train", "adc_lut", "adc_scores",
+           "pq_search"]
+
+
+@dataclasses.dataclass
+class ProductQuantizer:
+    codebooks: np.ndarray   # (M, 256, d_sub) float32
+    codes: np.ndarray       # (N, M) uint8
+    d: int
+
+    @property
+    def m(self) -> int:
+        return int(self.codebooks.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.codes.shape[0])
+
+    def footprint_bytes(self) -> int:
+        return self.codebooks.nbytes + self.codes.nbytes
+
+
+def _subspaces(x: np.ndarray, m: int) -> np.ndarray:
+    n, d = x.shape
+    if d % m:
+        x = np.pad(x, ((0, 0), (0, m - d % m)))
+    return x.reshape(n, m, -1)
+
+
+def pq_train(
+    x: np.ndarray,
+    m: int = 8,
+    n_codes: int = 256,
+    *,
+    iters: int = 12,
+    seed: int = 0,
+    train_sample: int | None = 200_000,
+) -> ProductQuantizer:
+    """Train per-subspace codebooks and encode the full corpus."""
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    n, d = x.shape
+    subs = _subspaces(x, m)                               # (n, m, ds)
+    rng = np.random.default_rng(seed)
+    if train_sample is not None and train_sample < n:
+        sel = rng.choice(n, size=train_sample, replace=False)
+    else:
+        sel = slice(None)
+    books, codes = [], []
+    for j in range(m):
+        km = kmeans_fit(subs[sel, j], min(n_codes, n), iters=iters,
+                        seed=seed + j)
+        cb = km.centroids
+        if cb.shape[0] < n_codes:                          # tiny corpora
+            cb = np.concatenate(
+                [cb, np.repeat(cb[-1:], n_codes - cb.shape[0], 0)], 0
+            )
+        books.append(cb)
+        # encode everything against this codebook
+        from repro.core.kmeans import kmeans_assign
+
+        a, _ = kmeans_assign(subs[:, j], cb)
+        codes.append(a.astype(np.uint8))
+    return ProductQuantizer(
+        codebooks=np.stack(books), codes=np.stack(codes, axis=1), d=d
+    )
+
+
+@jax.jit
+def adc_lut(queries: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """(B, M, 256) exact subspace distances query→codewords."""
+    B = queries.shape[0]
+    m, c, ds = codebooks.shape
+    d = m * ds
+    q = queries.astype(jnp.float32)
+    if q.shape[1] != d:
+        q = jnp.pad(q, ((0, 0), (0, d - q.shape[1])))
+    qs = q.reshape(B, m, ds)
+    diff = qs[:, :, None, :] - codebooks[None]            # (B, M, 256, ds)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def adc_scores(
+    lut: jnp.ndarray, codes: jnp.ndarray, chunk: int = 131072
+) -> jnp.ndarray:
+    """(B, N) approximate distances: sum_m LUT[b, m, codes[n, m]].
+
+    jnp oracle for `kernels/pq_adc`.  Scans code chunks to bound memory.
+    """
+    B, m, _ = lut.shape
+    n = codes.shape[0]
+    chunk = min(chunk, n)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
+
+    def step(_, cs):                                      # cs: (chunk, m)
+        # gather per subspace: lut (B, m, 256) indexed at cs.T (m, chunk)
+        g = jnp.take_along_axis(
+            lut, cs.T[None].astype(jnp.int32), axis=2
+        )                                                 # (B, m, chunk)
+        return None, g.sum(axis=1)                        # (B, chunk)
+
+    _, out = jax.lax.scan(step, None,
+                          cp.reshape(n_chunks, chunk, m))
+    return jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * chunk)[:, :n]
+
+
+def pq_search(
+    pq: ProductQuantizer, queries: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """ADC top-k over all codes (approximate dists, ids)."""
+    lut = adc_lut(jnp.asarray(queries, dtype=jnp.float32),
+                  jnp.asarray(pq.codebooks))
+    scores = adc_scores(lut, jnp.asarray(pq.codes))
+    neg, ids = jax.lax.top_k(-scores, min(k, pq.n))
+    return np.asarray(-neg), np.asarray(ids, dtype=np.int32)

@@ -1,0 +1,542 @@
+"""Flattened projection trees: balanced SPPT, QLBT (paper Alg. 1), kd-tree.
+
+TPU adaptation (see DESIGN.md §2): the paper's pointer tree + best-first
+backtracking becomes a structure-of-arrays node table traversed by a
+*batched, level-synchronous beam descent* — thousands of queries walk the
+tree in lockstep with gathers, the beam plays the role of multi-probe
+backtracking (priority = accumulated split margin), and leaves are
+pre-grouped (paper: 8 entities) so the final rerank is a dense scan that
+maps onto the MXU (`kernels/l2_topk`).
+
+Builders run host-side in numpy (index construction is offline in the paper
+too); search is pure JAX (`jit` + `lax.while_loop`) with early exit when
+every query's beam has bottomed out — this is what realizes QLBT's
+shallower-depth latency win for head traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FlatTree",
+    "build_rp_tree",
+    "build_qlbt",
+    "build_kd_tree",
+    "tree_search",
+    "TreeSearchResult",
+]
+
+_NEG_INF = np.float32(-np.inf)
+
+
+@dataclasses.dataclass
+class FlatTree:
+    """Structure-of-arrays tree. Node 0 is the root.
+
+    kind        : "rp" (dense random projections) or "kd" (coordinate splits)
+    proj        : (n_nodes, d) float32 for "rp"; unused for "kd"
+    dims        : (n_nodes,) int32 split coordinate for "kd"; unused for "rp"
+    tau         : (n_nodes,) float32 split threshold
+    children    : (n_nodes, 2) int32, -1 for leaves
+    leaf_row    : (n_nodes,) int32 row into ``leaf_entities`` (-1 = internal)
+    leaf_entities : (n_leaves, leaf_size) int32 entity ids, -1 padded
+    depth       : (n_nodes,) int32 node depth (root = 0)
+    entity_depth: (n_entities,) int32 leaf depth of each entity
+    """
+
+    kind: str
+    proj: np.ndarray
+    dims: np.ndarray
+    tau: np.ndarray
+    children: np.ndarray
+    leaf_row: np.ndarray
+    leaf_entities: np.ndarray
+    depth: np.ndarray
+    entity_depth: np.ndarray
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.tau.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.leaf_entities.shape[0])
+
+    @property
+    def leaf_size(self) -> int:
+        return int(self.leaf_entities.shape[1])
+
+    @property
+    def max_depth(self) -> int:
+        return int(self.depth.max()) if self.n_nodes else 0
+
+    def expected_depth(self, p: np.ndarray) -> float:
+        """E[Depth(X)] under query likelihood p — the paper's objective."""
+        p = np.asarray(p, dtype=np.float64)
+        return float((p / p.sum() * self.entity_depth).sum())
+
+    def footprint_bytes(self) -> int:
+        tot = 0
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                tot += v.nbytes
+        return tot
+
+    def device_arrays(self) -> dict:
+        """JAX-side arrays consumed by ``tree_search``."""
+        return dict(
+            proj=jnp.asarray(self.proj),
+            dims=jnp.asarray(self.dims),
+            tau=jnp.asarray(self.tau),
+            children=jnp.asarray(self.children),
+            leaf_row=jnp.asarray(self.leaf_row),
+            leaf_entities=jnp.asarray(self.leaf_entities),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Builders (host-side numpy; vectorized per node)
+# ---------------------------------------------------------------------------
+
+
+def _likelihood_tau(alpha: np.ndarray, p: np.ndarray) -> tuple[float, int]:
+    """tau* = argmin_tau |sum_{alpha<=tau} p - sum_{alpha>tau} p| (Alg.1 l.7).
+
+    Returns (tau, n_left). Ties broken toward the more count-balanced split
+    so degenerate all-on-one-side splits never occur.
+    """
+    order = np.argsort(alpha, kind="stable")
+    a_sorted = alpha[order]
+    prefix = np.cumsum(p[order])
+    total = prefix[-1]
+    # candidate split after position i (left = [0..i]); forbid empty sides
+    m = alpha.size
+    idx = np.arange(m - 1)
+    gap = np.abs(2.0 * prefix[:-1] - total)
+    best = int(np.argmin(gap))
+    tau = float(0.5 * (a_sorted[best] + a_sorted[best + 1]))
+    # guard: equal projections collapse a side; nudge split point
+    n_left = int(np.searchsorted(a_sorted, tau, side="right"))
+    if n_left == 0 or n_left == m:
+        n_left = m // 2
+        tau = float(0.5 * (a_sorted[n_left - 1] + a_sorted[n_left]))
+    return tau, n_left
+
+
+def _median_tau(alpha: np.ndarray) -> float:
+    a_sorted = np.sort(alpha)
+    m = alpha.size
+    return float(0.5 * (a_sorted[(m - 1) // 2] + a_sorted[m // 2]))
+
+
+def _greedy_depth_tau(
+    alpha: np.ndarray, p: np.ndarray, leaf_size: int
+) -> tuple[float, int, float]:
+    """Beyond-paper split: directly minimize the greedy expected-depth bound
+
+        cost(i) = P_L log2(max(N_L/leaf,1)) + P_R log2(max(N_R/leaf,1))
+
+    over all split positions (the paper's §3.1 objective applied one level
+    at a time, instead of the mass-balance proxy).  Returns
+    (tau, n_left, -cost) — higher score is better.
+    """
+    order = np.argsort(alpha, kind="stable")
+    a_sorted = alpha[order]
+    prefix = np.cumsum(p[order])
+    total = prefix[-1]
+    m = alpha.size
+    n_l = np.arange(1, m, dtype=np.float64)
+    n_r = m - n_l
+    p_l = prefix[:-1]
+    p_r = total - p_l
+    cost = p_l * np.log2(np.maximum(n_l / leaf_size, 1.0)) + \
+        p_r * np.log2(np.maximum(n_r / leaf_size, 1.0))
+    best = int(np.argmin(cost))
+    tau = float(0.5 * (a_sorted[best] + a_sorted[best + 1]))
+    n_left = int(np.searchsorted(a_sorted, tau, side="right"))
+    if n_left == 0 or n_left == m:
+        n_left = m // 2
+        tau = float(0.5 * (a_sorted[n_left - 1] + a_sorted[n_left]))
+    return tau, n_left, float(-cost[best])
+
+
+def _build_projection_tree(
+    emb: np.ndarray,
+    p: Optional[np.ndarray],
+    *,
+    leaf_size: int,
+    n_candidates: int,
+    boost_depth: int,
+    lam: float,
+    seed: int,
+    boosted: bool,
+    objective: str = "massbalance",
+) -> FlatTree:
+    """Shared recursive builder for balanced SPPT and QLBT (Alg. 1)."""
+    emb = np.ascontiguousarray(emb, dtype=np.float32)
+    n, d = emb.shape
+    if p is None:
+        p = np.full(n, 1.0 / n, dtype=np.float64)
+    else:
+        p = np.asarray(p, dtype=np.float64)
+        p = p / p.sum()
+    rng = np.random.default_rng(seed)
+
+    proj_rows, tau_vals, children, depths, leaf_rows = [], [], [], [], []
+    leaf_tables: list[np.ndarray] = []
+    entity_depth = np.zeros(n, dtype=np.int32)
+
+    # stack of (entity_ids, depth, parent_slot, which_child)
+    stack = [(np.arange(n, dtype=np.int64), 0, -1, 0)]
+    while stack:
+        ids, depth, parent, side = stack.pop()
+        slot = len(tau_vals)
+        if parent >= 0:
+            children[parent][side] = slot
+        m = ids.size
+        if m <= leaf_size:
+            proj_rows.append(np.zeros(d, dtype=np.float32))
+            tau_vals.append(0.0)
+            children.append([-1, -1])
+            depths.append(depth)
+            leaf_rows.append(len(leaf_tables))
+            row = np.full(leaf_size, -1, dtype=np.int32)
+            row[:m] = ids
+            leaf_tables.append(row)
+            entity_depth[ids] = depth
+            continue
+
+        sub = emb[ids]                      # (m, d)
+        sub_p = p[ids]
+        # Alg.1 l.4: K random unit projections
+        v = rng.normal(size=(n_candidates, d)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=1, keepdims=True) + 1e-12
+        alphas = sub @ v.T                  # (m, K)
+
+        sigma2 = alphas.var(axis=0)         # Alg.1 l.10
+        use_boost = boosted and depth <= boost_depth
+        taus = np.empty(n_candidates, dtype=np.float64)
+        n_lefts = np.empty(n_candidates, dtype=np.int64)
+        if use_boost and objective == "greedy":
+            # beyond-paper: direct greedy E[depth] minimization per split
+            neg_cost = np.empty(n_candidates)
+            for i in range(n_candidates):
+                taus[i], n_lefts[i], neg_cost[i] = _greedy_depth_tau(
+                    alphas[:, i], sub_p, leaf_size
+                )
+            sig_hat = sigma2 / (sigma2.max() + 1e-12)
+            c_hat = neg_cost - neg_cost.min()
+            c_hat = c_hat / (c_hat.max() + 1e-12)
+            score = lam * sig_hat + (1.0 - lam) * c_hat
+        elif use_boost:
+            for i in range(n_candidates):
+                taus[i], n_lefts[i] = _likelihood_tau(alphas[:, i], sub_p)
+            n_rights = m - n_lefts
+            b = np.maximum(n_lefts / n_rights, n_rights / n_lefts)  # Alg.1 l.9
+            # scale-free normalization (DESIGN.md §1): sigma^2 -> [0,1],
+            # b in [1, inf) -> 1 - 1/b in [0, 1)
+            sig_hat = sigma2 / (sigma2.max() + 1e-12)
+            b_hat = 1.0 - 1.0 / b
+            score = lam * sig_hat + (1.0 - lam) * b_hat       # Alg.1 l.12
+        else:
+            for i in range(n_candidates):
+                taus[i] = _median_tau(alphas[:, i])
+                n_lefts[i] = int((alphas[:, i] <= taus[i]).sum())
+            score = sigma2                                     # Alg.1 l.14
+
+        best = int(np.argmax(score))                           # Alg.1 l.17
+        alpha, tau = alphas[:, best], taus[best]
+        left_mask = alpha <= tau
+        if left_mask.all() or not left_mask.any():   # duplicate-point guard
+            half = m // 2
+            order = np.argsort(alpha, kind="stable")
+            left_mask = np.zeros(m, dtype=bool)
+            left_mask[order[:half]] = True
+
+        proj_rows.append(v[best])
+        tau_vals.append(float(tau))
+        children.append([-1, -1])
+        depths.append(depth)
+        leaf_rows.append(-1)
+        stack.append((ids[left_mask], depth + 1, slot, 0))
+        stack.append((ids[~left_mask], depth + 1, slot, 1))
+
+    n_nodes = len(tau_vals)
+    return FlatTree(
+        kind="rp",
+        proj=np.stack(proj_rows),
+        dims=np.zeros(n_nodes, dtype=np.int32),
+        tau=np.asarray(tau_vals, dtype=np.float32),
+        children=np.asarray(children, dtype=np.int32),
+        leaf_row=np.asarray(leaf_rows, dtype=np.int32),
+        leaf_entities=(
+            np.stack(leaf_tables)
+            if leaf_tables
+            else np.zeros((0, leaf_size), np.int32)
+        ),
+        depth=np.asarray(depths, dtype=np.int32),
+        entity_depth=entity_depth,
+    )
+
+
+def build_rp_tree(
+    emb: np.ndarray,
+    *,
+    leaf_size: int = 8,
+    n_candidates: int = 8,
+    seed: int = 0,
+) -> FlatTree:
+    """Balanced randomized SPPT — the paper's baseline tree (SmallER)."""
+    return _build_projection_tree(
+        emb, None, leaf_size=leaf_size, n_candidates=n_candidates,
+        boost_depth=-1, lam=1.0, seed=seed, boosted=False,
+    )
+
+
+def build_qlbt(
+    emb: np.ndarray,
+    p: np.ndarray,
+    *,
+    leaf_size: int = 8,
+    n_candidates: int = 8,
+    boost_depth: int = 3,
+    lam: float = 0.5,
+    seed: int = 0,
+    objective: str = "massbalance",
+) -> FlatTree:
+    """Query Likelihood Boosted Tree — paper Algorithm 1.
+
+    ``boost_depth`` is the paper's early-stop level l (=3): below it the
+    builder reverts to balanced (count-median, variance-scored) splits.
+    ``lam`` trades projection variance against count-unbalance (grid-searched
+    in the paper).  ``objective``: "massbalance" = paper Alg. 1 (tau from
+    equal-probability split, score from unbalance ratio); "greedy" =
+    beyond-paper direct greedy minimization of E[depth] (DESIGN.md §2,
+    recorded separately in EXPERIMENTS.md).
+    """
+    return _build_projection_tree(
+        emb, p, leaf_size=leaf_size, n_candidates=n_candidates,
+        boost_depth=boost_depth, lam=lam, seed=seed, boosted=True,
+        objective=objective,
+    )
+
+
+def build_kd_tree(
+    points: np.ndarray, *, leaf_size: int = 8
+) -> FlatTree:
+    """Array kd-tree for low-dim top-level features (paper §3.2, geo)."""
+    points = np.ascontiguousarray(points, dtype=np.float32)
+    n, d = points.shape
+    dims_l, tau_vals, children, depths, leaf_rows = [], [], [], [], []
+    leaf_tables: list[np.ndarray] = []
+    entity_depth = np.zeros(n, dtype=np.int32)
+    stack = [(np.arange(n, dtype=np.int64), 0, -1, 0)]
+    while stack:
+        ids, depth, parent, side = stack.pop()
+        slot = len(tau_vals)
+        if parent >= 0:
+            children[parent][side] = slot
+        m = ids.size
+        if m <= leaf_size:
+            dims_l.append(0)
+            tau_vals.append(0.0)
+            children.append([-1, -1])
+            depths.append(depth)
+            leaf_rows.append(len(leaf_tables))
+            row = np.full(leaf_size, -1, dtype=np.int32)
+            row[:m] = ids
+            leaf_tables.append(row)
+            entity_depth[ids] = depth
+            continue
+        sub = points[ids]
+        dim = int(np.argmax(sub.max(0) - sub.min(0)))   # widest spread
+        alpha = sub[:, dim]
+        tau = _median_tau(alpha)
+        left_mask = alpha <= tau
+        if left_mask.all() or not left_mask.any():
+            order = np.argsort(alpha, kind="stable")
+            left_mask = np.zeros(m, dtype=bool)
+            left_mask[order[: m // 2]] = True
+        dims_l.append(dim)
+        tau_vals.append(tau)
+        children.append([-1, -1])
+        depths.append(depth)
+        leaf_rows.append(-1)
+        stack.append((ids[left_mask], depth + 1, slot, 0))
+        stack.append((ids[~left_mask], depth + 1, slot, 1))
+    n_nodes = len(tau_vals)
+    return FlatTree(
+        kind="kd",
+        proj=np.zeros((n_nodes, 1), dtype=np.float32),
+        dims=np.asarray(dims_l, dtype=np.int32),
+        tau=np.asarray(tau_vals, dtype=np.float32),
+        children=np.asarray(children, dtype=np.int32),
+        leaf_row=np.asarray(leaf_rows, dtype=np.int32),
+        leaf_entities=(
+            np.stack(leaf_tables)
+            if leaf_tables
+            else np.zeros((0, leaf_size), np.int32)
+        ),
+        depth=np.asarray(depths, dtype=np.int32),
+        entity_depth=entity_depth,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched beam search (JAX)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TreeSearchResult:
+    ids: jnp.ndarray          # (B, k) int32 entity ids (-1 pad)
+    dists: jnp.ndarray        # (B, k) float32 squared L2
+    steps: jnp.ndarray        # (B,) int32 descent iterations per query
+    internal_visits: jnp.ndarray  # (B,) int32 internal-node dot products
+    candidates: jnp.ndarray   # (B,) int32 exact distance evals (leaf scan)
+
+    def tree_flatten(self):
+        return (
+            (self.ids, self.dists, self.steps, self.internal_visits,
+             self.candidates),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def _split_margin(kind: str, arrays: dict, nodes: jnp.ndarray, q: jnp.ndarray):
+    """alpha = proj[node]·q - tau[node]   (or coordinate split for kd)."""
+    if kind == "kd":
+        dim = arrays["dims"][nodes]                      # (B, W)
+        coord = jnp.take_along_axis(q, dim, axis=1)      # (B, W)
+        return coord - arrays["tau"][nodes]
+    pv = arrays["proj"][nodes]                           # (B, W, d)
+    return jnp.einsum("bwd,bd->bw", pv, q) - arrays["tau"][nodes]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("kind", "beam_width", "k", "max_steps", "rerank"),
+)
+def tree_search(
+    arrays: dict,
+    db: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    kind: str = "rp",
+    beam_width: int = 8,
+    k: int = 10,
+    max_steps: int = 64,
+    rerank: bool = True,
+    roots: jnp.ndarray | None = None,
+) -> TreeSearchResult:
+    """Batched multi-probe descent + exact rerank of gathered leaves.
+
+    Beam priority = accumulated negative split margin along the path (the
+    near child inherits the parent's priority; the far child pays |alpha|),
+    the TPU-native analogue of SmallER's best-first backtracking queue.
+    ``roots`` optionally gives a per-query start node (forest descent in the
+    two-level index); default is node 0.
+    """
+    queries = queries.astype(jnp.float32)
+    B, d = queries.shape
+    W = beam_width
+    children = arrays["children"]
+    leaf_row = arrays["leaf_row"]
+    leaf_entities = arrays["leaf_entities"]
+    leaf_size = leaf_entities.shape[1]
+
+    start = (
+        jnp.zeros((B,), jnp.int32)
+        if roots is None
+        else roots.astype(jnp.int32)
+    )
+    nodes0 = jnp.full((B, W), -1, jnp.int32).at[:, 0].set(start)
+    prios0 = jnp.full((B, W), _NEG_INF, jnp.float32).at[:, 0].set(0.0)
+    steps0 = jnp.zeros((B,), jnp.int32)
+    visits0 = jnp.zeros((B,), jnp.int32)
+
+    def not_done(state):
+        nodes, _, steps, _ = state
+        valid = nodes >= 0
+        is_leaf = jnp.where(valid, children[jnp.maximum(nodes, 0), 0] < 0, True)
+        return jnp.logical_and(
+            jnp.any(~jnp.all(is_leaf, axis=1)), steps.max() < max_steps
+        )
+
+    def body(state):
+        nodes, prios, steps, visits = state
+        safe = jnp.maximum(nodes, 0)
+        valid = nodes >= 0
+        is_leaf = children[safe, 0] < 0
+        active = valid & ~is_leaf                         # internal, live
+        alpha = _split_margin(kind, arrays, safe, queries)
+        left = children[safe, 0]
+        right = children[safe, 1]
+        near = jnp.where(alpha <= 0, left, right)
+        far = jnp.where(alpha <= 0, right, left)
+        # slot A: internal -> near child (same prio); leaf -> itself
+        a_nodes = jnp.where(active, near, nodes)
+        a_prios = jnp.where(valid, prios, _NEG_INF)
+        # slot B: internal -> far child (prio - |alpha|); leaf/pad -> dead
+        b_nodes = jnp.where(active, far, -1)
+        b_prios = jnp.where(active, prios - jnp.abs(alpha), _NEG_INF)
+        cand_nodes = jnp.concatenate([a_nodes, b_nodes], axis=1)
+        cand_prios = jnp.concatenate([a_prios, b_prios], axis=1)
+        top_p, top_i = jax.lax.top_k(cand_prios, W)
+        new_nodes = jnp.take_along_axis(cand_nodes, top_i, axis=1)
+        new_nodes = jnp.where(top_p == _NEG_INF, -1, new_nodes)
+        row_active = jnp.any(active, axis=1)
+        return (
+            new_nodes,
+            top_p,
+            steps + row_active.astype(jnp.int32),
+            visits + active.sum(axis=1).astype(jnp.int32),
+        )
+
+    nodes, prios, steps, visits = jax.lax.while_loop(
+        not_done, body, (nodes0, prios0, steps0, visits0)
+    )
+
+    # gather leaf entity ids
+    safe = jnp.maximum(nodes, 0)
+    rows = jnp.where(nodes >= 0, leaf_row[safe], -1)       # (B, W)
+    ents = jnp.where(
+        rows[..., None] >= 0,
+        leaf_entities[jnp.maximum(rows, 0)],
+        -1,
+    )                                                      # (B, W, leaf)
+    cand = ents.reshape(B, W * leaf_size)
+    n_cand = (cand >= 0).sum(axis=1).astype(jnp.int32)
+
+    if not rerank:
+        return TreeSearchResult(cand, jnp.zeros_like(cand, jnp.float32),
+                                steps, visits, n_cand)
+
+    vecs = db[jnp.maximum(cand, 0)]                        # (B, C, d)
+    diff2 = jnp.sum(vecs * vecs, -1) - 2.0 * jnp.einsum(
+        "bcd,bd->bc", vecs, queries
+    ) + jnp.sum(queries * queries, -1, keepdims=True)
+    diff2 = jnp.where(cand >= 0, diff2, jnp.inf)
+    # dedupe identical ids from overlapping beams is unnecessary: leaves
+    # partition entities, so ids are unique by construction.
+    k_eff = min(k, cand.shape[1])
+    neg, idx = jax.lax.top_k(-diff2, k_eff)
+    ids = jnp.take_along_axis(cand, idx, axis=1)
+    ids = jnp.where(jnp.isinf(-neg), -1, ids)
+    if k_eff < k:
+        pad = k - k_eff
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        neg = jnp.pad(neg, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    return TreeSearchResult(ids, -neg, steps, visits, n_cand)

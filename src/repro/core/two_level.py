@@ -1,0 +1,523 @@
+"""Two-level approximate search (paper §3.2, Fig. 2a).
+
+Build: (1) choose partition features (entity embeddings by default, or any
+low-dim metadata such as geolocation); (2) k-means them into ``n_clusters``
+sub-datasets; (3) index the *top level* over the centroids
+(brute | kd-tree | PQ) and search the *bottom level* inside the probed
+buckets (brute | QLBT/tree | LSH).
+
+TPU layout: buckets are padded to a fixed width so a probe is a dense
+gather; the bottom-level brute scan is the `kernels/l2_topk` tile loop; the
+top-level PQ scan is `kernels/pq_adc`.  Per-bucket trees are stored as one
+concatenated *forest* (single SoA node table + per-bucket root ids) so the
+beam descent stays a single batched kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_mod
+from repro.core.brute import l2_topk_exact, pairwise_l2sq
+from repro.core.kmeans import kmeans_fit
+from repro.core.lsh import LSHIndex, hamming_scores, lsh_build, pack_bits
+from repro.core.pq import ProductQuantizer, adc_lut, adc_scores, pq_train
+from repro.core.tree import FlatTree, build_qlbt, build_rp_tree, build_kd_tree
+
+__all__ = ["TwoLevelConfig", "TwoLevelIndex", "build_two_level"]
+
+TOP_ALGOS = ("brute", "kdtree", "pq")
+BOTTOM_ALGOS = ("brute", "tree", "qlbt", "lsh")
+
+
+@dataclasses.dataclass
+class TwoLevelConfig:
+    n_clusters: int = 1024
+    top: str = "brute"            # brute | kdtree | pq
+    bottom: str = "brute"         # brute | tree | qlbt | lsh
+    pq_m: int = 8                 # top-level PQ subspaces
+    lsh_bits: int = 64
+    kmeans_iters: int = 10
+    kmeans_minibatch: Optional[int] = 262144
+    bucket_cap: Optional[int] = None   # pad width; default = max bucket
+    tree_leaf: int = 8
+    tree_candidates: int = 4
+    qlbt_boost_depth: int = 3
+    qlbt_lambda: float = 0.5
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Forest:
+    """Per-bucket trees concatenated into one node table."""
+    arrays: dict                  # device arrays (see FlatTree.device_arrays)
+    roots: np.ndarray             # (K,) int32 root node per bucket
+    max_depth: int
+    nbytes: int
+
+
+@dataclasses.dataclass
+class TwoLevelIndex:
+    config: TwoLevelConfig
+    db: np.ndarray                      # (N, d) float32 original vectors
+    centroids: np.ndarray               # (K, d)
+    bucket_ids: np.ndarray              # (K, cap) int32, -1 padded
+    bucket_counts: np.ndarray           # (K,)
+    top_pq: Optional[ProductQuantizer] = None
+    top_kd: Optional[FlatTree] = None
+    bottom_lsh: Optional[LSHIndex] = None
+    forest: Optional[_Forest] = None
+
+    # ---------------- construction helpers ----------------
+    @property
+    def n(self) -> int:
+        return int(self.db.shape[0])
+
+    @property
+    def k_clusters(self) -> int:
+        return int(self.centroids.shape[0])
+
+    def add_entities(self, new_vecs: np.ndarray) -> np.ndarray:
+        """Incremental insert: route each new vector to its nearest
+        centroid with a free slot (spill to next-nearest like the build
+        path).  Buckets whose pad fills grow the pad width.  Returns the
+        assigned global entity ids.  Centroids are NOT refit — the paper's
+        update model (rebuild k-means offline when drift accumulates).
+
+        Only supported for brute bottom level (tree forests would need a
+        per-bucket rebuild; LSH would need code append — both are offline
+        rebuilds in the paper's protocol)."""
+        if self.config.bottom != "brute":
+            raise NotImplementedError(
+                "incremental insert supports bottom='brute'; rebuild for "
+                "tree/lsh bottoms (paper §3.1 update model)")
+        from repro.core.kmeans import _assign_topm
+
+        new_vecs = np.ascontiguousarray(new_vecs, dtype=np.float32)
+        start = self.n
+        ids = np.arange(start, start + new_vecs.shape[0], dtype=np.int32)
+        self.db = np.concatenate([self.db, new_vecs], axis=0)
+        top_b, _ = _assign_topm(new_vecs, self.centroids,
+                                min(4, self.k_clusters))
+        cap = self.bucket_ids.shape[1]
+        counts = self.bucket_counts.astype(np.int64).copy()
+        placed_b = np.empty(ids.size, dtype=np.int64)
+        for j in range(ids.size):
+            for b in top_b[j]:
+                if counts[b] < cap:
+                    placed_b[j] = b
+                    break
+            else:
+                b = int(top_b[j, 0])
+                placed_b[j] = b
+                if counts[b] >= cap:          # grow the pad width
+                    grow = max(8, cap // 4)
+                    self.bucket_ids = np.pad(
+                        self.bucket_ids, ((0, 0), (0, grow)),
+                        constant_values=-1)
+                    cap += grow
+            self.bucket_ids[placed_b[j], counts[placed_b[j]]] = ids[j]
+            counts[placed_b[j]] += 1
+        self.bucket_counts = counts.astype(np.int32)
+        return ids
+
+    def footprint_bytes(self, include_db: bool = True) -> int:
+        tot = self.centroids.nbytes + self.bucket_ids.nbytes
+        tot += self.bucket_counts.nbytes
+        if include_db:
+            tot += self.db.nbytes
+        if self.top_pq is not None:
+            tot += self.top_pq.footprint_bytes()
+        if self.top_kd is not None:
+            tot += self.top_kd.footprint_bytes()
+        if self.bottom_lsh is not None:
+            tot += self.bottom_lsh.footprint_bytes()
+        if self.forest is not None:
+            tot += self.forest.nbytes
+        return tot
+
+    # ---------------- search ----------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        nprobe: int = 8,
+        beam_width: int = 8,
+        lsh_candidates: int = 128,
+        query_chunk: int = 1024,
+        query_partition_features: Optional[np.ndarray] = None,
+    ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Returns (dists (B,k), ids (B,k), work dict).
+
+        ``query_partition_features`` must be supplied when the index was
+        built on side features (e.g. geolocation) — the top level probes in
+        partition-feature space, the bottom level in embedding space.
+        """
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        qp = (
+            q
+            if query_partition_features is None
+            else np.ascontiguousarray(query_partition_features, np.float32)
+        )
+        outs_d, outs_i = [], []
+        work = {"top_scored": 0, "candidates": 0}
+        for s in range(0, q.shape[0], query_chunk):
+            qc = jnp.asarray(q[s : s + query_chunk])
+            qpc = jnp.asarray(qp[s : s + query_chunk])
+            d, i, w = self._search_chunk(
+                qc, qpc, k, nprobe=nprobe, beam_width=beam_width,
+                lsh_candidates=lsh_candidates,
+            )
+            outs_d.append(np.asarray(d))
+            outs_i.append(np.asarray(i))
+            for key in work:
+                work[key] += int(w[key])
+        return np.concatenate(outs_d), np.concatenate(outs_i), work
+
+    def _search_chunk(self, q, qp, k, *, nprobe, beam_width, lsh_candidates):
+        nprobe = min(nprobe, self.k_clusters)
+        buckets, top_work = self._top_probe(qp, nprobe)      # (B, nprobe)
+        B = q.shape[0]
+        counts = jnp.asarray(self.bucket_counts)[buckets]
+        work = {"top_scored": top_work * B,
+                "candidates": int(np.asarray(counts).sum())}
+
+        bottom = self.config.bottom
+        db = jnp.asarray(self.db)
+        bids = jnp.asarray(self.bucket_ids)
+        if bottom == "brute":
+            d, i = _probe_scan_brute(db, bids, buckets, q, k)
+            return d, i, work
+        if bottom == "lsh":
+            cap = self.bucket_ids.shape[1]
+            shortlist = min(lsh_candidates, nprobe * cap)
+            cand = _probe_scan_lsh(
+                jnp.asarray(self.bottom_lsh.codes),
+                jnp.asarray(self.bottom_lsh.proj),
+                bids, buckets, q, shortlist,
+            )
+            work["candidates"] = int(cand.shape[0] * cand.shape[1])
+            d, i = _rerank(db, q, cand, k)
+            return d, i, work
+        # tree / qlbt forest
+        cand = self._forest_candidates(q, buckets, beam_width)
+        work["candidates"] = int((np.asarray(cand) >= 0).sum())
+        d, i = _rerank(db, q, cand, k)
+        return d, i, work
+
+    def _top_probe(self, qp, nprobe):
+        """Top-level search over centroids -> (bucket ids, work/query)."""
+        c = jnp.asarray(self.centroids)
+        top = self.config.top
+        if top == "brute":
+            d2 = pairwise_l2sq(qp, c)
+            _, b = jax.lax.top_k(-d2, nprobe)
+            return b, self.k_clusters
+        if top == "pq":
+            lut = adc_lut(qp, jnp.asarray(self.top_pq.codebooks))
+            scores = adc_scores(lut, jnp.asarray(self.top_pq.codes))
+            _, b = jax.lax.top_k(-scores, nprobe)
+            return b, self.k_clusters  # ADC ops, cheaper per item
+        if top == "kdtree":
+            arrays = self.top_kd.device_arrays()
+            res = tree_mod.tree_search(
+                arrays, c, qp, kind="kd",
+                beam_width=max(2 * nprobe, 8), k=nprobe,
+                max_steps=self.top_kd.max_depth + 4,
+            )
+            return jnp.maximum(res.ids, 0), int(res.candidates.mean())
+        raise ValueError(f"unknown top {top!r}")
+
+    def _forest_candidates(self, q, buckets, beam_width):
+        """Descend each probed bucket's tree; union of leaf candidates."""
+        B, nprobe = buckets.shape
+        roots = jnp.asarray(self.forest.roots)[buckets]      # (B, np)
+        qq = jnp.repeat(q, nprobe, axis=0)                   # (B*np, d)
+        rr = roots.reshape(-1)
+        res = tree_mod.tree_search(
+            self.forest.arrays, jnp.asarray(self.db), qq,
+            kind="rp", beam_width=beam_width,
+            k=beam_width * self.config.tree_leaf,
+            max_steps=self.forest.max_depth + 4,
+            rerank=False, roots=rr,
+        )
+        return res.ids.reshape(B, -1)
+
+
+def _popcount32(x):
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24
+
+
+def _pack_bits_jax(bits):
+    B, nb = bits.shape
+    pad = (-nb) % 32
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    b = bits.reshape(B, -1, 32).astype(jnp.uint32)
+    w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (b * w).sum(axis=2, dtype=jnp.uint32).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _probe_scan_brute(db, bucket_ids, buckets, q, k):
+    """Stream probed buckets with a running top-k merge (bounded memory).
+
+    One probe step gathers a (B, cap, d) tile — the TPU layout this maps to
+    is the `kernels/l2_topk` tile loop over the probed buckets.
+    """
+    B = q.shape[0]
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+
+    def step(carry, bs):                       # bs: (B,) bucket id per query
+        best_d, best_i = carry
+        cand = bucket_ids[bs]                  # (B, cap)
+        vecs = db[jnp.maximum(cand, 0)]        # (B, cap, d)
+        d2 = (
+            jnp.sum(vecs * vecs, -1)
+            - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
+            + qn
+        )
+        d2 = jnp.where(cand >= 0, d2, jnp.inf)
+        cat_d = jnp.concatenate([best_d, d2], axis=1)
+        cat_i = jnp.concatenate([best_i, cand], axis=1)
+        neg, sel = jax.lax.top_k(-cat_d, k)
+        return (-neg, jnp.take_along_axis(cat_i, sel, axis=1)), None
+
+    best0 = (
+        jnp.full((B, k), jnp.inf, jnp.float32),
+        jnp.full((B, k), -1, jnp.int32),
+    )
+    (d, i), _ = jax.lax.scan(step, best0, jnp.moveaxis(buckets, 1, 0))
+    i = jnp.where(jnp.isinf(d), -1, i)
+    return d, i
+
+
+@partial(jax.jit, static_argnames=("shortlist",))
+def _probe_scan_lsh(codes, proj, bucket_ids, buckets, q, shortlist):
+    """Stream probed buckets, keep a running Hamming top-``shortlist``."""
+    B = q.shape[0]
+    qcodes = _pack_bits_jax(q @ proj > 0)
+
+    def step(carry, bs):
+        best_h, best_i = carry
+        cand = bucket_ids[bs]                  # (B, cap)
+        ccodes = codes[jnp.maximum(cand, 0)]   # (B, cap, W)
+        x = jnp.bitwise_xor(qcodes[:, None, :], ccodes)
+        ham = _popcount32(x).sum(-1).astype(jnp.float32)
+        ham = jnp.where(cand >= 0, ham, jnp.inf)
+        cat_h = jnp.concatenate([best_h, ham], axis=1)
+        cat_i = jnp.concatenate([best_i, cand], axis=1)
+        neg, sel = jax.lax.top_k(-cat_h, shortlist)
+        return (-neg, jnp.take_along_axis(cat_i, sel, axis=1)), None
+
+    best0 = (
+        jnp.full((B, shortlist), jnp.inf, jnp.float32),
+        jnp.full((B, shortlist), -1, jnp.int32),
+    )
+    (_, cand), _ = jax.lax.scan(step, best0, jnp.moveaxis(buckets, 1, 0))
+    return cand
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _rerank(db, q, cand, k):
+    vecs = db[jnp.maximum(cand, 0)]
+    d2 = (
+        jnp.sum(vecs * vecs, -1)
+        - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
+        + jnp.sum(q * q, -1, keepdims=True)
+    )
+    d2 = jnp.where(cand >= 0, d2, jnp.inf)
+    # mask duplicate ids (same entity can enter via two probes only when
+    # forests overlap; brute path ids are unique). Cheap sort-free dedupe:
+    # keep first occurrence by penalizing later equal ids.
+    k = min(k, cand.shape[1])
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    ids = jnp.where(jnp.isinf(-neg), -1, ids)
+    return -neg, ids
+
+
+def build_two_level(
+    db: np.ndarray,
+    config: TwoLevelConfig,
+    *,
+    p: Optional[np.ndarray] = None,
+    partition_features: Optional[np.ndarray] = None,
+) -> TwoLevelIndex:
+    """Paper §3.2 build: partition features -> k-means -> per-level indexes."""
+    if config.top not in TOP_ALGOS:
+        raise ValueError(f"top must be one of {TOP_ALGOS}")
+    if config.bottom not in BOTTOM_ALGOS:
+        raise ValueError(f"bottom must be one of {BOTTOM_ALGOS}")
+    db = np.ascontiguousarray(db, dtype=np.float32)
+    n, d = db.shape
+    feats = db if partition_features is None else np.ascontiguousarray(
+        partition_features, dtype=np.float32
+    )
+    k = min(config.n_clusters, n)
+    km = kmeans_fit(
+        feats, k, iters=config.kmeans_iters, seed=config.seed,
+        minibatch=config.kmeans_minibatch,
+    )
+    counts = np.bincount(km.assignments, minlength=k)
+    if config.bucket_cap is not None:
+        cap = config.bucket_cap
+    else:
+        # fixed pad width keeps probe tiles dense on TPU; spill overflow to
+        # the next-nearest centroid instead of padding to the max bucket.
+        cap = int(min(counts.max(), max(int(np.ceil(2.5 * n / k)), 32)))
+    bucket_ids, counts = _capped_assign(feats, km.centroids, k, cap)
+
+    idx = TwoLevelIndex(
+        config=config, db=db,
+        centroids=km.centroids,
+        bucket_ids=bucket_ids,
+        bucket_counts=counts.astype(np.int32),
+    )
+
+    if config.top == "pq":
+        idx.top_pq = pq_train(km.centroids, m=config.pq_m, seed=config.seed,
+                              train_sample=None)
+    elif config.top == "kdtree":
+        idx.top_kd = build_kd_tree(km.centroids, leaf_size=4)
+
+    if config.bottom == "lsh":
+        idx.bottom_lsh = lsh_build(db, n_bits=config.lsh_bits,
+                                   seed=config.seed)
+    elif config.bottom in ("tree", "qlbt"):
+        idx.forest = _build_forest(db, bucket_ids, counts, config, p)
+    return idx
+
+
+def _capped_assign(
+    feats: np.ndarray, centroids: np.ndarray, k: int, cap: int, m: int = 4
+):
+    """Capacity-capped bucket fill with spill to next-nearest centroid.
+
+    Round r offers every unplaced entity a seat in its r-th nearest bucket;
+    seats go to the closest applicants.  Entities unplaced after ``m``
+    rounds land in the globally least-loaded bucket (rare at cap>=2x mean).
+    Returns (bucket_ids (k, cap) int32 -1-padded, counts (k,) int32).
+    """
+    from repro.core.kmeans import _assign_topm
+
+    n = feats.shape[0]
+    top_b, top_d = _assign_topm(feats, centroids, min(m, k))
+    bucket_of = np.full(n, -1, dtype=np.int64)
+    fill = np.zeros(k, dtype=np.int64)
+    unplaced = np.arange(n, dtype=np.int64)
+    for r in range(top_b.shape[1]):
+        if unplaced.size == 0:
+            break
+        b = top_b[unplaced, r].astype(np.int64)
+        d = top_d[unplaced, r]
+        order = np.lexsort((d, b))
+        bs, ds, ids = b[order], d[order], unplaced[order]
+        first = np.searchsorted(bs, bs, side="left")
+        rank = np.arange(bs.size) - first
+        seats = cap - fill[bs]
+        ok = rank < seats
+        placed_ids, placed_b = ids[ok], bs[ok]
+        bucket_of[placed_ids] = placed_b
+        fill += np.bincount(placed_b, minlength=k)
+        unplaced = ids[~ok]
+    if unplaced.size:
+        for e in unplaced:                      # rare fallback
+            b = int(np.argmin(fill))
+            bucket_of[e] = b
+            fill[b] += 1
+    cap_eff = int(max(cap, fill.max()))
+    bucket_ids = np.full((k, cap_eff), -1, dtype=np.int32)
+    order = np.argsort(bucket_of, kind="stable")
+    offsets = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(fill, out=offsets[1:])
+    sorted_ids = np.arange(n, dtype=np.int32)[order]
+    for b in range(k):
+        ids = sorted_ids[offsets[b] : offsets[b + 1]]
+        bucket_ids[b, : ids.size] = ids
+    return bucket_ids, fill.astype(np.int32)
+
+
+def _build_forest(db, bucket_ids, counts, config: TwoLevelConfig, p):
+    """Concatenate per-bucket trees into one node table (global entity ids)."""
+    trees: list[FlatTree] = []
+    roots = np.zeros(bucket_ids.shape[0], dtype=np.int32)
+    offset = 0
+    for b in range(bucket_ids.shape[0]):
+        ids = bucket_ids[b][: counts[b]]
+        ids = ids[ids >= 0]
+        if ids.size == 0:
+            # empty bucket: single empty leaf
+            ids = np.zeros(0, dtype=np.int32)
+        sub = db[ids] if ids.size else np.zeros((1, db.shape[1]), np.float32)
+        if config.bottom == "qlbt" and p is not None and ids.size:
+            t = build_qlbt(
+                sub, p[ids], leaf_size=config.tree_leaf,
+                n_candidates=config.tree_candidates,
+                boost_depth=config.qlbt_boost_depth,
+                lam=config.qlbt_lambda, seed=config.seed + b,
+            )
+        else:
+            t = build_rp_tree(
+                sub, leaf_size=config.tree_leaf,
+                n_candidates=config.tree_candidates, seed=config.seed + b,
+            )
+        # remap leaf entity local ids -> global ids
+        le = t.leaf_entities.copy()
+        if ids.size:
+            mask = le >= 0
+            le[mask] = ids[le[mask]]
+        else:
+            le[:] = -1
+        t = dataclasses.replace(t, leaf_entities=le)
+        roots[b] = offset
+        offset += t.n_nodes
+        trees.append(t)
+
+    def cat(field, fill_shift=None):
+        parts = []
+        shift = 0
+        for t in trees:
+            v = getattr(t, field)
+            if fill_shift is not None:
+                v = v.copy()
+                mask = v >= 0
+                v[mask] += shift
+            parts.append(v)
+            shift += t.n_nodes
+        return np.concatenate(parts, axis=0)
+
+    # leaf_row indexes into the concatenated leaf table -> shift by leaves
+    leaf_rows = []
+    lshift = 0
+    for t in trees:
+        lr = t.leaf_row.copy()
+        lr[lr >= 0] += lshift
+        lshift += t.n_leaves
+        leaf_rows.append(lr)
+
+    arrays = dict(
+        proj=jnp.asarray(cat("proj")),
+        dims=jnp.asarray(cat("dims")),
+        tau=jnp.asarray(cat("tau")),
+        children=jnp.asarray(cat("children", fill_shift=True)),
+        leaf_row=jnp.asarray(np.concatenate(leaf_rows)),
+        leaf_entities=jnp.asarray(cat("leaf_entities")),
+    )
+    nbytes = sum(
+        int(np.asarray(v).nbytes) for v in arrays.values()
+    )
+    return _Forest(
+        arrays=arrays, roots=roots,
+        max_depth=max(t.max_depth for t in trees),
+        nbytes=nbytes,
+    )

@@ -1,0 +1,43 @@
+"""Shared helpers for the ANN Pallas kernels.
+
+All three kernels (`l2_topk`, `pq_adc`, `hamming`) are streaming scans over
+database tiles with a running per-query top-k kept in the revisited output
+block — the canonical TPU accumulation pattern (sequential innermost grid
+dimension revisits the same output tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = float("inf")  # python float: jnp closures may not capture arrays
+
+
+def merge_topk(best_d, best_i, tile_d, tile_i, k: int):
+    """Merge a (B, T) score tile into the running (B, K) best lists.
+
+    K is static and small (<=32); extraction is K iterative masked argmins —
+    no sort needed, VPU-friendly, works identically under Pallas interpret
+    mode and on the TPU vector unit.
+    Returns updated (best_d (B,K) ascending, best_i (B,K)).
+    """
+    cat_d = jnp.concatenate([best_d, tile_d], axis=1)          # (B, K+T)
+    cat_i = jnp.concatenate([best_i, tile_i], axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, cat_d.shape, 1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        am = jnp.argmin(cat_d, axis=1)                         # (B,)
+        md = jnp.min(cat_d, axis=1)
+        mi = jnp.take_along_axis(cat_i, am[:, None], axis=1)[:, 0]
+        out_d.append(md)
+        out_i.append(mi)
+        cat_d = jnp.where(cols == am[:, None], INF, cat_d)
+    return jnp.stack(out_d, axis=1), jnp.stack(out_i, axis=1)
+
+
+def popcount32(x):
+    """Branch-free popcount on int32 lanes (no popcnt op on the VPU)."""
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24

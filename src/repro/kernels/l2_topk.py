@@ -1,0 +1,95 @@
+"""Fused L2-distance + streaming top-k Pallas TPU kernel.
+
+The paper's hot loop: brute-force scan of probed buckets / small corpora
+(§5.2 found brute the best bottom level at ~100-entity buckets).  On TPU
+the scan is an MXU matmul per (query-tile x db-tile) using the expansion
+``||q - x||^2 = ||q||^2 - 2 q.x + ||x||^2`` with the running top-k held in
+the revisited output block (sequential innermost grid dim).
+
+Grid: (B_tiles, N_tiles), N innermost.  VMEM per step:
+  q tile (BQ, D) + x tile (BN, D) + dist tile (BQ, BN) + best (BQ, K)*2
+e.g. BQ=256, BN=512, D=128 fp32 ~ (128 + 256 + 512) KiB * 4 -> well under
+the ~16 MiB VMEM budget; BN is the tuning knob for arithmetic intensity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INF, merge_topk
+
+DEFAULT_BQ = 256
+DEFAULT_BN = 512
+
+
+def _kernel(q_ref, x_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)            # (BQ, D)
+    x = x_ref[...].astype(jnp.float32)            # (BN, D)
+
+    qn = jnp.sum(q * q, axis=1, keepdims=True)    # (BQ, 1)
+    xn = jnp.sum(x * x, axis=1)                   # (BN,)
+    # MXU: (BQ, D) @ (D, BN)
+    dots = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = qn + xn[None, :] - 2.0 * dots            # (BQ, BN)
+
+    ids = step * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2 = jnp.where(ids < n, d2, INF)           # mask grid padding rows
+
+    new_d, new_i = merge_topk(bd_ref[...], bi_ref[...], d2, ids, k)
+    bd_ref[...] = new_d
+    bi_ref[...] = new_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bq", "bn", "interpret")
+)
+def l2_topk_pallas(
+    queries: jnp.ndarray,
+    db: jnp.ndarray,
+    k: int = 10,
+    *,
+    bq: int = DEFAULT_BQ,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (dists (B, k) ascending fp32, ids (B, k) int32)."""
+    B, D = queries.shape
+    N = db.shape[0]
+    bq = min(bq, max(8, B))
+    bn = min(bn, max(8, N))
+    grid_b = -(-B // bq)
+    grid_n = -(-N // bn)
+    qp = jnp.pad(queries, ((0, grid_b * bq - B), (0, 0)))
+    xp = jnp.pad(db, ((0, grid_n * bn - N), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, bn=bn, n=N),
+        grid=(grid_b, grid_n),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.float32),
+            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, xp)
+    return out[0][:B], out[1][:B]

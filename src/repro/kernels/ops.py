@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the ANN kernels.
+
+Dispatch policy: on TPU backends call the Pallas kernel compiled natively;
+on CPU (this container) call the pure-jnp oracle by default — identical
+results, XLA-optimized — or the Pallas kernel in interpret mode when
+``force_pallas=True`` (used by tests to execute the real kernel body).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hamming, l2_topk, pq_adc, ref
+
+__all__ = ["l2_topk_op", "pq_adc_topk_op", "hamming_topk_op"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def l2_topk_op(queries, db, k: int = 10, *, force_pallas: bool = False,
+               bq: int | None = None, bn: int | None = None):
+    """Fused brute-force L2 top-k. (dists ascending, ids)."""
+    if _on_tpu() or force_pallas:
+        kw = {}
+        if bq:
+            kw["bq"] = bq
+        if bn:
+            kw["bn"] = bn
+        return l2_topk.l2_topk_pallas(
+            jnp.asarray(queries), jnp.asarray(db), k,
+            interpret=not _on_tpu(), **kw,
+        )
+    return ref.l2_topk_ref(jnp.asarray(queries), jnp.asarray(db), k)
+
+
+def pq_adc_topk_op(lut, codes, k: int = 10, *, force_pallas: bool = False,
+                   bq: int | None = None, bn: int | None = None):
+    """PQ ADC scan + top-k from a per-query LUT. (adc dists, ids)."""
+    if _on_tpu() or force_pallas:
+        kw = {}
+        if bq:
+            kw["bq"] = bq
+        if bn:
+            kw["bn"] = bn
+        return pq_adc.pq_adc_topk_pallas(
+            jnp.asarray(lut), jnp.asarray(codes), k,
+            interpret=not _on_tpu(), **kw,
+        )
+    return ref.pq_adc_topk_ref(jnp.asarray(lut), jnp.asarray(codes), k)
+
+
+def hamming_topk_op(qcodes, codes, k: int = 10, *, force_pallas: bool = False,
+                    bq: int | None = None, bn: int | None = None):
+    """Packed-bit Hamming top-k. (dists, ids)."""
+    if _on_tpu() or force_pallas:
+        kw = {}
+        if bq:
+            kw["bq"] = bq
+        if bn:
+            kw["bn"] = bn
+        return hamming.hamming_topk_pallas(
+            jnp.asarray(qcodes), jnp.asarray(codes), k,
+            interpret=not _on_tpu(), **kw,
+        )
+    return ref.hamming_topk_ref(jnp.asarray(qcodes), jnp.asarray(codes), k)

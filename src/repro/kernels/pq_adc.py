@@ -1,0 +1,107 @@
+"""PQ asymmetric-distance (ADC) + fused top-k Pallas TPU kernel.
+
+The paper's top-level index on large corpora is PQ over 2^13..2^15 k-means
+centroids (§3.2/§5.2): a query builds a (M, 256) LUT of exact subspace
+distances once, then every centroid code is scored as
+``sum_m LUT[m, code[n, m]]``.
+
+TPU adaptation (DESIGN.md §2): the CPU implementation is a random-access
+byte gather — hostile to the VPU.  We instead materialize each subspace's
+one-hot code matrix on the fly (iota compare) and score with an MXU matmul
+
+    scores += LUT[:, m, :] @ onehot(codes[:, m])      # (B,256) x (256,BN)
+
+turning the gather into M dense (B, 256, BN) matmul tiles — the classic
+"gather as one-hot matmul" TPU idiom.  Running top-k merges per tile as in
+`l2_topk`.
+
+Grid: (B_tiles, N_tiles), N innermost.  VMEM: LUT tile (BQ, M, 256) +
+codes tile (BN, M) + scores (BQ, BN).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INF, merge_topk
+
+DEFAULT_BQ = 128
+DEFAULT_BN = 512
+
+
+def _kernel(lut_ref, codes_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    lut = lut_ref[...].astype(jnp.float32)        # (BQ, M, C)
+    codes = codes_ref[...]                        # (BN, M) int32
+    bq, m, c = lut.shape
+
+    def body(j, acc):
+        cj = codes[:, j]                          # (BN,)
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (c, cj.shape[0]), 0)
+            == cj[None, :]
+        ).astype(jnp.float32)                     # (C, BN)
+        return acc + jax.lax.dot_general(
+            lut[:, j, :], onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    scores = jax.lax.fori_loop(
+        0, m, body, jnp.zeros((bq, codes.shape[0]), jnp.float32)
+    )
+
+    ids = step * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(ids < n, scores, INF)
+
+    new_d, new_i = merge_topk(bd_ref[...], bi_ref[...], scores, ids, k)
+    bd_ref[...] = new_d
+    bi_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def pq_adc_topk_pallas(
+    lut: jnp.ndarray,          # (B, M, 256) float32
+    codes: jnp.ndarray,        # (N, M) int32/uint8
+    k: int = 10,
+    *,
+    bq: int = DEFAULT_BQ,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (adc_dists (B, k) ascending, ids (B, k))."""
+    B, M, C = lut.shape
+    N = codes.shape[0]
+    bq = min(bq, max(8, B))
+    bn = min(bn, max(8, N))
+    grid_b = -(-B // bq)
+    grid_n = -(-N // bn)
+    lp = jnp.pad(lut, ((0, grid_b * bq - B), (0, 0), (0, 0)))
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, grid_n * bn - N), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, bn=bn, n=N),
+        grid=(grid_b, grid_n),
+        in_specs=[
+            pl.BlockSpec((bq, M, C), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bn, M), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.float32),
+            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lp, cp)
+    return out[0][:B], out[1][:B]

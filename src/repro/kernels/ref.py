@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function computes the same result as its kernel with no tiling and no
+Pallas — used by tests (`tests/test_kernels.py`) for allclose sweeps and by
+`ops.py` as the CPU fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import popcount32
+
+
+def l2_topk_ref(queries, db, k: int = 10):
+    q = queries.astype(jnp.float32)
+    x = db.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, 1, keepdims=True)
+        + jnp.sum(x * x, 1)[None, :]
+        - 2.0 * (q @ x.T)
+    )
+    neg, ids = jax.lax.top_k(-d2, k)
+    return -neg, ids.astype(jnp.int32)
+
+
+def pq_adc_topk_ref(lut, codes, k: int = 10):
+    lut = lut.astype(jnp.float32)
+    c = codes.astype(jnp.int32)                    # (N, M)
+    # scores[b, n] = sum_m lut[b, m, c[n, m]]
+    g = jnp.take_along_axis(
+        lut, c.T[None, :, :], axis=2
+    )                                              # (B, M, N)
+    scores = g.sum(axis=1)
+    neg, ids = jax.lax.top_k(-scores, k)
+    return -neg, ids.astype(jnp.int32)
+
+
+def hamming_topk_ref(qcodes, codes, k: int = 10):
+    x = jnp.bitwise_xor(qcodes[:, None, :], codes[None, :, :])
+    ham = popcount32(x).sum(-1).astype(jnp.float32)
+    neg, ids = jax.lax.top_k(-ham, k)
+    return -neg, ids.astype(jnp.int32)

@@ -1,0 +1,526 @@
+"""Dry-run cell builders: (arch x shape x mesh) -> lowerable step + specs.
+
+For every cell this module produces:
+  step_fn        : the jit-able train/serve/retrieval step
+  args           : ShapeDtypeStruct pytree (no allocation)
+  in_shardings   : NamedSharding pytree matching args
+  out_shardings  : NamedSharding pytree (or None -> let SPMD choose)
+
+The full configs only ever flow through here as shapes; smoke tests use
+``cfg.reduced()`` with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    AnnConfig,
+    DCNConfig,
+    DINConfig,
+    DLRMConfig,
+    LMConfig,
+    SASRecConfig,
+    SchNetConfig,
+    ShapeSpec,
+)
+from repro.distributed.sharding import ShardPlan
+from repro.models import recsys as R
+from repro.models import schnet as S
+from repro.models import transformer as T
+from repro.train import optim
+from repro.train.loop import TrainState, make_train_step
+
+__all__ = ["build_cell", "CellSpec", "lm_config_for_mesh"]
+
+
+@dataclasses.dataclass
+class CellSpec:
+    step_fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    note: str = ""
+
+
+def _shard_tree(mesh, spec_tree):
+    is_leaf = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=is_leaf
+    )
+
+
+def _pad_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def lm_config_for_mesh(cfg: LMConfig, plan: ShardPlan,
+                       shape: ShapeSpec) -> LMConfig:
+    """Bind distribution knobs to the mesh (DESIGN.md §4)."""
+    dp = max(plan.axis_size("dp"), 1)
+    seq = shape["seq"]
+    chunk = 0
+    if shape.kind in ("train", "prefill") and seq >= 4096:
+        chunk = min(1024, seq // 4)
+    # sequence-shard the residual stream for whole-sequence shapes
+    # (Megatron-SP): the scan saves one carry per layer for backward — an
+    # unsharded fp32 carry is L x (b_loc, S, D) and blows 16 GB/chip on
+    # 61-88-layer models (EXPERIMENTS.md §Perf).  Decode keeps the arch
+    # default (S == 1).
+    attn_shard = "seq" if shape.kind in ("train", "prefill") \
+        else cfg.attn_shard
+    return dataclasses.replace(
+        cfg,
+        moe_groups=dp if cfg.moe else 1,
+        attn_chunk=chunk,
+        attn_shard=attn_shard,
+        scan_layers=True,
+        remat=shape.kind == "train",
+    )
+
+
+def _lm_optimizer(cfg: LMConfig):
+    # giants: adafactor (factored 2nd moment) so state fits 16 GB/chip
+    if cfg.param_dtype == "bfloat16":
+        return optim.adafactor(optim.warmup_cosine(1e-4, 2000, 100_000))
+    return optim.adamw(optim.warmup_cosine(3e-4, 2000, 100_000))
+
+
+def _moe_plan(cfg: LMConfig, plan: ShardPlan) -> ShardPlan:
+    """Widen expert parallelism across pods when experts divide the full
+    mesh (kimi: 512 padded experts over 512 chips -> 1 expert/chip,
+    halving expert param+grad bytes; all-to-all crosses pods — the
+    memory/collective trade is visible in the roofline)."""
+    if cfg.moe and plan.pp:
+        full = plan.size_of(("pp", "ep"))
+        if cfg.moe.e_pad % full == 0:
+            return dataclasses.replace(plan, ep=plan.pp + plan.ep, pp=())
+    return plan
+
+
+def _lm_train_cell(cfg: LMConfig, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    plan = _moe_plan(cfg, plan)
+    cfg = lm_config_for_mesh(cfg, plan, shape)
+    b, s = shape["batch"], shape["seq"]
+    opt = _lm_optimizer(cfg)
+    p_shapes = T.param_shapes(cfg, plan)
+    p_specs = T.param_specs(cfg, plan)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_specs = optim.state_specs(opt, p_specs, p_shapes)
+    state_sds = TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=p_shapes, opt_state=o_shapes, ef_buf=None,
+    )
+    state_spec = TrainState(step=P(), params=p_specs, opt_state=o_specs,
+                            ef_buf=None)
+    accum = max(1, cfg.grad_accum)
+    if accum > 1:
+        # microbatched: leading accum axis scanned inside the step
+        assert b % accum == 0, (b, accum)
+        bshape = (accum, b // accum, s)
+        bspec = plan.p(None, "dp", None)
+    else:
+        bshape = (b, s)
+        bspec = plan.p("dp", None)
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct(bshape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(bshape, jnp.int32),
+    }
+    batch_spec = {"tokens": bspec, "labels": bspec}
+
+    loss = partial(T.loss_fn, cfg=cfg, plan=plan)
+    step = make_train_step(loss, opt, accum=accum)
+    aux_spec = {
+        "nll": P(), "accuracy": P(), "loss": P(), "grad_norm": P(),
+    }
+    if cfg.mtp:
+        aux_spec["mtp_nll"] = P()
+    return CellSpec(
+        step_fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_shard_tree(mesh, state_spec),
+                      _shard_tree(mesh, batch_spec)),
+        out_shardings=(_shard_tree(mesh, state_spec),
+                       _shard_tree(mesh, aux_spec)),
+        donate=(0,),
+    )
+
+
+def _lm_prefill_cell(cfg: LMConfig, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    plan = _moe_plan(cfg, plan)
+    cfg = lm_config_for_mesh(cfg, plan, shape)
+    b, s = shape["batch"], shape["seq"]
+    p_shapes = T.param_shapes(cfg, plan)
+    p_specs = T.param_specs(cfg, plan)
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    def step(params, tokens):
+        return T.prefill(params, tokens, cfg, plan)
+
+    cache_spec = T.cache_specs(cfg, plan)
+    out_spec = (plan.p("dp", "tp"), cache_spec)
+    return CellSpec(
+        step_fn=step,
+        args=(p_shapes, tok_sds),
+        in_shardings=(_shard_tree(mesh, p_specs),
+                      NamedSharding(mesh, plan.p("dp", None))),
+        out_shardings=_shard_tree(mesh, out_spec),
+    )
+
+
+def _lm_decode_cell(cfg: LMConfig, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    # serving plan: no FSDP — weights stay resident (tp/ep-sharded);
+    # FSDP-gathering every layer's weights *per generated token* costs
+    # ~2 GB/step/chip of all-gather (EXPERIMENTS.md §Perf).  Serving
+    # weights are bf16 (standard deployment precision).
+    plan = dataclasses.replace(_moe_plan(cfg, plan), fsdp=())
+    cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    cfg = lm_config_for_mesh(cfg, plan, shape)
+    b, s = shape["batch"], shape["seq"]
+    p_shapes = T.param_shapes(cfg, plan)
+    p_specs = T.param_specs(cfg, plan)
+    cache_sds = T.cache_shapes(cfg, b, s)
+    cache_spec = T.cache_specs(cfg, plan)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg, plan)
+
+    return CellSpec(
+        step_fn=step,
+        args=(p_shapes, cache_sds, tok_sds),
+        in_shardings=(_shard_tree(mesh, p_specs),
+                      _shard_tree(mesh, cache_spec),
+                      NamedSharding(mesh, plan.p("dp", None))),
+        out_shardings=(NamedSharding(mesh, plan.p("dp", "tp")),
+                       _shard_tree(mesh, cache_spec)),
+        donate=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cell(cfg: SchNetConfig, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    n_dev = plan.axis_size("dp") * plan.axis_size("tp")
+    dims = shape.dims
+    d_feat = dims.get("d_feat", cfg.d_feat)
+    cfg = dataclasses.replace(
+        cfg, d_feat=d_feat,
+        n_out=16 if "batch" not in dims else 1,
+        message_dtype="bfloat16",   # §Perf: halves the aggregate all-reduce
+    )
+    if shape.name == "minibatch_lg":
+        # padded sampled-subgraph sizes (seeds x fanout closure)
+        bn = dims["batch_nodes"]
+        f1, f2 = dims["fanout"]
+        n_nodes = _pad_to(bn * (1 + f1) + bn * f1 * f2, 256)
+        n_edges = _pad_to(bn * f1 + bn * f1 * f2, max(256, n_dev))
+        n_graphs = None
+    elif shape.name == "molecule":
+        g = dims["batch"]
+        n_nodes = g * dims["n_nodes"]
+        n_edges = _pad_to(g * dims["n_edges"], max(256, n_dev))
+        n_graphs = g
+    else:
+        n_nodes = dims["n_nodes"]
+        n_edges = _pad_to(dims["n_edges"], max(256, n_dev))
+        n_graphs = None
+
+    edge_spec = plan.p(("dp", "tp"))
+    batch_sds = {
+        "feats": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((n_nodes, 3), jnp.float32),
+        "senders": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "receivers": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+    }
+    batch_spec = {
+        "feats": plan.p(None, None),
+        "pos": plan.p(None, None),
+        "senders": edge_spec,
+        "receivers": edge_spec,
+    }
+    if n_graphs is not None:
+        batch_sds["graph_ids"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch_sds["energy"] = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        batch_spec["graph_ids"] = plan.p(None)
+        batch_spec["energy"] = plan.p(None)
+    else:
+        batch_sds["labels"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch_sds["node_mask"] = jax.ShapeDtypeStruct((n_nodes,),
+                                                      jnp.float32)
+        batch_spec["labels"] = plan.p(None)
+        batch_spec["node_mask"] = plan.p(None)
+
+    opt = optim.adamw(optim.warmup_cosine(1e-3, 100, 10_000))
+    p_shapes = S.param_shapes(cfg, plan)
+    p_specs = S.param_specs(cfg, plan)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_specs = optim.state_specs(opt, p_specs, p_shapes)
+    state_sds = TrainState(jax.ShapeDtypeStruct((), jnp.int32), p_shapes,
+                           o_shapes, None)
+    state_spec = TrainState(P(), p_specs, o_specs, None)
+    loss = partial(S.loss_fn, cfg=cfg, plan=plan)
+    step = make_train_step(loss, opt)
+    aux_keys = ["loss", "grad_norm"] + (
+        ["accuracy"] if n_graphs is None else [])
+    aux_spec = {k: P() for k in aux_keys}
+    return CellSpec(
+        step_fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_shard_tree(mesh, state_spec),
+                      _shard_tree(mesh, batch_spec)),
+        out_shardings=(_shard_tree(mesh, state_spec),
+                       _shard_tree(mesh, aux_spec)),
+        donate=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_specs(cfg, b: int, plan: ShardPlan):
+    dp = plan.p("dp")
+    dp2 = plan.p("dp", None)
+    if isinstance(cfg, (DLRMConfig, DCNConfig)):
+        sds = {
+            "dense": jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32),
+            "label": jax.ShapeDtypeStruct((b,), jnp.float32),
+        }
+        spec = {"dense": dp2, "sparse": dp2, "label": dp}
+    elif isinstance(cfg, DINConfig):
+        sds = {
+            "hist_items": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+            "hist_cates": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+            "target_item": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "target_cate": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "label": jax.ShapeDtypeStruct((b,), jnp.float32),
+        }
+        spec = {"hist_items": dp2, "hist_cates": dp2, "target_item": dp,
+                "target_cate": dp, "label": dp}
+    else:  # SASRec
+        sds = {
+            "seq": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+            "neg": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+        }
+        spec = {"seq": dp2, "pos": dp2, "neg": dp2}
+    return sds, spec
+
+
+def _recsys_train_cell(cfg, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    b = shape["batch"]
+    opt = optim.adamw(optim.warmup_cosine(1e-3, 1000, 100_000))
+    p_shapes = R.param_shapes(cfg, plan)
+    p_specs = R.param_specs(cfg, plan)
+    batch_sds, batch_spec = _recsys_batch_specs(cfg, b, plan)
+    aux = {"loss": P(), "grad_norm": P()}
+    if not isinstance(cfg, SASRecConfig):
+        aux["accuracy"] = P()
+
+    if isinstance(cfg, (DLRMConfig, DCNConfig)):
+        # sparse-update path: row-wise AdaGrad on the big table — dense
+        # AdamW state/grads for it would be 3x table bytes per chip
+        # (train/sparse_embed.py; EXPERIMENTS.md §Perf)
+        from repro.train.sparse_embed import make_ctr_sparse_train_step
+
+        init_state_fn, step = make_ctr_sparse_train_step(cfg, plan, opt)
+        state_sds = jax.eval_shape(init_state_fn, p_shapes)
+        rest_specs = {k: v for k, v in p_specs.items() if k != "table"}
+        rest_shapes = {k: v for k, v in p_shapes.items() if k != "table"}
+        rows = p_shapes["table"].shape[0]
+        acc_spec = plan.div_p((rows,), "tp")
+        state_spec = TrainState(
+            step=P(), params=p_specs,
+            opt_state={
+                "dense": optim.state_specs(opt, rest_specs, rest_shapes),
+                "embed_acc": acc_spec,
+            },
+            ef_buf=None,
+        )
+    else:
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_specs = optim.state_specs(opt, p_specs, p_shapes)
+        state_sds = TrainState(jax.ShapeDtypeStruct((), jnp.int32),
+                               p_shapes, o_shapes, None)
+        state_spec = TrainState(P(), p_specs, o_specs, None)
+        loss = partial(R.loss_fn, cfg=cfg, plan=plan)
+        step = make_train_step(loss, opt)
+    return CellSpec(
+        step_fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_shard_tree(mesh, state_spec),
+                      _shard_tree(mesh, batch_spec)),
+        out_shardings=(_shard_tree(mesh, state_spec),
+                       _shard_tree(mesh, aux)),
+        donate=(0,),
+    )
+
+
+def _recsys_serve_cell(cfg, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    b = shape["batch"]
+    p_shapes = R.param_shapes(cfg, plan)
+    p_specs = R.param_specs(cfg, plan)
+    if isinstance(cfg, SASRecConfig):
+        batch_sds = {
+            "seq": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+            "target_item": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+        batch_spec = {"seq": plan.p("dp", None), "target_item": plan.p("dp")}
+    else:
+        batch_sds, batch_spec = _recsys_batch_specs(cfg, b, plan)
+        batch_sds.pop("label", None)
+        batch_spec.pop("label", None)
+        if isinstance(cfg, DINConfig):
+            pass
+    def step(params, batch):
+        return R.serve_logits(params, batch, cfg, plan)
+
+    return CellSpec(
+        step_fn=step,
+        args=(p_shapes, batch_sds),
+        in_shardings=(_shard_tree(mesh, p_specs),
+                      _shard_tree(mesh, batch_spec)),
+        out_shardings=NamedSharding(mesh, plan.p("dp")),
+    )
+
+
+def _recsys_retrieval_cell(cfg, plan: ShardPlan, shape: ShapeSpec):
+    mesh = plan.mesh
+    n_dev = plan.size_of(("dp", "tp"))
+    # pad the candidate list so it shards across the whole mesh
+    c = _pad_to(shape["n_candidates"], max(n_dev, 512))
+    k = 100
+    p_shapes = R.param_shapes(cfg, plan)
+    p_specs = R.param_specs(cfg, plan)
+    cand_spec = plan.p(("dp", "tp"))
+    if isinstance(cfg, SASRecConfig):
+        batch_sds = {
+            "seq": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+            "candidates": jax.ShapeDtypeStruct((c,), jnp.int32),
+        }
+        batch_spec = {"seq": plan.p(None, None), "candidates": cand_spec}
+    elif isinstance(cfg, DINConfig):
+        batch_sds = {
+            "hist_items": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+            "hist_cates": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+            "candidates": jax.ShapeDtypeStruct((c,), jnp.int32),
+            "cand_cates": jax.ShapeDtypeStruct((c,), jnp.int32),
+        }
+        batch_spec = {"hist_items": plan.p(None, None),
+                      "hist_cates": plan.p(None, None),
+                      "candidates": cand_spec, "cand_cates": cand_spec}
+    else:
+        batch_sds = {
+            "dense": jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((1, cfg.n_sparse), jnp.int32),
+            "candidates": jax.ShapeDtypeStruct((c,), jnp.int32),
+        }
+        batch_spec = {"dense": plan.p(None, None),
+                      "sparse": plan.p(None, None),
+                      "candidates": cand_spec}
+
+    def step(params, batch):
+        return R.retrieval_logits(params, batch, cfg, plan, k=k)
+
+    return CellSpec(
+        step_fn=step,
+        args=(p_shapes, batch_sds),
+        in_shardings=(_shard_tree(mesh, p_specs),
+                      _shard_tree(mesh, batch_spec)),
+        out_shardings=(NamedSharding(mesh, P()),
+                       NamedSharding(mesh, P())),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ANN (paper) cells
+# ---------------------------------------------------------------------------
+
+
+def _ann_cell(cfg: AnnConfig, plan: ShardPlan, shape: ShapeSpec):
+    from repro.core.distributed import make_sharded_ivf_fn
+
+    mesh = plan.mesh
+    axes = tuple(a for a in mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    b, k = shape["batch"], shape["k"]
+    K = _pad_to(cfg.n_clusters, n_dev)
+    cap = _pad_to(int(np.ceil(2.5 * cfg.n / cfg.n_clusters)), 8)
+    nprobe_local = max(1, cfg.nprobe // n_dev)
+    fn = make_sharded_ivf_fn(mesh, axes, k, nprobe_local, K // n_dev)
+    args = (
+        jax.ShapeDtypeStruct((K, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((K, cap), jnp.int32),
+        jax.ShapeDtypeStruct((K, cap, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((b, cfg.d), jnp.float32),
+    )
+    in_spec = (
+        NamedSharding(mesh, P(axes, None)),
+        NamedSharding(mesh, P(axes, None)),
+        NamedSharding(mesh, P(axes, None, None)),
+        NamedSharding(mesh, P(None, None)),
+    )
+    return CellSpec(
+        step_fn=fn,
+        args=args,
+        in_shardings=in_spec,
+        out_shardings=(NamedSharding(mesh, P(None, None)),
+                       NamedSharding(mesh, P(None, None))),
+        note=f"distributed two-level search: {K} buckets x cap {cap}, "
+             f"nprobe_local={nprobe_local}",
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg, family: str, plan: ShardPlan,
+               shape: ShapeSpec) -> CellSpec:
+    if family == "lm":
+        if shape.dims.get("subquadratic_required"):
+            raise ValueError(
+                "long_500k requires sub-quadratic attention; all assigned "
+                "LM archs are full softmax attention -> listed skip "
+                "(DESIGN.md §5)"
+            )
+        if shape.kind == "train":
+            return _lm_train_cell(cfg, plan, shape)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(cfg, plan, shape)
+        return _lm_decode_cell(cfg, plan, shape)
+    if family == "gnn":
+        return _gnn_cell(cfg, plan, shape)
+    if family == "recsys":
+        if shape.kind == "train":
+            return _recsys_train_cell(cfg, plan, shape)
+        if shape.kind == "retrieval":
+            return _recsys_retrieval_cell(cfg, plan, shape)
+        return _recsys_serve_cell(cfg, plan, shape)
+    if family == "ann":
+        return _ann_cell(cfg, plan, shape)
+    raise ValueError(family)

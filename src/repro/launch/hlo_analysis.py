@@ -1,0 +1,276 @@
+"""Trip-count-aware HLO accounting for the roofline.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~L×
+(verified: scan vs unrolled ratio == trip count).  This module re-derives
+the three roofline inputs from the post-optimization HLO text:
+
+  * matmul FLOPs: every ``dot`` instruction, 2 * prod(result) * contraction
+    size, weighted by the product of enclosing while trip counts;
+  * HBM byte proxy: sum of instruction *result* bytes (x2 for read+write)
+    over non-trivial ops, same weighting — counts the per-layer
+    dynamic-slice reads of stacked scan params, fusion outputs, etc.;
+  * collective bytes by kind (all-reduce doubled for the ring), weighted.
+
+Trip counts come from the integer constant in each while's condition
+computation.  Methodology notes recorded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_DOT_RE = re.compile(
+    r"dot\(\s*%?([\w\.\-]+),")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose results genuinely stream through HBM; aliasing ops
+# (get-tuple-element, bitcast, tuple, parameter) and op-fusable elementwise
+# chains (a TPU compiler fuses those into neighbors) are excluded.
+_MEM_OPS = ("fusion", "dot", "copy", "dynamic-slice",
+            "dynamic-update-slice", "reduce", "convert", "concatenate",
+            "gather", "scatter", "sort", "pad", "reduce-window",
+            "select-and-scatter", "transpose",
+            *_COLLECTIVES)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _result_bytes(rhs: str) -> int:
+    """Bytes of the result type(s) at the start of an instruction RHS."""
+    # result types precede the op name: 'f32[8,512]{1,0} dot(' or a tuple
+    head = rhs.split("(", 1)[0]
+    return sum(
+        _shape_elems(m.group(2)) * _DTYPE_BYTES[m.group(1)]
+        for m in _SHAPE_RE.finditer(head)
+    )
+
+
+def _split_computations(txt: str) -> tuple[dict, str]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith(" "):
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+        else:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def analyze_hlo(txt: str, default_trip: int = 1) -> dict:
+    comps, entry = _split_computations(txt)
+    if entry is None:
+        return {"error": "no ENTRY computation found"}
+
+    # while structure: parent comp -> [(cond, body)]
+    whiles = defaultdict(list)
+    for name, instrs in comps.items():
+        for s in instrs:
+            m = _WHILE_RE.search(s)
+            if m:
+                whiles[name].append((m.group(1), m.group(2)))
+
+    def trip_count(cond: str) -> int:
+        consts = [int(c) for ins in comps.get(cond, ())
+                  for c in _CONST_RE.findall(ins)]
+        consts = [c for c in consts if c > 1]
+        return max(consts) if consts else default_trip
+
+    # control multiplier propagation (entry + nested while bodies)
+    mult = {entry: 1.0}
+    stack = [entry]
+    control = {entry}
+    while stack:
+        c = stack.pop()
+        for cond, body in whiles.get(c, ()):
+            t = trip_count(cond)
+            mult[body] = mult.get(body, 0.0) + mult[c] * t
+            if body not in control:
+                control.add(body)
+                stack.append(body)
+
+    flops = 0.0
+    mem_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+    trips = {b: mult[b] for b in control if b != entry}
+    # CPU-backend artifact: XLA CPU has no native bf16 GEMM, so it hoists
+    # f32 conversions of whole bf16 weight stacks out of the layer scan —
+    # multi-GiB f32 buffers a TPU (native bf16 MXU) never materializes.
+    # Quantified here so the roofline reports TPU-adjusted memory.
+    f32_hoist_bytes = 0.0
+
+    for cname in control:
+        w = mult[cname]
+        symtab = {}
+        for s in comps[cname]:
+            mi = _INSTR_RE.match(s)
+            if not mi:
+                continue
+            symtab[mi.group(1)] = mi.group(2)
+        for s in comps[cname]:
+            mi = _INSTR_RE.match(s)
+            if not mi:
+                continue
+            rhs = mi.group(2)
+            rb = _result_bytes(rhs)
+            head_toks = rhs.split("(", 1)[0].split()
+            opname = head_toks[-1] if head_toks else ""
+            opbase = opname.replace("-start", "").replace("-done", "")
+            if opbase in _MEM_OPS and not opname.endswith("-done"):
+                mem_bytes += 2.0 * rb * w          # read+write proxy
+            if cname == entry and rb >= 1 << 30 \
+                    and ("convert" in mi.group(1) or opbase == "convert") \
+                    and rhs.lstrip().startswith("f32"):
+                f32_hoist_bytes += rb
+            # collectives (skip -done halves of async pairs)
+            if opbase in _COLLECTIVES and not opname.endswith("-done"):
+                factor = 2.0 if opbase == "all-reduce" else 1.0
+                coll[opbase] += factor * rb * w
+                coll_counts[opbase] += 1
+            # dot flops
+            dm = _DOT_RE.search(rhs)
+            if dm and " dot(" in " " + rhs:
+                out_elems = 0
+                head = rhs.split("(", 1)[0]
+                for m in _SHAPE_RE.finditer(head):
+                    out_elems += _shape_elems(m.group(2))
+                lhs_name = dm.group(1)
+                cdims = _LHS_CDIMS_RE.search(rhs)
+                k = 1
+                if cdims and lhs_name in symtab:
+                    lhs_head = symtab[lhs_name].split("(", 1)[0]
+                    lm = _SHAPE_RE.search(lhs_head)
+                    if lm:
+                        lhs_dims = [int(d) for d in
+                                    lm.group(2).split(",") if d]
+                        for ci in cdims.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                k *= lhs_dims[int(ci)]
+                flops += 2.0 * out_elems * k * w
+
+    coll_total = sum(coll.values())
+    return {
+        "matmul_flops": flops,
+        "mem_bytes_proxy": mem_bytes,
+        "collective_bytes": {**{k: v for k, v in coll.items()},
+                             "total": coll_total},
+        "collective_counts": coll_counts,
+        "while_trip_multipliers": {k: v for k, v in sorted(trips.items())},
+        "n_computations": len(comps),
+        "entry_f32_weight_convert_bytes": f32_hoist_bytes,
+    }
+
+
+def peak_liveness(txt: str, top_n: int = 12) -> dict:
+    """Approximate peak live bytes per control computation from the
+    *scheduled* HLO (is_scheduled=true): walk instructions in order, free a
+    buffer after its last textual use.  Reports the top live buffers at the
+    peak — the tool that finds which tensors blow the 16 GB budget."""
+    comps, entry = _split_computations(txt)
+    whiles = {}
+    for name, instrs in comps.items():
+        for s in instrs:
+            m = _WHILE_RE.search(s)
+            if m:
+                whiles.setdefault(name, []).append(m.group(2))
+    control = {entry}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for body in whiles.get(c, ()):
+            if body not in control:
+                control.add(body)
+                stack.append(body)
+
+    use_re = re.compile(r"%([\w\.\-]+)")
+    out = {}
+    for cname in control:
+        instrs = comps[cname]
+        sizes, defs, last_use = {}, {}, {}
+        for idx, s in enumerate(instrs):
+            mi = _INSTR_RE.match(s)
+            if not mi:
+                continue
+            name, rhs = mi.group(1), mi.group(2)
+            head_toks = rhs.split("(", 1)[0].split()
+            op = head_toks[-1] if head_toks else ""
+            if op in ("get-tuple-element", "bitcast", "tuple",
+                      "parameter", "constant"):
+                continue          # aliases / module inputs
+            sm = _SHAPE_RE.search(rhs.split("(", 1)[0])
+            sizes[name] = _result_bytes(rhs)
+            defs[name + "@shape"] = sm.group(0) if sm else "?"
+            defs[name] = idx
+            last_use[name] = idx
+            for used in use_re.findall(rhs):
+                if used in last_use:
+                    last_use[used] = idx
+        peak, live, cur = 0, {}, 0
+        peak_set = {}
+        frees = {}
+        for name, lu in last_use.items():
+            frees.setdefault(lu, []).append(name)
+        for idx in range(len(instrs)):
+            mi = _INSTR_RE.match(instrs[idx])
+            if mi and mi.group(1) in sizes:
+                n = mi.group(1)
+                live[n] = sizes[n]
+                cur += sizes[n]
+            if cur > peak:
+                peak = cur
+                peak_set = dict(live)
+            for n in frees.get(idx, ()):
+                if n in live:
+                    cur -= live.pop(n)
+        top = sorted(peak_set.items(), key=lambda kv: -kv[1])[:top_n]
+        out[cname] = {
+            "peak_bytes": peak,
+            "top_buffers": [
+                (n, b, defs.get(n + "@shape", "?"))
+                for n, b in top if b > 1 << 20
+            ],
+        }
+    return out

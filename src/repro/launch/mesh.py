@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  The dry-run (and only the dry-run) forces 512 host
+devices; tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import (
+    MULTI_POD_PLAN,
+    SINGLE_POD_PLAN,
+    ShardPlan,
+)
+
+__all__ = ["make_production_mesh", "make_plan", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devs)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (dryrun.py does this)"
+        )
+    dev_array = np.asarray(devs[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_plan(mesh: Mesh) -> ShardPlan:
+    """Bind the role plan matching a mesh's axis names."""
+    if "pod" in mesh.axis_names:
+        return MULTI_POD_PLAN.with_mesh(mesh)
+    return SINGLE_POD_PLAN.with_mesh(mesh)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many fake devices a test forced."""
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)

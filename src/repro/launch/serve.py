@@ -1,0 +1,73 @@
+"""Serving launcher for the paper's ANN corpora.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch sift-1m --scale 0.05 \
+      --n-requests 256
+
+Builds the arch's configured two-level index over a synthetic corpus at
+``--scale`` of the paper size and serves batched requests through the
+micro-batching engine, reporting recall + latency percentiles (the paper's
+P90 < 80 ms / recall@10 > 0.8 bar).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="sift-1m",
+                    choices=["radio-station", "sift-1m", "deep-10m"])
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--n-requests", type=int, default=256)
+    ap.add_argument("--nprobe", type=int, default=None)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.core.brute import brute_search
+    from repro.core.metrics import recall_at_k
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.data.synthetic import make_corpus, make_queries
+    from repro.serve.engine import ServingEngine
+
+    cfg, _ = get_arch(args.arch)
+    name = {"radio-station": "radio_station", "sift-1m": "sift",
+            "deep-10m": "deep"}[args.arch]
+    db = np.asarray(make_corpus(name, scale=args.scale, seed=0))
+    n = db.shape[0]
+    n_clusters = max(16, int(cfg.n_clusters * min(1.0, args.scale * 2)))
+    print(f"{args.arch}: corpus {n} x {db.shape[1]}, "
+          f"{n_clusters} buckets, top={cfg.top} bottom={cfg.bottom}")
+    t0 = time.time()
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=n_clusters, top=cfg.top, bottom=cfg.bottom,
+        kmeans_iters=6, kmeans_minibatch=min(131072, n)))
+    print(f"built in {time.time() - t0:.1f}s")
+
+    nprobe = args.nprobe or cfg.nprobe
+
+    def search_fn(qs):
+        d, i, _ = idx.search(qs, args.k, nprobe=nprobe)
+        return d, i
+
+    eng = ServingEngine(search_fn, max_batch=64, max_wait_ms=3.0)
+    q = make_queries(db, args.n_requests, seed=1)
+    futs = [eng.submit(q[j]) for j in range(args.n_requests)]
+    outs = [f.get(timeout=300) for f in futs]
+    st = eng.stats()
+    eng.close()
+    ids = np.stack([o[1] for o in outs])
+    _, gt = brute_search(q, db, args.k)
+    r = recall_at_k(ids, gt)
+    print(f"recall@{args.k} = {r:.3f}  "
+          f"p50={st.p50_ms:.1f}ms p90={st.p90_ms:.1f}ms "
+          f"p99={st.p99_ms:.1f}ms")
+    print(f"paper bars: recall>0.8 {'PASS' if r > 0.8 else 'FAIL'}; "
+          f"P90<80ms {'PASS' if st.p90_ms < 80 else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --steps 100 --reduced            # CPU-sized smoke run
+  ... --mesh single                    # sharded (needs real devices)
+
+With ``--reduced`` (default on CPU) the arch's same-family reduced config
+trains for real; full configs require the target mesh.  Checkpoints,
+watchdog, and deterministic restart come from `train.loop`.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.train import checkpoint as C
+    from repro.train import optim
+    from repro.train.fault import Watchdog
+    from repro.train.loop import init_state, make_train_step, train
+
+    cfg, family = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+
+    if family == "lm":
+        from repro.data.lm import LMStream
+        from repro.models import transformer as M
+
+        params = M.init(cfg, key)
+        stream = LMStream(cfg.vocab, args.seq, args.batch, seed=0)
+        batch_at = stream.batch_at
+        loss = lambda p, b: M.loss_fn(p, b, cfg)
+    elif family == "recsys":
+        from repro.data.recsys import batch_for
+        from repro.models import recsys as M
+
+        params = M.init(cfg, key)
+        batch_at = lambda step: batch_for(cfg, args.batch, step)
+        loss = lambda p, b: M.loss_fn(p, b, cfg)
+    elif family == "gnn":
+        import dataclasses
+
+        from repro.data.graph import make_graph
+        from repro.models import schnet as M
+
+        cfg = dataclasses.replace(cfg, d_feat=32, n_out=8)
+        params = M.init(cfg, key)
+        g = make_graph(2000, 10000, 32, n_classes=8, seed=0)
+        snd, rcv = g.edge_list()
+        fixed = {"feats": g.feats, "pos": g.pos, "senders": snd,
+                 "receivers": rcv, "labels": g.labels}
+        batch_at = lambda step: fixed
+        loss = lambda p, b: M.loss_fn(p, b, cfg)
+    else:
+        raise SystemExit(f"train launcher does not apply to family "
+                         f"{family!r} (ANN corpora are built, not trained)")
+
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{args.arch} ({'reduced' if args.reduced else 'full'}): "
+          f"{n / 1e6:.2f}M params")
+    opt = optim.adamw(optim.warmup_cosine(3e-4, 20, args.steps))
+    state = init_state(params, opt)
+    if args.resume and args.ckpt_dir:
+        last = C.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = C.restore(args.ckpt_dir, last, state)
+            print(f"resumed from step {last}")
+    wd = Watchdog()
+    res = train(state, make_train_step(loss, opt), batch_at, args.steps,
+                log_every=args.log_every, ckpt_dir=args.ckpt_dir,
+                watchdog=wd)
+    for h in res.history:
+        print("  ", h)
+    print(f"stragglers: {len(wd.events)}")
+
+
+if __name__ == "__main__":
+    main()

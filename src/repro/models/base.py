@@ -1,0 +1,98 @@
+"""Functional parameter system (no flax in this environment).
+
+A model describes its parameters once, through a ``mk`` callback::
+
+    def params(cfg, mk):
+        return {"w": mk("w", (d, f), P("data", "model"), init="fanin"), ...}
+
+and two interpreters consume the description:
+
+  * ``build_params(fn, cfg, key)``  -> pytree of initialized jnp arrays
+  * ``build_specs(fn, cfg)``        -> identically-structured PartitionSpec
+                                       pytree (used for in_shardings and for
+                                       optimizer-state sharding)
+
+Param rngs are derived by folding a stable hash of the parameter name into
+the root key, so adding parameters never reshuffles existing inits.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["build_params", "build_specs", "P", "count_params",
+           "cast_tree", "tree_bytes"]
+
+
+def _name_fold(key, name: str):
+    h = int.from_bytes(hashlib.md5(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def _init_array(key, shape, init, dtype):
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if isinstance(init, (int, float)):
+        return jnp.full(shape, float(init), dtype)
+    if init == "fanin":  # variance scaling, fan_in, truncated-normal-ish
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = (1.0 / max(1, fan_in)) ** 0.5
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+    if isinstance(init, tuple) and init[0] == "normal":
+        return (jax.random.normal(key, shape) * init[1]).astype(dtype)
+    raise ValueError(f"unknown init {init!r}")
+
+
+def build_params(fn: Callable, cfg, key, dtype=jnp.float32):
+    def mk(name, shape, spec, init="fanin", param_dtype=None):
+        del spec
+        return _init_array(
+            _name_fold(key, name), shape, init, param_dtype or dtype
+        )
+
+    return fn(cfg, mk)
+
+
+def build_specs(fn: Callable, cfg):
+    def mk(name, shape, spec, init="fanin", param_dtype=None):
+        del name, shape, init, param_dtype
+        return spec if spec is not None else P()
+
+    return fn(cfg, mk)
+
+
+def build_shapes(fn: Callable, cfg, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    def mk(name, shape, spec, init="fanin", param_dtype=None):
+        del name, spec, init
+        return jax.ShapeDtypeStruct(shape, param_dtype or dtype)
+
+    return fn(cfg, mk)
+
+
+def count_params(tree) -> int:
+    return sum(
+        int(jnp.size(x)) if hasattr(x, "size") else 0
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype")
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x,
+        tree,
+    )

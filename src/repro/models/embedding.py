@@ -1,0 +1,51 @@
+"""EmbeddingBag and sharded-table helpers.
+
+JAX has no native EmbeddingBag (taxonomy §RecSys): we implement it as
+``jnp.take`` + mask/segment reduction.  Table sharding policy (DESIGN.md
+§4): column-shard (embed dim over tp) when dim % tp == 0 — lookups stay
+local, each chip holds a dim-slice of every row; otherwise row-shard over
+tp (XLA SPMD turns the gather into a one-hot-select + all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag", "take_embeddings", "concat_table_offsets"]
+
+
+def take_embeddings(table, ids):
+    """Row gather with -1 = padding (returns zeros)."""
+    safe = jnp.maximum(ids, 0)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0.0)
+
+
+def embedding_bag(table, ids, *, weights=None, mode: str = "sum"):
+    """ids (..., L) with -1 padding -> (..., D) reduced embeddings."""
+    e = take_embeddings(table, ids)                       # (..., L, D)
+    if weights is not None:
+        e = e * weights[..., None]
+    if mode == "sum":
+        return e.sum(axis=-2)
+    if mode == "mean":
+        n = jnp.maximum((ids >= 0).sum(axis=-1, keepdims=True), 1)
+        return e.sum(axis=-2) / n
+    if mode == "max":
+        e = jnp.where((ids >= 0)[..., None], e, -jnp.inf)
+        out = e.max(axis=-2)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def concat_table_offsets(table_sizes):
+    """Offsets for fusing per-feature tables into one big table.
+
+    MLPerf-DLRM-style: 26 tables become one (sum_rows, D) array; feature j's
+    id i maps to row offsets[j] + i — one gather instead of 26.
+    """
+    import numpy as np
+
+    off = np.zeros(len(table_sizes), dtype=np.int64)
+    np.cumsum(np.asarray(table_sizes)[:-1], out=off[1:])
+    return off, int(sum(table_sizes))

@@ -1,0 +1,78 @@
+"""Shared NN layers: RMSNorm, RoPE, activations, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "rope_tables", "swiglu", "gelu_mlp",
+           "softmax_xent", "shifted_softplus"]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in fp32, cast back to input dtype (LLaMA convention)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_tables(positions, dim: int, theta: float = 1e6):
+    """(..., dim/2) cos/sin tables for rotate-half RoPE."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv     # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, cos, sin):
+    """Rotate-half RoPE.
+
+    x: (..., S, H, dim); cos/sin: (S, dim/2) or (B, S, dim/2) — a head axis
+    is inserted second-to-last so tables broadcast over heads, and leading
+    axes broadcast per normal numpy rules.
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = jnp.expand_dims(cos, -2)
+    sin = jnp.expand_dims(sin, -2)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x, w_up, w_down):
+    """2-matrix GELU MLP (granite-34b code-model style)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up))
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def shifted_softplus(x):
+    """SchNet's ssp(x) = ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def softmax_xent(logits, labels, *, z_loss: float = 0.0, mask=None):
+    """Token-mean cross entropy in fp32 with optional z-loss.
+
+    logits (..., V) any float dtype; labels int32 (...); mask broadcastable
+    to labels (1 = count).  Returns (loss_scalar, aux dict).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(lf, -1) == labels) * mask).sum() / denom
+    return loss, {"nll": loss, "accuracy": acc}

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN (DeepSeek-V3 / Kimi-K2 style).
+
+Router: sigmoid scores + aux-loss-free selection bias (bias enters top-k
+selection only, not the gate value); selected gates renormalized and scaled
+by ``routed_scaling``; one always-on shared expert.
+
+Dispatch is GShard-style capacity-based, but built with the *sort* trick
+instead of (T, E, C) one-hot einsums (those are O(T·E·C) memory): per
+dispatch group, token→expert assignments are sorted by expert id, ranks
+within each expert come from a searchsorted prefix, and tokens beyond
+capacity C drop (`.at[].set(mode="drop")`).  The gathered (G, E, C, D)
+activation is resharded group-major → expert-major with one explicit
+``with_sharding_constraint``, which XLA lowers to the EP all-to-all on the
+``ep`` mesh axes (DESIGN.md §4).  Experts whose id >= n_experts are mesh
+padding (Kimi: 384 -> 512) and receive no tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, MoEConfig
+from repro.distributed.sharding import ShardPlan
+from repro.models.layers import swiglu
+
+__all__ = ["moe_params", "moe_capacity", "moe_ffn"]
+
+
+def moe_params(cfg: LMConfig, mk, plan: ShardPlan, prefix: str, stack: int):
+    """Parameter description for ``stack`` scanned MoE layers."""
+    m: MoEConfig = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff, m.e_pad
+    fs = m.n_shared * m.d_ff
+    L = (stack,)
+    pp = lambda *dims: plan.p(None, *dims)   # leading layer dim unsharded
+
+    return {
+        "router": mk(f"{prefix}/router", L + (d, m.n_experts),
+                     pp(None, None), init=("normal", 0.02),
+                     param_dtype=jnp.float32),
+        "router_bias": mk(f"{prefix}/router_bias", L + (m.n_experts,),
+                          pp(None), init="zeros",
+                          param_dtype=jnp.float32),
+        "w_gate": mk(f"{prefix}/w_gate", L + (e, d, f),
+                     pp("ep", None, None)),
+        "w_up": mk(f"{prefix}/w_up", L + (e, d, f),
+                   pp("ep", None, None)),
+        "w_down": mk(f"{prefix}/w_down", L + (e, f, d),
+                     pp("ep", None, None)),
+        "sh_gate": mk(f"{prefix}/sh_gate", L + (d, fs),
+                      pp("fsdp", "tp")),
+        "sh_up": mk(f"{prefix}/sh_up", L + (d, fs), pp("fsdp", "tp")),
+        "sh_down": mk(f"{prefix}/sh_down", L + (fs, d), pp("tp", "fsdp")),
+    }
+
+
+def moe_capacity(cfg: LMConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _route(x, router_w, router_bias, moe_cfg: MoEConfig):
+    """(T, D) -> (topk ids (T,K), gates fp32 (T,K))."""
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    if moe_cfg.score_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    sel_scores = scores + router_bias[None, :]     # bias: selection only
+    _, top_i = jax.lax.top_k(sel_scores, moe_cfg.top_k)
+    top_s = jnp.take_along_axis(scores, top_i, axis=1)
+    gates = top_s / jnp.maximum(top_s.sum(-1, keepdims=True), 1e-9)
+    gates = gates * moe_cfg.routed_scaling
+    return top_i.astype(jnp.int32), gates
+
+
+def _dispatch_indices(top_i, e_pad: int, capacity: int):
+    """Sort-based (E, C) token-slot table + per-slot flat assignment rank.
+
+    Returns (dispatch (E, C) int32 token ids with T=dummy, slot_of (T*K,)
+    pairs for combine: (expert, rank, keep)).
+    """
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                              # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    ranks = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    tok = (order // k).astype(jnp.int32)
+    dispatch = jnp.full((e_pad, capacity), t, jnp.int32)
+    dispatch = dispatch.at[sorted_e, ranks].set(tok, mode="drop")
+    return dispatch, (sorted_e, ranks, order)
+
+
+def moe_ffn(p, x, cfg: LMConfig, plan: ShardPlan):
+    """x: (B, S, D) -> (B, S, D).  p: one layer's slice of ``moe_params``."""
+    m = cfg.moe
+    b, s, d = x.shape
+    g = max(1, cfg.moe_groups)
+    t_all = b * s
+    assert t_all % g == 0, (t_all, g)
+    tg = t_all // g
+    cap = moe_capacity(cfg, tg)
+    xt = x.reshape(g, tg, d)
+
+    def group_dispatch(x_g):
+        top_i, gates = _route(x_g, p["router"], p["router_bias"], m)
+        dispatch, (sorted_e, ranks, order) = _dispatch_indices(
+            top_i, m.e_pad, cap
+        )
+        x_pad = jnp.concatenate(
+            [x_g, jnp.zeros((1, d), x_g.dtype)], axis=0
+        )
+        x_e = x_pad[dispatch]                               # (E, C, D)
+        gate_flat = gates.reshape(-1)[order]
+        g_e = jnp.zeros((m.e_pad, cap), jnp.float32)
+        g_e = g_e.at[sorted_e, ranks].set(gate_flat, mode="drop")
+        return x_e, g_e, dispatch
+
+    x_e, g_e, dispatch = jax.vmap(group_dispatch)(xt)       # (G, E, C, D)
+
+    # two-stage reshard (DESIGN.md §4): materialize the dispatch gather
+    # (dp x tp)-sharded first — without this XLA materializes a per-chip
+    # (1, E, C, D) tile (~10 GB on the giants) before the all-to-all.
+    x_e = plan.constrain(x_e, "dp", "tp", None, None)
+    # group-major -> expert-major: the EP all-to-all (groups stay sharded
+    # over the pod axis; experts shard within the pod)
+    x_e = plan.constrain(x_e, "pp", "ep", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y_e = plan.constrain(y_e, "pp", "ep", None, None)
+    y_e = plan.constrain(y_e, "dp", "tp", None, None)       # back to groups
+
+    def group_combine(y_g, g_g, dispatch):
+        w = (y_g * g_g[..., None].astype(y_g.dtype)).reshape(-1, d)
+        out = jnp.zeros((tg + 1, d), y_g.dtype)
+        out = out.at[dispatch.reshape(-1)].add(w)
+        return out[:tg]
+
+    y = jax.vmap(group_combine)(y_e, g_e, dispatch)         # (G, Tg, D)
+    y = y.reshape(b, s, d)
+
+    # always-on shared expert (FSDP-gather its weights before use)
+    y = y + swiglu(
+        x,
+        plan.constrain(p["sh_gate"], None, "tp"),
+        plan.constrain(p["sh_up"], None, "tp"),
+        plan.constrain(p["sh_down"], "tp", None),
+    )
+    return y

@@ -1,0 +1,373 @@
+"""RecSys ranking/retrieval models: DLRM, DCN-v2, DIN, SASRec.
+
+Shared anatomy (taxonomy §RecSys): huge sparse embedding tables ->
+feature-interaction op (dot / cross / target-attn / causal self-attn) ->
+small MLP.  Tables: DLRM/DCN fuse all 26 Criteo tables into one array with
+offsets (one gather) column-sharded over tp; DIN/SASRec tables (dims 18/50,
+% 16 != 0) row-shard over tp.
+
+``retrieval_logits`` is the paper-integration point: factorized models
+(DIN/SASRec) score 1 M candidates as user·item — exactly the paper's ANN
+problem; the serving layer can swap the exact dot-top-k for the two-level
+index (DESIGN.md §5).  DLRM/DCN score candidates through the full joint
+MLP (exact bulk scoring, shardable over candidates).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DCNConfig, DINConfig, DLRMConfig, SASRecConfig
+from repro.distributed.sharding import ShardPlan
+from repro.models import base
+from repro.models.attention import attention
+from repro.models.embedding import concat_table_offsets, take_embeddings
+
+__all__ = ["init", "param_specs", "param_shapes", "loss_fn",
+           "serve_logits", "retrieval_logits"]
+
+
+def _mlp_params(mk, plan, prefix, dims):
+    p = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        # shard a dim only when the mesh axis divides it AND the matrix is
+        # big enough to matter: sharding DIN's 144x80 attention MLP over tp
+        # made XLA all-gather the (1M, 100, 144) candidate activations
+        # instead of the 46 KB weight (3.6 GB/chip — EXPERIMENTS.md §Perf)
+        if a * b >= 1 << 20:
+            w_spec = plan.div_p((a, b), "fsdp", "tp")
+        else:
+            w_spec = plan.p(None, None)
+        p[f"w{i}"] = mk(f"{prefix}/w{i}", (a, b), w_spec)
+        p[f"b{i}"] = mk(f"{prefix}/b{i}", (b,), plan.p(None), init="zeros")
+    return p
+
+
+def _mlp_apply(p, x, *, act=jax.nn.relu, final_act=None):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_params(cfg: DLRMConfig, mk, plan):
+    _, total = concat_table_offsets(cfg.table_sizes)
+    d = cfg.embed_dim
+    return {
+        "table": mk("table", (total, d), plan.div_p((total, d), None, "tp"),
+                    init=("normal", 0.01)),
+        "bot": _mlp_params(mk, plan, "bot",
+                           (cfg.n_dense,) + tuple(cfg.bot_mlp)),
+        "top": _mlp_params(mk, plan, "top",
+                           (_dlrm_top_in(cfg),) + tuple(cfg.top_mlp)),
+    }
+
+
+def _dlrm_top_in(cfg: DLRMConfig):
+    f = cfg.n_sparse + 1
+    return f * (f - 1) // 2 + cfg.embed_dim
+
+
+def _dlrm_forward(params, dense, sparse, cfg: DLRMConfig, plan, e=None):
+    """dense (B, 13), sparse (B, 26) global-offset ids -> logit (B,).
+
+    ``e`` optionally carries pre-gathered embeddings — the sparse-update
+    training path differentiates w.r.t. the gathered rows instead of the
+    whole table (train/sparse_embed.py).
+    """
+    if e is None:
+        e = take_embeddings(params["table"], sparse)       # (B, 26, D)
+    z0 = _mlp_apply(params["bot"], dense, act=jax.nn.relu,
+                    final_act=jax.nn.relu)                 # (B, D)
+    z = jnp.concatenate([z0[:, None, :], e], axis=1)       # (B, 27, D)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)               # (B, 27, 27)
+    f = z.shape[1]
+    iu, ju = np.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]                                # (B, 351)
+    x = jnp.concatenate([z0, flat], axis=1)
+    return _mlp_apply(params["top"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+
+
+def _dcn_params(cfg: DCNConfig, mk, plan):
+    _, total = concat_table_offsets(cfg.table_sizes)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    p = {
+        "table": mk("table", (total, cfg.embed_dim),
+                    plan.div_p((total, cfg.embed_dim), None, "tp"),
+                    init=("normal", 0.01)),
+        "mlp": _mlp_params(mk, plan, "mlp", (d0,) + tuple(cfg.mlp) + (1,)),
+    }
+    for i in range(cfg.n_cross_layers):
+        p[f"cross_w{i}"] = mk(f"cross_w{i}", (d0, d0),
+                              plan.div_p((d0, d0), "fsdp", "tp"))
+        p[f"cross_b{i}"] = mk(f"cross_b{i}", (d0,), plan.p(None),
+                              init="zeros")
+    return p
+
+
+def _dcn_forward(params, dense, sparse, cfg: DCNConfig, plan, e=None):
+    if e is None:
+        e = take_embeddings(params["table"], sparse)       # (B, 26, D)
+    x0 = jnp.concatenate([dense, e.reshape(e.shape[0], -1)], axis=1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        xw = x @ params[f"cross_w{i}"] + params[f"cross_b{i}"]
+        x = x0 * xw + x                                     # DCN-v2 cross
+    return _mlp_apply(params["mlp"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+
+
+def _din_params(cfg: DINConfig, mk, plan):
+    d = cfg.embed_dim
+    att_in = 4 * 2 * d                                      # [et,eh,et-eh,et*eh]
+    mlp_in = 2 * 2 * d                                      # [user_sum, target]
+    return {
+        "item_table": mk("item_table", (cfg.n_items, d),
+                         plan.div_p((cfg.n_items, d), "tp", None),
+                         init=("normal", 0.01)),
+        "cate_table": mk("cate_table", (cfg.n_cates, d), plan.p(None, None),
+                         init=("normal", 0.01)),
+        "att": _mlp_params(mk, plan, "att",
+                           (att_in,) + tuple(cfg.attn_mlp) + (1,)),
+        "mlp": _mlp_params(mk, plan, "mlp",
+                           (mlp_in,) + tuple(cfg.mlp) + (1,)),
+    }
+
+
+def _din_user_embed(params, hist_items, hist_cates, target_e):
+    """Target attention over history -> (B, 2D) user interest vector."""
+    eh = jnp.concatenate(
+        [take_embeddings(params["item_table"], hist_items),
+         take_embeddings(params["cate_table"], hist_cates)], axis=-1,
+    )                                                       # (B, L, 2D)
+    et = target_e[:, None, :]                               # (B, 1, 2D)
+    etb = jnp.broadcast_to(et, eh.shape)
+    att_in = jnp.concatenate([etb, eh, etb - eh, etb * eh], axis=-1)
+    scores = _mlp_apply(params["att"], att_in,
+                        act=jax.nn.sigmoid)[..., 0]         # (B, L)
+    scores = jnp.where(hist_items >= 0, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return (w[..., None] * eh).sum(axis=1)                  # (B, 2D)
+
+
+def _din_forward(params, batch, cfg: DINConfig, plan):
+    et = jnp.concatenate(
+        [take_embeddings(params["item_table"], batch["target_item"]),
+         take_embeddings(params["cate_table"], batch["target_cate"])],
+        axis=-1,
+    )                                                       # (B, 2D)
+    user = _din_user_embed(params, batch["hist_items"], batch["hist_cates"],
+                           et)
+    x = jnp.concatenate([user, et], axis=-1)
+    return _mlp_apply(params["mlp"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# SASRec
+# ---------------------------------------------------------------------------
+
+
+def _sasrec_params(cfg: SASRecConfig, mk, plan):
+    d = cfg.embed_dim
+    L = (cfg.n_blocks,)
+    sp = lambda *dims: plan.p(None, *dims)
+    # +1 pad row for -1 ids; round rows up so tp row-sharding divides
+    tp_n = max(plan.size_of("tp"), 1)
+    rows = -(-(cfg.n_items + 1) // tp_n) * tp_n
+    return {
+        "item_table": mk("item_table", (rows, d),
+                         plan.div_p((rows, d), "tp", None),
+                         init=("normal", 0.01)),
+        "pos_table": mk("pos_table", (cfg.seq_len, d), plan.p(None, None),
+                        init=("normal", 0.01)),
+        "blocks": {
+            "ln1": mk("blocks/ln1", L + (d,), sp(None), init="ones"),
+            "ln2": mk("blocks/ln2", L + (d,), sp(None), init="ones"),
+            "w_q": mk("blocks/w_q", L + (d, cfg.n_heads, d // cfg.n_heads),
+                      sp(None, None, None)),
+            "w_k": mk("blocks/w_k", L + (d, cfg.n_heads, d // cfg.n_heads),
+                      sp(None, None, None)),
+            "w_v": mk("blocks/w_v", L + (d, cfg.n_heads, d // cfg.n_heads),
+                      sp(None, None, None)),
+            "w_o": mk("blocks/w_o", L + (cfg.n_heads, d // cfg.n_heads, d),
+                      sp(None, None, None)),
+            "f_w1": mk("blocks/f_w1", L + (d, d), sp(None, None)),
+            "f_b1": mk("blocks/f_b1", L + (d,), sp(None), init="zeros"),
+            "f_w2": mk("blocks/f_w2", L + (d, d), sp(None, None)),
+            "f_b2": mk("blocks/f_b2", L + (d,), sp(None), init="zeros"),
+        },
+        "final_ln": mk("final_ln", (d,), plan.p(None), init="ones"),
+    }
+
+
+def _sasrec_hidden(params, seq, cfg: SASRecConfig, plan):
+    """seq (B, L) item ids (-1 pad) -> hidden (B, L, D)."""
+    from repro.models.layers import rms_norm
+
+    x = take_embeddings(params["item_table"], seq)
+    x = x + params["pos_table"][None, : seq.shape[1]]
+    x = jnp.where((seq >= 0)[..., None], x, 0.0)
+    for i in range(cfg.n_blocks):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        h = rms_norm(x, bp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["w_q"])
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["w_k"])
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["w_v"])
+        o = attention(q, k, v, causal=True,
+                      kv_mask=(seq >= 0).astype(jnp.int32))
+        x = x + jnp.einsum("bshk,hkd->bsd", o, bp["w_o"])
+        h = rms_norm(x, bp["ln2"])
+        f = jax.nn.relu(h @ bp["f_w1"] + bp["f_b1"])
+        x = x + f @ bp["f_w2"] + bp["f_b2"]
+    from repro.models.layers import rms_norm as _rn
+
+    return _rn(x, params["final_ln"])
+
+
+def _sasrec_loss(params, batch, cfg: SASRecConfig, plan):
+    """BCE over (positive next item, sampled negative) per position."""
+    h = _sasrec_hidden(params, batch["seq"], cfg, plan)     # (B, L, D)
+    pos_e = take_embeddings(params["item_table"], batch["pos"])
+    neg_e = take_embeddings(params["item_table"], batch["neg"])
+    pos_s = (h * pos_e).sum(-1)
+    neg_s = (h * neg_e).sum(-1)
+    mask = (batch["pos"] >= 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(pos_s) + jax.nn.log_sigmoid(-neg_s))
+    loss = (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# unified API
+# ---------------------------------------------------------------------------
+
+_PARAM_FNS = {
+    DLRMConfig: _dlrm_params,
+    DCNConfig: _dcn_params,
+    DINConfig: _din_params,
+    SASRecConfig: _sasrec_params,
+}
+
+
+def _param_fn(cfg, mk, plan):
+    return _PARAM_FNS[type(cfg)](cfg, mk, plan)
+
+
+def init(cfg, key, plan: ShardPlan = ShardPlan()):
+    return base.build_params(partial(_param_fn, plan=plan), cfg, key)
+
+
+def param_specs(cfg, plan: ShardPlan):
+    return base.build_specs(partial(_param_fn, plan=plan), cfg)
+
+
+def param_shapes(cfg, plan: ShardPlan):
+    return base.build_shapes(partial(_param_fn, plan=plan), cfg)
+
+
+def serve_logits(params, batch, cfg, plan: ShardPlan = ShardPlan()):
+    """Pointwise CTR logits for a request batch."""
+    if isinstance(cfg, DLRMConfig):
+        return _dlrm_forward(params, batch["dense"], batch["sparse"], cfg,
+                             plan)
+    if isinstance(cfg, DCNConfig):
+        return _dcn_forward(params, batch["dense"], batch["sparse"], cfg,
+                            plan)
+    if isinstance(cfg, DINConfig):
+        return _din_forward(params, batch, cfg, plan)
+    if isinstance(cfg, SASRecConfig):
+        h = _sasrec_hidden(params, batch["seq"], cfg, plan)
+        e = take_embeddings(params["item_table"], batch["target_item"])
+        return (h[:, -1] * e).sum(-1)
+    raise TypeError(type(cfg))
+
+
+def loss_fn(params, batch, cfg, plan: ShardPlan = ShardPlan()):
+    """BCE with logits against batch['label'] (SASRec: in-sequence BCE)."""
+    if isinstance(cfg, SASRecConfig):
+        return _sasrec_loss(params, batch, cfg, plan)
+    logits = serve_logits(params, batch, cfg, plan)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def ctr_forward_gathered(rest, e, batch, cfg, plan: ShardPlan = ShardPlan()):
+    """DLRM/DCN forward with pre-gathered embeddings (sparse-update path).
+
+    ``rest`` is the param tree minus the table (table may be absent)."""
+    fwd = _dlrm_forward if isinstance(cfg, DLRMConfig) else _dcn_forward
+    return fwd(rest, batch["dense"], batch["sparse"], cfg, plan, e=e)
+
+
+def retrieval_logits(params, batch, cfg, plan: ShardPlan = ShardPlan(),
+                     k: int = 100):
+    """Score 1 user against n_candidates items; return (scores, ids) top-k.
+
+    Factorized models (DIN/SASRec): user vector . candidate embeddings — the
+    paper's exact ANN problem (swap in the two-level index at serve time).
+    Joint models (DLRM/DCN): full forward over candidate-expanded rows,
+    sharded over the mesh.
+    """
+    cand = batch["candidates"]                              # (C,) item ids
+    if isinstance(cfg, SASRecConfig):
+        h = _sasrec_hidden(params, batch["seq"], cfg, plan)[:, -1]   # (1, D)
+        e = take_embeddings(params["item_table"], cand)
+        e = plan.constrain(e, ("dp", "tp"), None)
+        scores = (h @ e.T)[0]
+    elif isinstance(cfg, DINConfig):
+        et = jnp.concatenate(
+            [take_embeddings(params["item_table"], cand),
+             take_embeddings(params["cate_table"], batch["cand_cates"])],
+            axis=-1,
+        )                                                   # (C, 2D)
+        et = plan.constrain(et, ("dp", "tp"), None)
+        # user tower depends on the target (target attention): recompute the
+        # attention per candidate but share the history embeddings.
+        user = jax.vmap(
+            lambda e_one: _din_user_embed(
+                params, batch["hist_items"], batch["hist_cates"],
+                e_one[None],
+            )[0]
+        )(et)                                               # (C, 2D)
+        x = jnp.concatenate([user, et], axis=-1)
+        scores = _mlp_apply(params["mlp"], x)[:, 0]
+    elif isinstance(cfg, (DLRMConfig, DCNConfig)):
+        c = cand.shape[0]
+        dense = jnp.broadcast_to(batch["dense"], (c, batch["dense"].shape[-1]))
+        sparse = jnp.broadcast_to(batch["sparse"],
+                                  (c, batch["sparse"].shape[-1]))
+        # candidate id replaces the item feature column (feature 0)
+        sparse = sparse.at[:, 0].set(cand)
+        sparse = plan.constrain(sparse, ("dp", "tp"), None)
+        fwd = _dlrm_forward if isinstance(cfg, DLRMConfig) else _dcn_forward
+        scores = fwd(params, dense, sparse, cfg, plan)
+    else:
+        raise TypeError(type(cfg))
+    top, ids = jax.lax.top_k(scores.astype(jnp.float32), k)
+    return top, cand[ids]    # highest-scoring candidates, descending

@@ -1,0 +1,148 @@
+"""SchNet: continuous-filter convolution GNN  [arXiv:1706.08566].
+
+Message passing IS ``segment_sum`` over the edge list (taxonomy §GNN):
+   m_e = (h[sender] W1) * filter(RBF(d_e));   h' += W2 ssp(segsum_e->recv m)
+
+Edge arrays shard over the flattened (dp+tp) mesh axes; node states are
+replicated — per-shard partial aggregates meet in the segment-sum's
+all-reduce (DESIGN.md §4).  Two heads: per-node logits (citation-graph
+shapes) and pooled per-graph energy (molecule shape).  The neighbor list
+for molecule inputs comes from `core.graph_build.radius_graph` — the
+paper's two-level machinery (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SchNetConfig
+from repro.distributed.sharding import ShardPlan
+from repro.models import base
+from repro.models.layers import shifted_softplus
+
+__all__ = ["init", "param_specs", "param_shapes", "forward", "loss_fn"]
+
+
+def _param_fn(cfg: SchNetConfig, mk, plan: ShardPlan):
+    h, r = cfg.d_hidden, cfg.n_rbf
+    L = (cfg.n_interactions,)
+    pp = lambda *d: plan.p(*d)   # tiny params: replicated
+    sp = lambda *d: plan.p(None, *d)
+    return {
+        "embed_in": mk("embed_in", (cfg.d_feat, h), pp(None, None)),
+        "inter": {
+            "w1": mk("inter/w1", L + (h, h), sp(None, None)),
+            "f_w1": mk("inter/f_w1", L + (r, h), sp(None, None)),
+            "f_b1": mk("inter/f_b1", L + (h,), sp(None), init="zeros"),
+            "f_w2": mk("inter/f_w2", L + (h, h), sp(None, None)),
+            "f_b2": mk("inter/f_b2", L + (h,), sp(None), init="zeros"),
+            "w2": mk("inter/w2", L + (h, h), sp(None, None)),
+            "b2": mk("inter/b2", L + (h,), sp(None), init="zeros"),
+        },
+        "head_w1": mk("head_w1", (h, h // 2), pp(None, None)),
+        "head_b1": mk("head_b1", (h // 2,), pp(None), init="zeros"),
+        "head_w2": mk("head_w2", (h // 2, cfg.n_out), pp(None, None)),
+    }
+
+
+def init(cfg: SchNetConfig, key, plan: ShardPlan = ShardPlan()):
+    return base.build_params(partial(_param_fn, plan=plan), cfg, key)
+
+
+def param_specs(cfg: SchNetConfig, plan: ShardPlan):
+    return base.build_specs(partial(_param_fn, plan=plan), cfg)
+
+
+def param_shapes(cfg: SchNetConfig, plan: ShardPlan):
+    return base.build_shapes(partial(_param_fn, plan=plan), cfg)
+
+
+def _rbf(dist, cfg: SchNetConfig):
+    """Gaussian radial basis on [0, cutoff], gamma from center spacing."""
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    gamma = 1.0 / (centers[1] - centers[0]) ** 2
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def forward(params, batch, cfg: SchNetConfig,
+            plan: ShardPlan = ShardPlan()):
+    """batch: {feats (N,F), pos (N,3), senders (E,), receivers (E,),
+    [graph_ids (N,) + n_graphs]} -> per-node hidden (N, h).
+
+    senders/receivers use -1 for padded edges (masked out of the message
+    sum).
+    """
+    feats, pos = batch["feats"], batch["pos"]
+    snd, rcv = batch["senders"], batch["receivers"]
+    n = feats.shape[0]
+    h = jnp.einsum("nf,fh->nh", feats, params["embed_in"])
+    if cfg.message_dtype == "bfloat16":
+        # node state in bf16 too: the *gradient* all-reduces (cotangent of
+        # the replicated node state w.r.t. sharded edges) follow h's dtype
+        h = h.astype(jnp.bfloat16)
+
+    edge_valid = (snd >= 0) & (rcv >= 0)
+    s_safe = jnp.maximum(snd, 0)
+    r_safe = jnp.maximum(rcv, 0)
+    dvec = pos[s_safe] - pos[r_safe]
+    dist = jnp.sqrt(jnp.maximum((dvec * dvec).sum(-1), 1e-12))
+    rbf = _rbf(dist, cfg)                                   # (E, R)
+    # smooth cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+    rbf = plan.constrain(rbf * env[:, None], ("dp", "tp"), None)
+
+    mdt = jnp.bfloat16 if cfg.message_dtype == "bfloat16" else jnp.float32
+
+    def interaction(h, ip):
+        hw = jnp.einsum("nh,hg->ng", h, ip["w1"])
+        w = shifted_softplus(rbf @ ip["f_w1"] + ip["f_b1"])
+        w = shifted_softplus(w @ ip["f_w2"] + ip["f_b2"])   # (E, h)
+        # messages AND everything until the residual add stay in
+        # message_dtype, so the cross-shard partial-aggregate all-reduce
+        # carries bf16 (an early .astype(f32) gets fused into the scatter
+        # and the AR runs f32 — measured, EXPERIMENTS.md §Perf iter 13)
+        m = hw[s_safe].astype(mdt) * w.astype(mdt)
+        m = jnp.where(edge_valid[:, None], m, jnp.zeros((), mdt))
+        agg = jax.ops.segment_sum(m, r_safe, num_segments=n)
+        upd = jnp.einsum("nh,hg->ng", shifted_softplus(agg),
+                         ip["w2"].astype(mdt))
+        return h + upd.astype(h.dtype) + ip["b2"]
+
+    for i in range(cfg.n_interactions):
+        h = interaction(h, jax.tree.map(lambda a: a[i], params["inter"]))
+    return h
+
+
+def node_logits(params, h):
+    z = shifted_softplus(h @ params["head_w1"] + params["head_b1"])
+    return z @ params["head_w2"]
+
+
+def graph_energy(params, h, graph_ids, n_graphs: int):
+    z = node_logits(params, h)[:, 0]                        # atomwise energy
+    return jax.ops.segment_sum(z, jnp.maximum(graph_ids, 0),
+                               num_segments=n_graphs)
+
+
+def loss_fn(params, batch, cfg: SchNetConfig,
+            plan: ShardPlan = ShardPlan()):
+    """Node-classification CE when batch has 'labels'; energy MSE when it
+    has 'energy' (+ graph_ids/n_graphs)."""
+    h = forward(params, batch, cfg, plan)
+    if "labels" in batch:
+        logits = node_logits(params, h)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, batch["labels"][:, None], 1)[:, 0]
+        mask = batch.get("node_mask",
+                         jnp.ones_like(ll)).astype(jnp.float32)
+        loss = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        acc = ((jnp.argmax(lf, -1) == batch["labels"]) * mask).sum() \
+            / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss, "accuracy": acc}
+    n_graphs = batch["energy"].shape[0]        # static via shape
+    e = graph_energy(params, h, batch["graph_ids"], n_graphs)
+    loss = jnp.mean((e - batch["energy"]) ** 2)
+    return loss, {"loss": loss}

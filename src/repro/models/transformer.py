@@ -1,0 +1,630 @@
+"""Decoder-only LM covering all five assigned transformer archs.
+
+  qwen3-14b / qwen3-0.6b : GQA + qk-norm + SwiGLU
+  granite-34b            : MQA (kv=1) + GELU MLP (2-matrix, code model)
+  deepseek-v3-671b       : MLA + MoE(256e top-8, 1 shared) + MTP
+  kimi-k2-1t-a32b        : MLA + MoE(384e top-8, 1 shared)
+
+Functional: ``init(cfg, key)`` / ``param_specs(cfg, plan)`` build the
+parameter pytree and its PartitionSpec twin; ``loss_fn`` / ``prefill`` /
+``decode_step`` are pure.  Repeated layers are scanned over stacked
+params (HLO size O(1) in depth — required for 512-way SPMD compiles), with
+``jax.checkpoint`` around the layer body for remat.
+
+Distribution (DESIGN.md §4): params 2-D sharded (fsdp x tp); residual
+stream sharded (dp, tp-on-sequence, -) when ``attn_shard == "seq"`` (qwen3,
+40 heads % 16 != 0) else (dp, -, -) with heads sharded inside attention;
+MLA decode uses the absorbed-latent path so the cache is (kv_lora + rope)
+per token; KV caches shard batch over dp and sequence over tp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed.sharding import ShardPlan
+from repro.models import base
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import (
+    gelu_mlp,
+    rms_norm,
+    rope,
+    rope_tables,
+    softmax_xent,
+    swiglu,
+)
+from repro.models.moe import moe_ffn, moe_params
+
+__all__ = ["init", "param_specs", "param_shapes", "loss_fn", "prefill",
+           "decode_step", "cache_shapes", "cache_specs", "LMConfig",
+           "set_precision"]
+
+# precision policy: compute dtype for layer math, storage dtype for the KV
+# cache. bf16/bf16 in production; tests flip to f32 to separate numerics
+# from logic (test_models).
+COMPUTE_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def set_precision(compute=jnp.bfloat16, cache=jnp.bfloat16):
+    global COMPUTE_DTYPE, CACHE_DTYPE
+    COMPUTE_DTYPE = compute
+    CACHE_DTYPE = cache
+
+MTP_WEIGHT = 0.3
+
+
+# ---------------------------------------------------------------------------
+# parameter description
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(cfg: LMConfig, mk, plan: ShardPlan, prefix: str, L: int):
+    d = cfg.d_model
+    pp = lambda *dims: plan.p(None, *dims)
+    tp_n = max(plan.axis_size("tp"), 1)
+    kv_tp = "tp" if cfg.n_kv_heads % tp_n == 0 else None
+    q_tp = "tp" if cfg.n_heads % tp_n == 0 else None
+    p = {
+        "ln1": mk(f"{prefix}/ln1", (L, d), pp(None), init="ones"),
+        "ln2": mk(f"{prefix}/ln2", (L, d), pp(None), init="ones"),
+    }
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p.update({
+            "w_dq": mk(f"{prefix}/w_dq", (L, d, m.q_lora_rank),
+                       pp("fsdp", None)),
+            "q_ln": mk(f"{prefix}/q_ln", (L, m.q_lora_rank), pp(None),
+                       init="ones"),
+            "w_uq": mk(f"{prefix}/w_uq", (L, m.q_lora_rank, cfg.n_heads, qk),
+                       pp(None, q_tp, None)),
+            "w_dkv": mk(f"{prefix}/w_dkv", (L, d, m.kv_lora_rank),
+                        pp("fsdp", None)),
+            "kv_ln": mk(f"{prefix}/kv_ln", (L, m.kv_lora_rank), pp(None),
+                        init="ones"),
+            "w_kr": mk(f"{prefix}/w_kr", (L, d, m.qk_rope_head_dim),
+                       pp("fsdp", None)),
+            "w_uk": mk(f"{prefix}/w_uk",
+                       (L, m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim),
+                       pp(None, q_tp, None)),
+            "w_uv": mk(f"{prefix}/w_uv",
+                       (L, m.kv_lora_rank, cfg.n_heads, m.v_head_dim),
+                       pp(None, q_tp, None)),
+            "w_o": mk(f"{prefix}/w_o",
+                      (L, cfg.n_heads, m.v_head_dim, d),
+                      pp(q_tp, None, "fsdp")),
+        })
+    else:
+        dh = cfg.d_head
+        p.update({
+            "w_q": mk(f"{prefix}/w_q", (L, d, cfg.n_heads, dh),
+                      pp("fsdp", q_tp, None)),
+            "w_k": mk(f"{prefix}/w_k", (L, d, cfg.n_kv_heads, dh),
+                      pp("fsdp", kv_tp, None)),
+            "w_v": mk(f"{prefix}/w_v", (L, d, cfg.n_kv_heads, dh),
+                      pp("fsdp", kv_tp, None)),
+            "w_o": mk(f"{prefix}/w_o", (L, cfg.n_heads, dh, d),
+                      pp(q_tp, None, "fsdp")),
+        })
+        if cfg.qk_norm:
+            p["q_norm"] = mk(f"{prefix}/q_norm", (L, dh), pp(None),
+                             init="ones")
+            p["k_norm"] = mk(f"{prefix}/k_norm", (L, dh), pp(None),
+                             init="ones")
+    return p
+
+
+def _mlp_params(cfg: LMConfig, mk, plan, prefix: str, L: int, d_ff: int):
+    d = cfg.d_model
+    pp = lambda *dims: plan.p(None, *dims)
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_up": mk(f"{prefix}/w_up", (L, d, d_ff), pp("fsdp", "tp")),
+            "w_down": mk(f"{prefix}/w_down", (L, d_ff, d),
+                         pp("tp", "fsdp")),
+        }
+    return {
+        "w_gate": mk(f"{prefix}/w_gate", (L, d, d_ff), pp("fsdp", "tp")),
+        "w_up": mk(f"{prefix}/w_up", (L, d, d_ff), pp("fsdp", "tp")),
+        "w_down": mk(f"{prefix}/w_down", (L, d_ff, d), pp("tp", "fsdp")),
+    }
+
+
+def _param_fn(cfg: LMConfig, mk, plan: ShardPlan):
+    d, v = cfg.d_model, cfg.vocab
+    n_dense = cfg.n_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_moe_layers
+    params = {
+        "embed": mk("embed", (v, d), plan.p("tp", "fsdp"),
+                    init=("normal", 0.02)),
+        "final_norm": mk("final_norm", (d,), plan.p(None), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = mk("unembed", (d, v), plan.p("fsdp", "tp"))
+    if n_dense:
+        params["dense_layers"] = {
+            **_attn_params(cfg, mk, plan, "dense/attn", n_dense),
+            **_mlp_params(cfg, mk, plan, "dense/mlp", n_dense, cfg.d_ff),
+        }
+    if n_moe:
+        params["moe_layers"] = {
+            **_attn_params(cfg, mk, plan, "moe/attn", n_moe),
+            **moe_params(cfg, mk, plan, "moe/mlp", n_moe),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": mk("mtp/proj", (2 * d, d), plan.p("fsdp", None)),
+            "norm_h": mk("mtp/norm_h", (d,), plan.p(None), init="ones"),
+            "norm_e": mk("mtp/norm_e", (d,), plan.p(None), init="ones"),
+            **_attn_params(cfg, mk, plan, "mtp/attn", 1),
+            **_mlp_params(cfg, mk, plan, "mtp/mlp", 1,
+                          cfg.moe.d_ff * 8 if cfg.moe else cfg.d_ff),
+        }
+    return params
+
+
+def init(cfg: LMConfig, key, plan: ShardPlan = ShardPlan()):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return base.build_params(partial(_param_fn, plan=plan), cfg, key,
+                             dtype=dtype)
+
+
+def param_specs(cfg: LMConfig, plan: ShardPlan):
+    return base.build_specs(partial(_param_fn, plan=plan), cfg)
+
+
+def param_shapes(cfg: LMConfig, plan: ShardPlan):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return base.build_shapes(partial(_param_fn, plan=plan), cfg, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _res_constrain(x, cfg, plan):
+    if cfg.attn_shard == "seq":
+        return plan.constrain(x, "dp", "tp", None)
+    return plan.constrain(x, "dp", None, None)
+
+
+def _head_roles(cfg, plan):
+    tp_n = max(plan.axis_size("tp"), 1)
+    q_tp = "tp" if cfg.n_heads % tp_n == 0 else None
+    kv_tp = "tp" if cfg.n_kv_heads % tp_n == 0 else None
+    return q_tp, kv_tp
+
+
+def _gather_fsdp(plan, w, *dims):
+    """FSDP weight gathering: re-constrain a param so its fsdp axes are
+    replicated (tp sharding kept) right before use.  Without this XLA's
+    SPMD dot handler sometimes prefers partial contraction + a (batch,
+    seq, out)-sized all-reduce — catastrophically larger than gathering
+    the weight (observed 8 GiB/step on qwen3-0.6b; EXPERIMENTS.md §Perf).
+    """
+    return plan.constrain(w, *dims)
+
+
+def _attention_block(p, h, cfg: LMConfig, plan, cos, sin):
+    """h: post-ln1 hidden (B, S, D) -> attn output (B, S, D)."""
+    chunk = cfg.attn_chunk or None
+    q_tp, kv_tp = _head_roles(cfg, plan)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        w_dq = _gather_fsdp(plan, p["w_dq"], None, None)
+        w_dkv = _gather_fsdp(plan, p["w_dkv"], None, None)
+        w_kr = _gather_fsdp(plan, p["w_kr"], None, None)
+        w_o = _gather_fsdp(plan, p["w_o"], q_tp, None, None)
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", h, w_dq), p["q_ln"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+        q_nope = q[..., : m.qk_nope_head_dim]
+        q_rope = rope(q[..., m.qk_nope_head_dim:], cos, sin)
+        ckv = rms_norm(jnp.einsum("bsd,dr->bsr", h, w_dkv), p["kv_ln"])
+        k_rope = rope(
+            jnp.einsum("bsd,dk->bsk", h, w_kr)[:, :, None, :],
+            cos, sin,
+        )                                                   # (B,S,1,rope)
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope, k_nope.shape[:3] + k_rope.shape[-1:])],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # Megatron-SP: attention itself is heads-sharded even when the
+        # residual is sequence-sharded — MLA expands K per head, so an
+        # unsharded-heads K is (b, S, 128, 192) per chip (EXPERIMENTS §Perf)
+        q = plan.constrain(q, "dp", None, q_tp, None)
+        k = plan.constrain(k, "dp", None, q_tp, None)
+        v = plan.constrain(v, "dp", None, q_tp, None)
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        o = attention(q, k, v, causal=True, chunk=chunk, scale=scale)
+        return jnp.einsum("bshk,hkd->bsd", o, w_o)
+    w_q = _gather_fsdp(plan, p["w_q"], None, q_tp, None)
+    w_k = _gather_fsdp(plan, p["w_k"], None, kv_tp, None)
+    w_v = _gather_fsdp(plan, p["w_v"], None, kv_tp, None)
+    w_o = _gather_fsdp(plan, p["w_o"], q_tp, None, None)
+    q = jnp.einsum("bsd,dhk->bshk", h, w_q)
+    k = jnp.einsum("bsd,dhk->bshk", h, w_k)
+    v = jnp.einsum("bsd,dhk->bshk", h, w_v)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+    q = plan.constrain(q, "dp", None, q_tp, None)
+    k = plan.constrain(k, "dp", None, kv_tp, None)
+    v = plan.constrain(v, "dp", None, kv_tp, None)
+    o = attention(q, k, v, causal=True, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, w_o)
+
+
+def _mlp_block(p, h, cfg: LMConfig, plan, *, moe: bool):
+    if moe:
+        return moe_ffn(p, h, cfg, plan)
+    if cfg.mlp_kind == "gelu":
+        return gelu_mlp(h, _gather_fsdp(plan, p["w_up"], None, "tp"),
+                        _gather_fsdp(plan, p["w_down"], "tp", None))
+    return swiglu(h, _gather_fsdp(plan, p["w_gate"], None, "tp"),
+                  _gather_fsdp(plan, p["w_up"], None, "tp"),
+                  _gather_fsdp(plan, p["w_down"], "tp", None))
+
+
+def _layer(p, x, cfg, plan, cos, sin, *, moe: bool):
+    cdt = COMPUTE_DTYPE
+    h = rms_norm(x, p["ln1"]).astype(cdt)
+    x = x + _attention_block(base.cast_tree(p, cdt), h, cfg, plan,
+                             cos, sin).astype(x.dtype)
+    x = _res_constrain(x, cfg, plan)
+    h = rms_norm(x, p["ln2"]).astype(cdt)
+    x = x + _mlp_block(base.cast_tree(p, cdt), h, cfg, plan,
+                       moe=moe).astype(x.dtype)
+    return _res_constrain(x, cfg, plan)
+
+
+def _scan_layers(stack, x, cfg, plan, cos, sin, *, moe: bool):
+    layer = partial(_layer, cfg=cfg, plan=plan, cos=cos, sin=sin, moe=moe)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    if not cfg.scan_layers:
+        L = jax.tree.leaves(stack)[0].shape[0]
+        for i in range(L):
+            x = layer(jax.tree.map(lambda a: a[i], stack), x)
+        return x
+
+    def body(carry, lp):
+        return layer(lp, carry), None
+
+    x, _ = jax.lax.scan(body, x, stack)
+    return x
+
+
+def _res_dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.residual_dtype == "bfloat16" else jnp.float32
+
+
+def _backbone(params, tokens, cfg: LMConfig, plan: ShardPlan):
+    """tokens (B, S) -> final-norm hidden (B, S, D)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _res_constrain(x.astype(_res_dtype(cfg)), cfg, plan)
+    rope_dim = (cfg.mla.qk_rope_head_dim if cfg.attn_kind == "mla"
+                else cfg.d_head)
+    cos, sin = rope_tables(jnp.arange(s), rope_dim, cfg.rope_theta)
+    if "dense_layers" in params:
+        x = _scan_layers(params["dense_layers"], x, cfg, plan, cos, sin,
+                         moe=False)
+    if "moe_layers" in params:
+        x = _scan_layers(params["moe_layers"], x, cfg, plan, cos, sin,
+                         moe=True)
+    return rms_norm(x, params["final_norm"])
+
+
+def _logits(params, h, cfg, plan):
+    if cfg.tie_embeddings:
+        w = plan.constrain(params["embed"], "tp", None).T
+    else:
+        w = _gather_fsdp(plan, params["unembed"], None, "tp")
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(COMPUTE_DTYPE),
+                        w.astype(COMPUTE_DTYPE))
+    return plan.constrain(logits, "dp", None, "tp")
+
+
+def loss_fn(params, batch, cfg: LMConfig, plan: ShardPlan = ShardPlan()):
+    """batch: {tokens (B,S), labels (B,S), mask optional} -> (loss, aux)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    h = _backbone(params, tokens, cfg, plan)
+    logits = _logits(params, h, cfg, plan)
+    loss, aux = softmax_xent(logits, labels, z_loss=1e-4, mask=mask)
+    if cfg.mtp and "mtp" in params:
+        mtp_loss = _mtp_loss(params, h, tokens, labels, cfg, plan, mask)
+        aux["mtp_nll"] = mtp_loss
+        loss = loss + MTP_WEIGHT * mtp_loss
+    aux["loss"] = loss
+    return loss, aux
+
+
+def _mtp_loss(params, h, tokens, labels, cfg, plan, mask):
+    """DeepSeek-V3 MTP (depth 1): predict token t+2 from h_t ++ emb_{t+1}."""
+    p = params["mtp"]
+    b, s = tokens.shape
+    # shift: condition on next token's embedding
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    e = jnp.take(params["embed"], nxt, axis=0).astype(_res_dtype(cfg))
+    hin = jnp.concatenate(
+        [rms_norm(h, p["norm_h"]), rms_norm(e, p["norm_e"])], axis=-1
+    )
+    x = jnp.einsum("bse,ed->bsd", hin,
+                   _gather_fsdp(plan, p["proj"], None, None))
+    x = _res_constrain(x, cfg, plan)
+    rope_dim = (cfg.mla.qk_rope_head_dim if cfg.attn_kind == "mla"
+                else cfg.d_head)
+    cos, sin = rope_tables(jnp.arange(s), rope_dim, cfg.rope_theta)
+    lp = jax.tree.map(
+        lambda a: a[0],
+        {k: v for k, v in p.items()
+         if k not in ("proj", "norm_h", "norm_e")},
+    )
+    mtp_layer = partial(_layer, cfg=cfg, plan=plan, cos=cos, sin=sin,
+                        moe=False)
+    if cfg.remat:
+        mtp_layer = jax.checkpoint(mtp_layer)   # same policy as the stack
+    x = mtp_layer(lp, x)
+    logits = _logits(params, rms_norm(x, params["final_norm"]), cfg, plan)
+    # labels for t+2: shift labels left by one
+    l2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+    m2 = jnp.ones_like(l2, jnp.float32).at[:, -2:].set(0.0)
+    if mask is not None:
+        m2 = m2 * mask
+    loss, _ = softmax_xent(logits, l2, mask=m2)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree for the decode cache."""
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct(
+                (L, batch, max_len, m.kv_lora_rank), CACHE_DTYPE),
+            "krope": jax.ShapeDtypeStruct(
+                (L, batch, max_len, m.qk_rope_head_dim), CACHE_DTYPE),
+            "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (L, batch, max_len, cfg.n_kv_heads, cfg.d_head), CACHE_DTYPE),
+        "v": jax.ShapeDtypeStruct(
+            (L, batch, max_len, cfg.n_kv_heads, cfg.d_head), CACHE_DTYPE),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: LMConfig, plan: ShardPlan):
+    """Cache sharding: batch over dp, sequence over tp (DESIGN.md §4)."""
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": plan.p(None, "dp", "tp", None),
+            "krope": plan.p(None, "dp", "tp", None),
+            "lengths": plan.p("dp"),
+        }
+    return {
+        "k": plan.p(None, "dp", "tp", None, None),
+        "v": plan.p(None, "dp", "tp", None, None),
+        "lengths": plan.p("dp"),
+    }
+
+
+def _stacked_layer_params(params, cfg):
+    """Recombine dense+moe stacks into per-layer iteration order."""
+    stacks = []
+    if "dense_layers" in params:
+        stacks.append((params["dense_layers"], False,
+                       jax.tree.leaves(params["dense_layers"])[0].shape[0]))
+    if "moe_layers" in params:
+        stacks.append((params["moe_layers"], True,
+                       jax.tree.leaves(params["moe_layers"])[0].shape[0]))
+    return stacks
+
+
+def prefill(params, tokens, cfg: LMConfig, plan: ShardPlan = ShardPlan(),
+            max_len: Optional[int] = None):
+    """Full-sequence forward building the decode cache.
+
+    Returns (last_logits (B, V), cache).  The cache sequence axis is padded
+    to ``max_len`` (defaults to S).
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        .astype(_res_dtype(cfg))
+    x = _res_constrain(x, cfg, plan)
+    rope_dim = (cfg.mla.qk_rope_head_dim if cfg.attn_kind == "mla"
+                else cfg.d_head)
+    cos, sin = rope_tables(jnp.arange(s), rope_dim, cfg.rope_theta)
+    caches = []
+
+    for stack, moe, L in _stacked_layer_params(params, cfg):
+
+        def one(carry, lp, moe=moe):
+            x = carry
+            cdt = COMPUTE_DTYPE
+            h = rms_norm(x, lp["ln1"]).astype(cdt)
+            lpc = base.cast_tree(lp, cdt)
+            _, kv_tp = _head_roles(cfg, plan)
+            if cfg.attn_kind == "mla":
+                ckv = rms_norm(
+                    jnp.einsum("bsd,dr->bsr", h,
+                               _gather_fsdp(plan, lpc["w_dkv"], None, None)),
+                    lp["kv_ln"],
+                )
+                krope = rope(
+                    jnp.einsum("bsd,dk->bsk", h,
+                               _gather_fsdp(plan, lpc["w_kr"], None, None)
+                               )[:, :, None],
+                    cos, sin)[:, :, 0]
+                kv_entry = (ckv.astype(CACHE_DTYPE),
+                            krope.astype(CACHE_DTYPE))
+            x_new = _layer(lp, x, cfg, plan, cos, sin, moe=moe)
+            if cfg.attn_kind != "mla":
+                w_k = _gather_fsdp(plan, lpc["w_k"], None, kv_tp, None)
+                w_v = _gather_fsdp(plan, lpc["w_v"], None, kv_tp, None)
+                k = jnp.einsum("bsd,dhk->bshk", h, w_k)
+                v = jnp.einsum("bsd,dhk->bshk", h, w_v)
+                if cfg.qk_norm:
+                    k = rms_norm(k, lp["k_norm"])
+                k = rope(k, cos, sin)
+                kv_entry = (k.astype(CACHE_DTYPE), v.astype(CACHE_DTYPE))
+            return x_new, kv_entry
+
+        x, kv = jax.lax.scan(one, x, stack)
+        caches.append(kv)
+
+    h = rms_norm(x, params["final_norm"])
+    last = h[:, -1:, :]
+    logits = _logits(params, last, cfg, plan)[:, 0]
+    a = jnp.concatenate([c[0] for c in caches], axis=0)
+    bcat = jnp.concatenate([c[1] for c in caches], axis=0)
+    pad = ((0, 0), (0, 0), (0, max_len - s)) + ((0, 0),) * (a.ndim - 3)
+    a = jnp.pad(a, pad)
+    bcat = jnp.pad(bcat, pad[: bcat.ndim])
+    lengths = jnp.full((b,), s, jnp.int32)
+    if cfg.attn_kind == "mla":
+        cache = {"ckv": a, "krope": bcat, "lengths": lengths}
+    else:
+        cache = {"k": a, "v": bcat, "lengths": lengths}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig,
+                plan: ShardPlan = ShardPlan()):
+    """One decode step: tokens (B, 1) + cache -> (logits (B, V), cache').
+
+    GQA: standard cached attention.  MLA: absorbed-latent attention — query
+    is projected into the kv-latent space (q @ W_uk) so the cache holds only
+    (kv_lora + rope) per token and W_uv is applied to the attended latent
+    (DeepSeek-V2 inference optimization).
+    """
+    b = tokens.shape[0]
+    lengths = cache["lengths"]
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        .astype(_res_dtype(cfg))
+    # (B, 1, D)
+    pos = lengths                                    # (B,) current position
+    rope_dim = (cfg.mla.qk_rope_head_dim if cfg.attn_kind == "mla"
+                else cfg.d_head)
+    cos, sin = rope_tables(pos[:, None], rope_dim, cfg.rope_theta)
+    # cos/sin: (B, 1, rope/2) — broadcast over heads inside `rope`
+
+    layer_idx = 0
+    new_caches = {k: cache[k] for k in cache}
+    for stack, moe, L in _stacked_layer_params(params, cfg):
+
+        def one(carry, xs, moe=moe):
+            x, = carry
+            lp, sl = xs
+            x, updates = _decode_layer(lp, sl, x, cfg, plan, cos, sin,
+                                       lengths, moe)
+            return (x,), updates
+
+        slices = {k: jax.lax.dynamic_slice_in_dim(cache[k], layer_idx, L, 0)
+                  for k in cache if k != "lengths"}
+        (x,), updates = jax.lax.scan(one, (x,), (stack, slices))
+        for k in updates:
+            new_caches[k] = jax.lax.dynamic_update_slice_in_dim(
+                new_caches[k], updates[k], layer_idx, 0
+            )
+        layer_idx += L
+
+    h = rms_norm(x, params["final_norm"])
+    logits = _logits(params, h, cfg, plan)[:, 0]
+    new_caches["lengths"] = lengths + 1
+    return logits, new_caches
+
+
+def _decode_layer(lp, sl, x, cfg, plan, cos, sin, lengths, moe):
+    cdt = COMPUTE_DTYPE
+    b = x.shape[0]
+    h = rms_norm(x, lp["ln1"]).astype(cdt)
+    lpc = base.cast_tree(lp, cdt)
+    q_tp, kv_tp = _head_roles(cfg, plan)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        w_dq = _gather_fsdp(plan, lpc["w_dq"], None, None)
+        w_dkv = _gather_fsdp(plan, lpc["w_dkv"], None, None)
+        w_kr = _gather_fsdp(plan, lpc["w_kr"], None, None)
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", h, w_dq), lp["q_ln"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, lpc["w_uq"])
+        q_nope = q[..., : m.qk_nope_head_dim]
+        q_rope = rope(q[..., m.qk_nope_head_dim:], cos, sin)
+        ckv_new = rms_norm(
+            jnp.einsum("bsd,dr->bsr", h, w_dkv), lp["kv_ln"]
+        ).astype(CACHE_DTYPE)                        # (B,1,r)
+        krope_new = rope(
+            jnp.einsum("bsd,dk->bsk", h, w_kr)[:, :, None], cos, sin
+        )[:, :, 0].astype(CACHE_DTYPE)               # (B,1,rope)
+        # one-hot masked write: a scatter into the sequence-sharded cache
+        # makes SPMD gather the whole cache (≈0.9 TB/step on deepseek
+        # decode — EXPERIMENTS.md §Perf); the select is fully local.
+        pos = (jnp.arange(sl["ckv"].shape[1])[None, :]
+               == lengths[:, None])                  # (B, S)
+        ckv = jnp.where(pos[..., None], ckv_new, sl["ckv"])
+        krope = jnp.where(pos[..., None], krope_new, sl["krope"])
+        # absorbed: q_lat = q_nope @ W_uk  -> score in latent space
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, lpc["w_uk"])
+        s1 = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+        s2 = jnp.einsum("bshk,btk->bhst", q_rope, krope)
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        sc = (s1 + s2).astype(jnp.float32) * scale
+        valid = (jnp.arange(sl["ckv"].shape[1])[None, :]
+                 <= lengths[:, None])
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1).astype(cdt)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", pr, ckv)
+        o = jnp.einsum("bshr,rhk->bshk", ctx_lat, lpc["w_uv"])
+        attn_out = jnp.einsum(
+            "bshk,hkd->bsd", o,
+            _gather_fsdp(plan, lpc["w_o"], q_tp, None, None))
+        updates = {"ckv": ckv, "krope": krope}    # scan stacks the L axis
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       _gather_fsdp(plan, lpc["w_q"], None, q_tp, None))
+        k1 = jnp.einsum("bsd,dhk->bshk", h,
+                        _gather_fsdp(plan, lpc["w_k"], None, kv_tp, None))
+        v1 = jnp.einsum("bsd,dhk->bshk", h,
+                        _gather_fsdp(plan, lpc["w_v"], None, kv_tp, None))
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k1 = rms_norm(k1, lp["k_norm"])
+        q = rope(q, cos, sin)
+        k1 = rope(k1, cos, sin)
+        pos = (jnp.arange(sl["k"].shape[1])[None, :]
+               == lengths[:, None])                  # (B, S) one-hot write
+        kc = jnp.where(pos[:, :, None, None], k1.astype(CACHE_DTYPE),
+                       sl["k"])
+        vc = jnp.where(pos[:, :, None, None], v1.astype(CACHE_DTYPE),
+                       sl["v"])
+        o = decode_attention(q, kc, vc, lengths + 1)
+        attn_out = jnp.einsum(
+            "bshk,hkd->bsd", o,
+            _gather_fsdp(plan, lpc["w_o"], q_tp, None, None))
+        updates = {"k": kc, "v": vc}              # scan stacks the L axis
+    x = x + attn_out.astype(x.dtype)
+    h2 = rms_norm(x, lp["ln2"]).astype(cdt)
+    x = x + _mlp_block(lpc, h2, cfg, plan, moe=moe).astype(x.dtype)
+    return x, updates

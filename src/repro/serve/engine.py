@@ -1,0 +1,169 @@
+"""Batched serving engine: request queue, micro-batcher, latency SLOs.
+
+The paper's deployment target is per-query P90 < 80 ms on-device; the
+datacenter deployment batches concurrent queries instead.  This engine is
+the production shell around any search/scoring function:
+
+  * micro-batching: collect up to ``max_batch`` requests or ``max_wait_ms``
+    (whichever first), pad to the next power-of-two bucket so jit caches a
+    handful of shapes;
+  * per-request latency tracking (P50/P90/P99, queue vs compute split);
+  * optional hedged dispatch to a replica after ``hedge_ms`` (straggler
+    mitigation for serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["ServingEngine", "EngineStats"]
+
+
+@dataclasses.dataclass
+class _Request:
+    query: np.ndarray
+    t_enqueue: float
+    future: "queue.Queue"
+    t_batch: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n: int
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    mean_ms: float
+    queue_ms: float
+    batch_sizes: list
+    hedges: int
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class ServingEngine:
+    """search_fn(queries (B, d)) -> (dists (B,k), ids (B,k))."""
+
+    def __init__(
+        self,
+        search_fn: Callable,
+        *,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        hedge_fn: Optional[Callable] = None,
+        hedge_ms: float = 50.0,
+    ):
+        self.search_fn = search_fn
+        self.hedge_fn = hedge_fn
+        self.hedge_ms = hedge_ms
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.q: "queue.Queue[_Request]" = queue.Queue()
+        self.latencies: list[float] = []
+        self.queue_waits: list[float] = []
+        self.batch_sizes: list[int] = []
+        self.hedges = 0
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, query: np.ndarray) -> "queue.Queue":
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self.q.put(_Request(query=query, t_enqueue=time.perf_counter(),
+                            future=fut))
+        return fut
+
+    def search(self, query: np.ndarray, timeout: float = 30.0):
+        """Blocking single-query convenience call."""
+        return self.submit(query).get(timeout=timeout)
+
+    def close(self):
+        self._stop.set()
+        self._worker.join(timeout=5)
+
+    # ------------------------------------------------------------------
+    def _collect(self) -> list[_Request]:
+        try:
+            first = self.q.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait
+        while len(batch) < self.max_batch:
+            rem = deadline - time.perf_counter()
+            if rem <= 0:
+                break
+            try:
+                batch.append(self.q.get(timeout=rem))
+            except queue.Empty:
+                break
+        return batch
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            t0 = time.perf_counter()
+            qs = np.stack([r.query for r in batch])
+            b = qs.shape[0]
+            bb = _bucket(b)
+            if bb > b:
+                qs = np.pad(qs, ((0, bb - b), (0, 0)))
+            result = self._dispatch(qs)
+            t1 = time.perf_counter()
+            d, i = result
+            for j, r in enumerate(batch):
+                r.future.put((np.asarray(d[j]), np.asarray(i[j])))
+                self.latencies.append(t1 - r.t_enqueue)
+                self.queue_waits.append(t0 - r.t_enqueue)
+            self.batch_sizes.append(b)
+
+    def _dispatch(self, qs):
+        if self.hedge_fn is None:
+            return self.search_fn(qs)
+        holder: dict = {}
+        done = threading.Event()
+
+        def primary():
+            out = self.search_fn(qs)
+            holder.setdefault("out", out)
+            done.set()
+
+        t = threading.Thread(target=primary, daemon=True)
+        t.start()
+        if not done.wait(self.hedge_ms / 1e3):
+            self.hedges += 1
+            out = self.hedge_fn(qs)      # replica answers the hedge
+            holder.setdefault("out", out)
+            done.set()
+        done.wait()
+        return holder["out"]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> EngineStats:
+        a = np.asarray(self.latencies) * 1e3
+        qw = np.asarray(self.queue_waits) * 1e3
+        if a.size == 0:
+            return EngineStats(0, 0, 0, 0, 0, 0, [], self.hedges)
+        return EngineStats(
+            n=a.size,
+            p50_ms=float(np.percentile(a, 50)),
+            p90_ms=float(np.percentile(a, 90)),
+            p99_ms=float(np.percentile(a, 99)),
+            mean_ms=float(a.mean()),
+            queue_ms=float(qw.mean()),
+            batch_sizes=self.batch_sizes[-100:],
+            hedges=self.hedges,
+        )

@@ -1,0 +1,160 @@
+"""Sharded, async, resharding checkpoints (no orbax in this environment).
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json   # leaf paths, shapes, dtypes, crc32s, step, meta
+        <leaf>.npy      # one file per pytree leaf
+        COMMITTED       # written last; restores ignore uncommitted dirs
+
+Writes go to ``step_<N>.tmp`` and rename atomically after fsync — a crash
+mid-save never corrupts the latest checkpoint.  ``save_async`` snapshots to
+host (jax.device_get) then writes on a worker thread so the train loop
+keeps stepping.  ``restore`` device_puts every leaf with the *target* mesh
+sharding — the elastic-scaling path: a checkpoint saved on N chips restores
+onto M chips (tests exercise 1 -> 8 fake devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+
+_pending: list[threading.Thread] = []
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name.replace("/", "__"), leaf))
+    return out
+
+
+def save(dirpath: str, step: int, tree, meta: Optional[dict] = None,
+         keep_last: int = 3):
+    """Synchronous atomic checkpoint of an arbitrary pytree."""
+    host_tree = jax.device_get(tree)
+    _write(dirpath, step, host_tree, meta or {}, keep_last)
+
+
+def save_async(dirpath: str, step: int, tree, meta: Optional[dict] = None,
+               keep_last: int = 3):
+    """Snapshot now, write on a background thread."""
+    host_tree = jax.device_get(tree)
+    t = threading.Thread(
+        target=_write, args=(dirpath, step, host_tree, meta or {},
+                             keep_last), daemon=True,
+    )
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    for t in list(_pending):
+        t.join()
+        _pending.remove(t)
+
+
+def _write(dirpath, step, host_tree, meta, keep_last):
+    final = os.path.join(dirpath, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "meta": meta, "leaves": {}}
+    for name, leaf in _leaf_paths(host_tree):
+        arr = np.asarray(leaf)
+        fp = os.path.join(tmp, name + ".npy")
+        np.save(fp, arr)
+        with open(fp, "rb") as f:
+            crc = zlib.crc32(f.read())
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype), "crc": crc,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(dirpath, keep_last)
+
+
+def _gc(dirpath, keep_last):
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(dirpath)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(dirpath, d, "COMMITTED"))
+    )
+    import shutil
+
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(dirpath, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def latest_step(dirpath: str) -> Optional[int]:
+    if not os.path.isdir(dirpath):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(dirpath)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(dirpath, d, "COMMITTED"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(dirpath: str, step: int, template,
+            shardings=None, verify: bool = True) -> Any:
+    """Load a checkpoint into ``template``'s structure.
+
+    ``shardings``: optional pytree of NamedSharding matching template — each
+    leaf is device_put with its target sharding (elastic resharding).
+    """
+    d = os.path.join(dirpath, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for name, info in manifest["leaves"].items():
+        fp = os.path.join(d, name + ".npy")
+        if verify:
+            with open(fp, "rb") as f:
+                if zlib.crc32(f.read()) != info["crc"]:
+                    raise IOError(f"checkpoint leaf {name} failed CRC")
+        leaves[name] = np.load(fp)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (
+        jax.tree.leaves(shardings) if shardings is not None
+        else [None] * len(flat)
+    )
+    out = []
+    for (path, leaf), shard in zip(flat, shard_flat):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        ).replace("/", "__")
+        arr = leaves[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs template "
+                f"{leaf.shape}"
+            )
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, out)

@@ -1,0 +1,146 @@
+"""Training loop: jit'd step, grad accumulation, clipping, compression,
+checkpoint/restart, watchdog — the piece that has to survive node failures
+at scale (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train.compression import make_ef_transform
+from repro.train.fault import Watchdog
+from repro.train.optim import Optimizer, clip_by_norm
+
+__all__ = ["TrainState", "make_train_step", "train", "TrainResult"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+    ef_buf: Any = None          # error-feedback buffer (compression)
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.opt_state, self.ef_buf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_state(params, opt: Optimizer, compress: bool = False) -> TrainState:
+    ef = None
+    if compress:
+        ef_init, _ = make_ef_transform()
+        ef = ef_init(params)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=opt.init(params), ef_buf=ef)
+
+
+def make_train_step(loss_fn: Callable, opt: Optimizer, *,
+                    grad_clip: float = 1.0, compress: bool = False,
+                    accum: int = 1):
+    """loss_fn(params, batch) -> (loss, aux).  Returns jit-able step fn.
+
+    ``accum`` > 1: batch leaves must have leading dim (accum, micro, ...);
+    gradients average over microbatches via lax.scan (memory stays at one
+    microbatch).
+    """
+    _, ef_apply = make_ef_transform()
+
+    def grads_of(params, batch):
+        if accum == 1:
+            (loss, aux), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, aux, g
+
+        def micro(carry, mb):
+            acc = carry
+            (loss, aux), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b / accum, acc, g)
+            return acc, (loss, aux)
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g, (losses, auxs) = jax.lax.scan(micro, zeros, batch)
+        aux = jax.tree.map(lambda x: x.mean(), auxs)
+        return losses.mean(), aux, g
+
+    def train_step(state: TrainState, batch):
+        loss, aux, grads = grads_of(state.params, batch)
+        if compress:
+            grads, ef = ef_apply(grads, state.ef_buf)
+        else:
+            ef = state.ef_buf
+        grads, gnorm = clip_by_norm(grads, grad_clip)
+        new_params, new_opt = opt.update(
+            grads, state.opt_state, state.params, state.step)
+        aux = dict(aux)
+        aux["grad_norm"] = gnorm
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=new_opt, ef_buf=ef), aux
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: TrainState
+    history: list
+    step_times: list
+    restarts: int = 0
+
+
+def train(
+    state: TrainState,
+    train_step: Callable,
+    batch_at: Callable,              # step -> batch (stateless data)
+    n_steps: int,
+    *,
+    log_every: int = 10,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 100,
+    ckpt_async: bool = True,
+    watchdog: Optional[Watchdog] = None,
+    fault_injector: Optional[Callable] = None,   # step -> None | raise
+    jit: bool = True,
+) -> TrainResult:
+    """Run the loop with checkpointing and (optional) fault injection.
+
+    Restart-on-failure is handled by ``fault.run_with_restart`` around this
+    function; data order is reproducible because batches derive from step.
+    """
+    step_fn = jax.jit(train_step, donate_argnums=(0,)) if jit else train_step
+    history, times = [], []
+    start = int(state.step)
+    for step in range(start, n_steps):
+        if fault_injector is not None:
+            fault_injector(step)
+        t0 = time.perf_counter()
+        state, aux = step_fn(state, batch_at(step))
+        if watchdog is not None or step % log_every == 0 or \
+                step == n_steps - 1:
+            jax.block_until_ready(state.params)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        if watchdog is not None:
+            watchdog.observe(step, dt)
+        if step % log_every == 0 or step == n_steps - 1:
+            history.append({"step": step,
+                            **{k: float(v) for k, v in aux.items()}})
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            saver = ckpt_mod.save_async if ckpt_async else ckpt_mod.save
+            saver(ckpt_dir, step + 1, state)
+    if ckpt_dir:
+        ckpt_mod.save(ckpt_dir, n_steps, state)
+        ckpt_mod.wait_pending()
+    return TrainResult(state=state, history=history, step_times=times)

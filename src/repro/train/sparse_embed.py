@@ -1,0 +1,99 @@
+"""Sparse embedding training: row-wise AdaGrad on touched rows only.
+
+The dense-autodiff path materializes a full (rows x dim) fp32 gradient for
+the embedding table plus AdamW m/v — 3x table bytes, 28 GiB/chip for
+MLPerf-DLRM (EXPERIMENTS.md §Perf).  Production recsys trainers
+(TorchRec/FBGEMM, MLPerf reference) instead differentiate w.r.t. the
+*gathered rows* and scatter the update, with a per-row AdaGrad accumulator:
+
+  state : acc (rows,) fp32                       (1/dim of AdamW state)
+  step  : g_e = dLoss/d(gathered rows)  (B, F, D)
+          acc[ids]   += mean(g_e^2, -1)
+          table[ids] -= lr * g_e / sqrt(acc[ids] + eps)
+
+Duplicate ids within a batch combine through the scatter-add semantics.
+Dense (MLP/cross) params keep their regular optimizer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.embedding import take_embeddings
+from repro.train.loop import TrainState
+from repro.train.optim import Optimizer, clip_by_norm
+
+__all__ = ["make_ctr_sparse_train_step", "rowwise_adagrad_update"]
+
+
+def rowwise_adagrad_update(table, acc, ids, g_rows, *, lr: float,
+                           eps: float = 1e-8):
+    """Scatter row-wise AdaGrad. ids (..., ), g_rows (..., D)."""
+    flat_ids = ids.reshape(-1)
+    flat_g = g_rows.reshape(-1, g_rows.shape[-1]).astype(jnp.float32)
+    row_g2 = jnp.mean(flat_g * flat_g, axis=-1)
+    acc = acc.at[flat_ids].add(row_g2)
+    scale = lr * jax.lax.rsqrt(acc[flat_ids] + eps)
+    upd = (scale[:, None] * flat_g).astype(table.dtype)
+    table = table.at[flat_ids].add(-upd)
+    return table, acc
+
+
+def make_ctr_sparse_train_step(cfg, plan, opt_dense: Optimizer,
+                               lr_embed: float = 0.01,
+                               grad_clip: float = 1.0):
+    """Train step for DLRM/DCN: dense params via ``opt_dense``, table via
+    sparse row-wise AdaGrad.  State: opt_state = {"dense": ...,
+    "embed_acc": (rows,) fp32}."""
+    from repro.models import recsys as R
+
+    def init_state(params) -> TrainState:
+        rest = {k: v for k, v in params.items() if k != "table"}
+        return TrainState(
+            step=jnp.zeros((), jnp.int32),
+            params=params,
+            opt_state={
+                "dense": opt_dense.init(rest),
+                "embed_acc": jnp.zeros((params["table"].shape[0],),
+                                       jnp.float32),
+            },
+            ef_buf=None,
+        )
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        table = params["table"]
+        rest = {k: v for k, v in params.items() if k != "table"}
+        ids = batch["sparse"]
+        e = take_embeddings(table, ids)
+
+        def loss_of(rest_p, e_g):
+            logits = R.ctr_forward_gathered(rest_p, e_g, batch, cfg, plan)
+            y = batch["label"].astype(jnp.float32)
+            loss = jnp.mean(
+                jnp.maximum(logits, 0) - logits * y
+                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            )
+            acc_m = jnp.mean((logits > 0) == (y > 0.5))
+            return loss, {"loss": loss, "accuracy": acc_m}
+
+        (loss, aux), (g_rest, g_e) = jax.value_and_grad(
+            loss_of, argnums=(0, 1), has_aux=True)(rest, e)
+        g_rest, gnorm = clip_by_norm(g_rest, grad_clip)
+        new_rest, new_dense = opt_dense.update(
+            g_rest, state.opt_state["dense"], rest, state.step)
+        new_table, new_acc = rowwise_adagrad_update(
+            table, state.opt_state["embed_acc"], ids, g_e, lr=lr_embed)
+        aux = dict(aux)
+        aux["grad_norm"] = gnorm
+        return TrainState(
+            step=state.step + 1,
+            params={**new_rest, "table": new_table},
+            opt_state={"dense": new_dense, "embed_acc": new_acc},
+            ef_buf=None,
+        ), aux
+
+    return init_state, train_step

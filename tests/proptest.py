@@ -1,0 +1,56 @@
+"""Seeded property-sweep harness (hypothesis is unavailable offline).
+
+``sweep`` decorates a property with N randomized cases; each case gets a
+``Case`` with deterministic draws.  Failures report the reproduction seed.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+class Case:
+    def __init__(self, seed: int):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+
+    def ints(self, lo, hi, size=None):
+        return self.rng.integers(lo, hi, size=size)
+
+    def int_(self, lo, hi):
+        return int(self.rng.integers(lo, hi))
+
+    def floats(self, lo, hi, size=None):
+        return self.rng.uniform(lo, hi, size=size)
+
+    def choice(self, xs):
+        return xs[int(self.rng.integers(0, len(xs)))]
+
+    def array(self, shape, dtype=np.float32, scale=1.0):
+        return (self.rng.normal(size=shape) * scale).astype(dtype)
+
+
+def sweep(n_cases: int = 10, base_seed: int = 0):
+    """Run the property for ``n_cases`` deterministic seeds.
+
+    NOTE: deliberately does NOT functools.wraps — pytest would introspect
+    the wrapped signature and treat ``case`` as a fixture.
+    """
+
+    def deco(fn):
+        def wrapper():
+            for i in range(n_cases):
+                seed = base_seed * 10_000 + i
+                try:
+                    fn(case=Case(seed))
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on case seed={seed}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,182 @@
+"""kmeans / PQ / LSH / brute / two-level / protocol invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import sweep
+from repro.core.brute import brute_search, l2_topk_exact
+from repro.core.graph_build import radius_graph
+from repro.core.index import auto_build_index, build_index
+from repro.core.kmeans import kmeans_assign, kmeans_fit
+from repro.core.lsh import hamming_scores, lsh_build, lsh_search, pack_bits
+from repro.core.metrics import recall_at_k
+from repro.core.pq import adc_lut, adc_scores, pq_search, pq_train
+from repro.core.protocol import select_index_spec
+from repro.core.two_level import TwoLevelConfig, build_two_level
+
+
+def _clustered(rng, n, d, k=16):
+    c = rng.normal(size=(k, d)) * 4
+    x = c[rng.integers(0, k, n)] + rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+@sweep(n_cases=4, base_seed=40)
+def test_kmeans_inertia_decreases(case):
+    x = _clustered(case.rng, case.int_(200, 1500), case.int_(4, 32))
+    k = case.int_(4, 32)
+    r1 = kmeans_fit(x, k, iters=1, seed=case.seed)
+    r5 = kmeans_fit(x, k, iters=8, seed=case.seed)
+    assert r5.inertia <= r1.inertia * 1.001
+    a, _ = kmeans_assign(x, r5.centroids)
+    assert (a == r5.assignments).all()
+    assert a.min() >= 0 and a.max() < k
+
+
+def test_brute_matches_numpy():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(10, 24)).astype(np.float32)
+    x = rng.normal(size=(500, 24)).astype(np.float32)
+    d, i = brute_search(q, x, 7)
+    d2 = ((q[:, None] - x[None]) ** 2).sum(-1)
+    i_true = np.argsort(d2, axis=1)[:, :7]
+    assert (i == i_true).mean() > 0.99
+    np.testing.assert_allclose(d, np.take_along_axis(d2, i_true, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_brute_chunking_invariant():
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(5, 16)).astype(np.float32)
+    x = rng.normal(size=(333, 16)).astype(np.float32)
+    d1, i1 = l2_topk_exact(jnp.asarray(q), jnp.asarray(x), 5, chunk=64)
+    d2, i2 = l2_topk_exact(jnp.asarray(q), jnp.asarray(x), 5, chunk=333)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_pq_adc_is_exact_for_codebook_points():
+    """ADC distance == true distance when vectors are exactly codewords."""
+    rng = np.random.default_rng(2)
+    x = _clustered(rng, 400, 32, k=8)
+    pq = pq_train(x, m=4, n_codes=16, seed=0)
+    # reconstruct from codes -> ADC to the reconstruction must be exact
+    recon = np.concatenate(
+        [pq.codebooks[j][pq.codes[:, j]] for j in range(pq.m)], axis=1
+    )
+    q = recon[:5]
+    lut = adc_lut(jnp.asarray(q), jnp.asarray(pq.codebooks))
+    s = np.asarray(adc_scores(lut, jnp.asarray(pq.codes)))
+    true = ((q[:, None] - recon[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(s, true, rtol=1e-3, atol=1e-3)
+
+
+def test_pq_search_recall_on_clustered():
+    rng = np.random.default_rng(3)
+    x = _clustered(rng, 2000, 32)
+    pq = pq_train(x, m=8, seed=0)
+    q = x[:32] + rng.normal(size=(32, 32)).astype(np.float32) * 0.01
+    _, i_true = brute_search(q, x, 10)
+    _, i_pq = pq_search(pq, q, 10)
+    assert recall_at_k(i_pq, i_true) > 0.5   # coarse but must beat chance
+
+
+def test_pack_bits_roundtrip():
+    rng = np.random.default_rng(4)
+    bits = rng.integers(0, 2, size=(13, 70)).astype(np.uint8)
+    packed = pack_bits(bits)
+    assert packed.shape == (13, 3)
+    # hamming distance from packed == direct bit diff
+    h = np.asarray(hamming_scores(jnp.asarray(packed), jnp.asarray(packed)))
+    direct = (bits[:, None, :] != bits[None, :, :]).sum(-1)
+    assert (h == direct).all()
+
+
+def test_lsh_better_than_random():
+    rng = np.random.default_rng(5)
+    x = _clustered(rng, 3000, 64)
+    idx = lsh_build(x, n_bits=128, seed=0)
+    q = x[:64] + rng.normal(size=(64, 64)).astype(np.float32) * 0.01
+    _, i_true = brute_search(q, x, 10)
+    _, i_lsh = lsh_search(idx, x, q, 10, n_candidates=256)
+    assert recall_at_k(i_lsh, i_true) > 0.6
+
+
+@pytest.mark.parametrize("top,bottom", [
+    ("brute", "brute"), ("pq", "brute"), ("pq", "lsh"),
+    ("pq", "tree"), ("kdtree", "brute"),
+])
+def test_two_level_recall(top, bottom):
+    rng = np.random.default_rng(6)
+    x = _clustered(rng, 4000, 32, k=64)
+    feats = x[:, :3] if top == "kdtree" else None
+    cfg = TwoLevelConfig(n_clusters=64, top=top, bottom=bottom,
+                         kmeans_iters=5, kmeans_minibatch=None)
+    idx = build_two_level(x, cfg, partition_features=feats)
+    q = x[:128] + rng.normal(size=(128, 32)).astype(np.float32) * 0.02
+    kw = {}
+    if top == "kdtree":
+        kw["query_partition_features"] = q[:, :3]
+    d, i, work = idx.search(q, 10, nprobe=16, beam_width=16, **kw)
+    _, i_true = brute_search(q, x, 10)
+    r = recall_at_k(i, i_true)
+    floor = 0.85 if bottom == "brute" else 0.45
+    assert r > floor, f"{top}/{bottom} recall {r}"
+    # all entities indexed exactly once across buckets
+    ids = idx.bucket_ids[idx.bucket_ids >= 0]
+    assert sorted(ids.tolist()) == list(range(4000))
+
+
+def test_two_level_more_probes_monotone():
+    rng = np.random.default_rng(7)
+    x = _clustered(rng, 3000, 16, k=32)
+    idx = build_two_level(x, TwoLevelConfig(n_clusters=64, top="brute",
+                                            bottom="brute", kmeans_iters=4))
+    q = x[:64] + rng.normal(size=(64, 16)).astype(np.float32) * 0.05
+    _, i_true = brute_search(q, x, 10)
+    rs = []
+    for nprobe in (1, 4, 16, 64):
+        _, i, _ = idx.search(q, 10, nprobe=nprobe)
+        rs.append(recall_at_k(i, i_true))
+    assert all(b >= a - 0.02 for a, b in zip(rs, rs[1:])), rs
+    assert rs[-1] > 0.95
+
+
+def test_protocol_matches_paper_rules():
+    s = select_index_spec(10_000, traffic_available=True)
+    assert s.kind == "qlbt"
+    s = select_index_spec(10_000, traffic_available=False)
+    assert s.kind == "tree"
+    s = select_index_spec(1_000_000, embedding_dim=128)
+    assert s.kind == "two_level" and s.two_level.top == "pq" \
+        and s.two_level.bottom == "brute"
+    # ~100 entities per bucket (paper §5.2 optimum)
+    avg = 1_000_000 / s.two_level.n_clusters
+    assert 50 <= avg <= 200
+    s = select_index_spec(1_000_000, partition_dim=2)
+    assert s.two_level.top == "kdtree"
+
+
+def test_auto_build_end_to_end():
+    rng = np.random.default_rng(8)
+    x = _clustered(rng, 2000, 24)
+    p = rng.dirichlet(np.full(2000, 0.5))
+    idx = auto_build_index(x, p=p)
+    assert idx.spec.kind == "qlbt"
+    q = x[:32] + rng.normal(size=(32, 24)).astype(np.float32) * 0.01
+    d, i, work = idx.search(q, 10, beam_width=16)
+    _, i_true = brute_search(q, x, 10)
+    assert recall_at_k(i, i_true) > 0.8
+    assert idx.footprint_bytes() > 0
+
+
+def test_radius_graph_two_level_matches_brute():
+    rng = np.random.default_rng(9)
+    pos = rng.normal(size=(500, 3)).astype(np.float32) * 3
+    s1, d1 = radius_graph(pos, 1.5, method="brute")
+    s2, d2 = radius_graph(pos, 1.5, method="two_level", n_buckets=16,
+                          nprobe=8)
+    e1 = set(zip(s1.tolist(), d1.tolist()))
+    e2 = set(zip(s2.tolist(), d2.tolist()))
+    assert len(e2 & e1) / max(len(e1), 1) > 0.95

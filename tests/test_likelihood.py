@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from proptest import sweep
+from repro.core.likelihood import (
+    beta_for_unbalance,
+    empirical_likelihood,
+    simulate_beta_likelihood,
+    unbalance_score,
+    zipf_likelihood,
+)
+
+
+def test_uniform_is_zero():
+    p = np.full(256, 1 / 256)
+    assert abs(unbalance_score(p)) < 1e-9
+
+
+def test_concentrated_is_near_one():
+    p = np.full(1024, 1e-12)
+    p[0] = 1.0
+    assert unbalance_score(p) > 0.99
+
+
+@sweep(n_cases=8, base_seed=1)
+def test_unbalance_bounds(case):
+    n = case.int_(2, 5000)
+    p = case.rng.dirichlet(np.full(n, case.floats(0.05, 5.0)))
+    u = unbalance_score(p)
+    assert -1e-9 <= u <= 1.0 + 1e-9
+
+
+@sweep(n_cases=5, base_seed=2)
+def test_beta_simulation_normalized(case):
+    p = simulate_beta_likelihood(case.rng, case.int_(10, 2000),
+                                 case.floats(0.05, 2.0),
+                                 case.floats(1.0, 16.0))
+    assert abs(p.sum() - 1.0) < 1e-9
+    assert (p > 0).all()
+
+
+@pytest.mark.parametrize("target", [0.1, 0.23, 0.4])
+def test_beta_for_unbalance_hits_target(target):
+    # the paper's Fig-1 sweep knob: achieve a requested unbalance score
+    _, achieved, p = beta_for_unbalance(target, 256, seed=3)
+    assert abs(achieved - target) < 0.05
+    assert abs(p.sum() - 1.0) < 1e-9
+
+
+def test_zipf_more_skewed_with_alpha():
+    u1 = unbalance_score(zipf_likelihood(512, 0.5))
+    u2 = unbalance_score(zipf_likelihood(512, 1.5))
+    assert u2 > u1 > 0
+
+
+def test_empirical_likelihood_counts():
+    ids = np.array([0, 0, 0, 1, 2])
+    p = empirical_likelihood(ids, 4, smoothing=0.0)
+    assert p[0] == pytest.approx(0.6)
+    assert p[3] == 0.0

@@ -1,0 +1,115 @@
+"""End-to-end behaviour of the paper's system.
+
+The full edge-ER story on one (small) corpus: traffic estimation -> §5.3
+protocol -> index build -> batched serving through the engine -> recall +
+latency accounting.
+"""
+import numpy as np
+
+from repro.core.brute import brute_search
+from repro.core.index import auto_build_index
+from repro.core.likelihood import (
+    empirical_likelihood,
+    sample_queries,
+    simulate_beta_likelihood,
+    unbalance_score,
+)
+from repro.core.metrics import recall_at_k
+from repro.serve.engine import ServingEngine
+
+
+def _corpus(rng, n, d=64, k=32):
+    c = rng.normal(size=(k, d)) * 4
+    return (c[rng.integers(0, k, n)] + rng.normal(size=(n, d))) \
+        .astype(np.float32)
+
+
+def test_small_corpus_edge_flow_qlbt():
+    """<30K entities + observed traffic -> QLBT; recall@10 >= 0.9."""
+    rng = np.random.default_rng(0)
+    db = _corpus(rng, 3000)
+    p_true = simulate_beta_likelihood(rng, 3000, 0.1, 8.0)
+    # traffic log -> empirical likelihood (what a device would estimate)
+    log_q, log_ids = sample_queries(rng, db, p_true, 5000)
+    p_est = empirical_likelihood(log_ids, 3000)
+    assert unbalance_score(p_est) > 0.05
+    idx = auto_build_index(db, p=p_est)
+    assert idx.spec.kind == "qlbt"
+    q, gt = sample_queries(rng, db, p_true, 512, noise_scale=0.05)
+    _, ids, work = idx.search(q, 10, beam_width=16)
+    assert recall_at_k(ids, gt) >= 0.9
+    assert work["candidates"] > 0
+
+
+def test_large_corpus_two_level_flow():
+    """>30K entities -> two-level PQ+brute; recall@10 >= 0.8 (paper's
+    deployability bar)."""
+    rng = np.random.default_rng(1)
+    db = _corpus(rng, 40_000, d=32, k=128)
+    idx = auto_build_index(db)
+    assert idx.spec.kind == "two_level"
+    q = db[:256] + rng.normal(0, 0.05, size=(256, 32)).astype(np.float32)
+    _, gt = brute_search(q, db, 10)
+    _, ids, _ = idx.search(q, 10, nprobe=32)
+    assert recall_at_k(ids, gt) >= 0.8
+
+
+def test_serving_engine_end_to_end_with_index():
+    rng = np.random.default_rng(2)
+    db = _corpus(rng, 2000, d=32)
+    idx = auto_build_index(db)   # tree (no traffic)
+
+    def search_fn(qs):
+        d, i, _ = idx.search(qs, 10, beam_width=16)
+        return d, i
+
+    eng = ServingEngine(search_fn, max_batch=32, max_wait_ms=2.0)
+    q = db[:100] + rng.normal(0, 0.02, size=(100, 32)).astype(np.float32)
+    futs = [eng.submit(q[j]) for j in range(100)]
+    outs = [f.get(timeout=60) for f in futs]
+    eng.close()
+    _, gt = brute_search(q, db, 10)
+    ids = np.stack([o[1] for o in outs])
+    assert recall_at_k(ids, gt) >= 0.9
+    st = eng.stats()
+    assert st.n == 100 and st.p99_ms > 0
+
+
+def test_personalization_rebuild_with_new_likelihood():
+    """Paper §3.1: rebuilding the QLBT for a new traffic distribution is a
+    config-preserving operation (the personalization path)."""
+    from repro.core.likelihood import beta_for_unbalance
+
+    rng = np.random.default_rng(3)
+    db = _corpus(rng, 2000, d=48)
+    _, _, p1 = beta_for_unbalance(0.35, 2000, seed=1)
+    idx = auto_build_index(db, p=p1)
+    d1 = idx.tree.expected_depth(p1)
+    # traffic shifts: a different user's head entities
+    p2 = np.roll(p1, 997)
+    d_stale = idx.tree.expected_depth(p2)
+    idx.rebuild_with_likelihood(p2, seed=1)
+    d2 = idx.tree.expected_depth(p2)
+    assert d2 <= d_stale + 1e-9         # rebuilt tree fits the new traffic
+    q, gt = sample_queries(rng, db, p2, 256, noise_scale=0.05)
+    _, ids, _ = idx.search(q, 10, beam_width=16)
+    assert recall_at_k(ids, gt) >= 0.9
+
+
+def test_two_level_incremental_insert():
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+
+    rng = np.random.default_rng(4)
+    db = _corpus(rng, 5000, d=32)
+    idx_tl = build_two_level(db, TwoLevelConfig(
+        n_clusters=64, top="brute", bottom="brute", kmeans_iters=4))
+    new = _corpus(rng, 200, d=32)
+    ids = idx_tl.add_entities(new)
+    assert ids.min() == 5000 and ids.max() == 5199
+    # every new entity is indexed exactly once
+    flat = idx_tl.bucket_ids[idx_tl.bucket_ids >= 5000]
+    assert sorted(flat.tolist()) == list(range(5000, 5200))
+    # and findable: query exactly at the new points
+    d, i, _ = idx_tl.search(new[:64], 1, nprobe=8)
+    hit = (i[:, 0] >= 5000).mean()
+    assert hit > 0.9

@@ -1,0 +1,200 @@
+"""Substrate: optimizers, compression, checkpoint/restart, fault injection,
+watchdog, serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LMConfig
+from repro.data.lm import LMStream
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+from repro.train import checkpoint as C
+from repro.train import optim
+from repro.train.compression import (
+    dequantize_int8,
+    make_ef_transform,
+    quantize_int8,
+)
+from repro.train.fault import (
+    FaultInjected,
+    Watchdog,
+    make_fault_injector,
+    run_with_restart,
+)
+from repro.train.loop import init_state, make_train_step, train
+
+CFG = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+               d_head=16, d_ff=64, vocab=128, scan_layers=True, remat=False)
+KEY = jax.random.PRNGKey(0)
+STREAM = LMStream(CFG.vocab, 16, 4, seed=0)
+
+
+def _loss(p, b):
+    return T.loss_fn(p, b, CFG)
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor", "sgd"])
+def test_optimizers_reduce_loss(opt_name):
+    opt = {
+        "adamw": optim.adamw(optim.constant_lr(1e-3)),
+        "adafactor": optim.adafactor(optim.constant_lr(1e-2),
+                                     min_dim_factored=16),
+        "sgd": optim.sgd(optim.constant_lr(1e-2)),
+    }[opt_name]
+    state = init_state(T.init(CFG, KEY), opt)
+    res = train(state, make_train_step(_loss, opt), STREAM.batch_at, 25,
+                log_every=8)
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+
+
+def test_grad_accumulation_matches_big_batch():
+    opt = optim.sgd(optim.constant_lr(1e-2), momentum=0.0)
+    big = STREAM.batch_at(0)
+    micro = {k: v.reshape(2, 2, *v.shape[1:]) for k, v in big.items()}
+    s1 = init_state(T.init(CFG, KEY), opt)
+    s2 = init_state(T.init(CFG, KEY), opt)
+    step1 = jax.jit(make_train_step(_loss, opt))
+    stepa = jax.jit(make_train_step(_loss, opt, accum=2))
+    s1, _ = step1(s1, big)
+    s2, _ = stepa(s2, micro)
+    a = np.asarray(jax.tree.leaves(s1.params)[0])
+    b = np.asarray(jax.tree.leaves(s2.params)[0])
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_int8_quantization_bounds_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x)).max()
+    assert err <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_carries_residual():
+    init, apply = make_ef_transform()
+    g = {"w": jnp.full((8, 8), 0.003)}
+    buf = init(g)
+    total = np.zeros((8, 8), np.float32)
+    for _ in range(30):
+        out, buf = apply(g, buf)
+        total += np.asarray(out["w"])
+    # mean emitted gradient converges to the true gradient despite int8
+    np.testing.assert_allclose(total / 30, 0.003, rtol=0.05)
+
+
+def test_compressed_training_parity():
+    opt = optim.adamw(optim.constant_lr(1e-3))
+    plain = train(init_state(T.init(CFG, KEY), opt),
+                  make_train_step(_loss, opt), STREAM.batch_at, 25,
+                  log_every=24)
+    opt2 = optim.adamw(optim.constant_lr(1e-3))
+    comp = train(init_state(T.init(CFG, KEY), opt2, compress=True),
+                 make_train_step(_loss, opt2, compress=True),
+                 STREAM.batch_at, 25, log_every=24)
+    assert abs(plain.history[-1]["loss"] - comp.history[-1]["loss"]) < 0.1
+
+
+def test_checkpoint_restart_bit_identical():
+    opt = optim.adamw(optim.constant_lr(1e-3))
+    step = make_train_step(_loss, opt)
+    with tempfile.TemporaryDirectory() as d:
+        full = train(init_state(T.init(CFG, KEY), opt), step,
+                     STREAM.batch_at, 14, ckpt_dir=d, ckpt_every=7,
+                     ckpt_async=False)
+        assert C.latest_step(d) == 14
+        resumed_state = C.restore(d, 7, init_state(T.init(CFG, KEY), opt))
+        resumed = train(resumed_state, step, STREAM.batch_at, 14)
+        for a, b in zip(jax.tree.leaves(full.state.params),
+                        jax.tree.leaves(resumed.state.params)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_checkpoint_crc_detects_corruption():
+    opt = optim.sgd(optim.constant_lr(1e-2))
+    with tempfile.TemporaryDirectory() as d:
+        state = init_state(T.init(CFG, KEY), opt)
+        C.save(d, 5, state)
+        target = None
+        for f in os.listdir(os.path.join(d, "step_00000005")):
+            if f.endswith(".npy"):
+                target = os.path.join(d, "step_00000005", f)
+                break
+        with open(target, "r+b") as fh:
+            fh.seek(100)
+            fh.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            C.restore(d, 5, state)
+
+
+def test_fault_injection_restart_recovers():
+    """Crash at step 9 -> supervisor restarts from ckpt -> final params
+    bit-identical to an uninterrupted run (stateless data order)."""
+    opt = optim.adamw(optim.constant_lr(1e-3))
+    step = make_train_step(_loss, opt)
+    with tempfile.TemporaryDirectory() as d:
+        baseline = train(init_state(T.init(CFG, KEY), opt), step,
+                         STREAM.batch_at, 16)
+        inject = make_fault_injector({9})
+
+        def run(resume):
+            if resume is None:
+                state = init_state(T.init(CFG, KEY), opt)
+            else:
+                last = C.latest_step(d)
+                state = C.restore(d, last,
+                                  init_state(T.init(CFG, KEY), opt))
+            return train(state, step, STREAM.batch_at, 16, ckpt_dir=d,
+                         ckpt_every=4, ckpt_async=False,
+                         fault_injector=inject)
+
+        result, restarts = run_with_restart(run, max_restarts=2)
+        assert restarts == 1
+        for a, b in zip(jax.tree.leaves(baseline.state.params),
+                        jax.tree.leaves(result.state.params)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(factor=3.0, warmup=3)
+    for i in range(20):
+        wd.observe(i, 0.01 if i != 15 else 0.2)
+    assert wd.straggler_steps == [15]
+
+
+def test_serving_engine_batches_and_tracks_latency():
+    def search_fn(qs):
+        d = np.zeros((qs.shape[0], 5), np.float32)
+        i = np.tile(np.arange(5, dtype=np.int32), (qs.shape[0], 1))
+        return d, i
+
+    eng = ServingEngine(search_fn, max_batch=8, max_wait_ms=5.0)
+    futs = [eng.submit(np.ones(4, np.float32)) for _ in range(20)]
+    outs = [f.get(timeout=10) for f in futs]
+    assert all(o[1].shape == (5,) for o in outs)
+    st = eng.stats()
+    assert st.n == 20 and st.p90_ms >= st.p50_ms >= 0
+    assert max(st.batch_sizes) > 1      # micro-batching actually batched
+    eng.close()
+
+
+def test_serving_engine_hedges_stragglers():
+    import time as _t
+
+    def slow(qs):
+        _t.sleep(0.2)
+        return np.zeros((qs.shape[0], 1)), np.zeros((qs.shape[0], 1),
+                                                    np.int32)
+
+    def fast(qs):
+        return (np.ones((qs.shape[0], 1)),
+                np.ones((qs.shape[0], 1), np.int32))
+
+    eng = ServingEngine(slow, hedge_fn=fast, hedge_ms=20.0, max_batch=4)
+    d, i = eng.search(np.zeros(3, np.float32))
+    assert eng.hedges >= 1
+    assert i[0] == 1          # the hedge's answer won
+    eng.close()
