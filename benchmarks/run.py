@@ -18,7 +18,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale corpora (1M SIFT / 10M DEEP)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,table1,fig2d,fig3,roofline")
+                    help="comma list: fig1,table1,fig2d,fig3,sharded,"
+                         "roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -42,6 +43,11 @@ def main() -> None:
         from benchmarks import fig3_protocol
 
         fig3_protocol.run()
+    if want("sharded"):
+        from benchmarks import fig4_sharded
+
+        fig4_sharded.run(shards=(1, 2, 4, 8) if args.full else (1, 2, 4),
+                         n=100_000 if args.full else 20_000)
     if want("roofline"):
         from benchmarks import roofline
 

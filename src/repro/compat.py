@@ -1,0 +1,73 @@
+"""Version-portability layer for JAX APIs that moved between releases.
+
+The repo targets a range of JAX versions; the distributed layer is built on
+``shard_map``, whose home and signature have churned:
+
+  * <= 0.4.x : ``jax.experimental.shard_map.shard_map`` with ``check_rep``
+  * >= 0.5   : ``jax.shard_map`` with ``check_rep`` renamed ``check_vma``
+
+Every call site in the repo imports ``shard_map`` from here and may pass
+either ``check_vma`` or ``check_rep``; the shim resolves the implementation
+once at import and rewrites the kwarg to whatever the installed JAX accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map", "SHARD_MAP_IMPL", "SHARD_MAP_CHECK_KWARG"]
+
+
+def _resolve():
+    """Find the installed shard_map and the name of its replication-check
+    kwarg.  Returns (impl, kwarg_name | None)."""
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl  # noqa: F811
+    try:
+        params = inspect.signature(impl).parameters
+    except (TypeError, ValueError):   # C-implemented / wrapped callable
+        params = {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return impl, name
+    return impl, None
+
+
+SHARD_MAP_IMPL, SHARD_MAP_CHECK_KWARG = _resolve()
+
+
+def shard_map(f=None, /, *, mesh, in_specs, out_specs,
+              check_vma=None, check_rep=None, **kwargs):
+    """Portable ``shard_map``.
+
+    Accepts the new-style ``check_vma`` or the old-style ``check_rep``
+    spelling (they mean the same thing: verify that outputs declared
+    replicated really are); whichever is given is forwarded under the name
+    the installed JAX understands.  With ``f=None`` returns a decorator,
+    matching the jax>=0.5 partial-application form.
+    """
+    if f is None:
+        return lambda fn: shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, check_rep=check_rep, **kwargs)
+    if check_vma is not None and check_rep is not None:
+        raise ValueError("pass only one of check_vma/check_rep")
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        if SHARD_MAP_CHECK_KWARG is not None:
+            kwargs[SHARD_MAP_CHECK_KWARG] = bool(check)
+        else:
+            # introspection failed (wrapped/C-implemented impl): probe both
+            # spellings rather than silently dropping the flag — out_specs
+            # in the distributed layer rely on the check being disabled.
+            for name in ("check_vma", "check_rep"):
+                try:
+                    return SHARD_MAP_IMPL(
+                        f, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, **{name: bool(check)}, **kwargs)
+                except TypeError:
+                    continue
+    return SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)

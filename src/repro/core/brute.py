@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["l2_topk_exact", "brute_search", "pairwise_l2sq"]
+__all__ = ["l2_topk_exact", "brute_search", "pairwise_l2sq", "batched_l2sq"]
 
 
 def pairwise_l2sq(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -22,6 +22,19 @@ def pairwise_l2sq(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     qn = jnp.sum(q * q, axis=-1, keepdims=True)         # (B, 1)
     xn = jnp.sum(x * x, axis=-1)                        # (N,)
     return qn + xn[None, :] - 2.0 * (q @ x.T)
+
+
+def batched_l2sq(vecs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """(B, C, d) candidates x (B, d) queries -> (B, C) squared L2.
+
+    The per-query candidate-tile counterpart of ``pairwise_l2sq``; every
+    rerank/probe scan shares this one expansion so the numerics cannot
+    drift between the single-device and sharded paths."""
+    return (
+        jnp.sum(vecs * vecs, -1)
+        - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
+        + jnp.sum(q * q, -1, keepdims=True)
+    )
 
 
 @partial(jax.jit, static_argnames=("k", "chunk"))

@@ -1,163 +1,25 @@
-"""Mesh-sharded ANN search — the paper's algorithm at datacenter scale.
+"""Back-compat shim: the sharded search moved to ``repro.distributed``.
 
-The two-level structure gains one more level: the mesh.  Buckets (and their
-centroids) are sharded across every chip; queries are replicated; each chip
-runs the paper's top+bottom search over its local shard; a tiny
-``all_gather`` of per-chip top-k (k * 8 bytes per query) merges globally.
-The collective term is therefore O(devices * B * k) bytes — independent of
-corpus size, which is what makes the approach scale-out friendly
-(EXPERIMENTS.md §Roofline, ann rows).
-
-Functions here are built with ``shard_map`` so the communication pattern is
-explicit and auditable in the lowered HLO (one all-gather per search).
+This module re-exports the distributed ANN entry points from their new
+home next to ``ShardPlan`` in :mod:`repro.distributed.sharding`, where the
+subsystem also gained a tree/QLBT forest bottom level, query-axis
+batch sharding, and a serving backend (``repro.distributed.backend``).
+Import from ``repro.distributed`` in new code.
 """
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.core.brute import pairwise_l2sq
+from repro.distributed.sharding import (  # noqa: F401
+    make_sharded_brute_fn,
+    make_sharded_forest_fn,
+    make_sharded_ivf_fn,
+    sharded_brute_search,
+    sharded_forest_search,
+    sharded_ivf_search,
+)
 
 __all__ = [
     "sharded_brute_search",
     "sharded_ivf_search",
+    "sharded_forest_search",
     "make_sharded_brute_fn",
     "make_sharded_ivf_fn",
+    "make_sharded_forest_fn",
 ]
-
-
-def _merge_gathered(gd, gi, k):
-    """(S, B, k) per-shard results -> global (B, k)."""
-    s, b, kk = gd.shape
-    cat_d = jnp.moveaxis(gd, 0, 1).reshape(b, s * kk)
-    cat_i = jnp.moveaxis(gi, 0, 1).reshape(b, s * kk)
-    neg, sel = jax.lax.top_k(-cat_d, k)
-    return -neg, jnp.take_along_axis(cat_i, sel, axis=1)
-
-
-def make_sharded_brute_fn(mesh: Mesh, axes: tuple[str, ...], k: int,
-                          shard_rows: int):
-    """Exact distributed search: db row-sharded over ``axes``."""
-
-    def local(db_shard, q):
-        d2 = pairwise_l2sq(q, db_shard)                    # (B, rows)
-        neg, ids = jax.lax.top_k(-d2, k)
-        lin = jax.lax.axis_index(axes)                     # flattened index
-        gids = (ids + lin * shard_rows).astype(jnp.int32)
-        gd = jax.lax.all_gather(-neg, axes, tiled=False)   # (S, B, k)
-        gi = jax.lax.all_gather(gids, axes, tiled=False)
-        return _merge_gathered(gd, gi, k)
-
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None)),
-        out_specs=(P(None, None), P(None, None)),
-        check_vma=False,   # outputs replicated by the final all-gather merge
-    )
-
-
-def sharded_brute_search(mesh, db, queries, k=10,
-                         axes=("data", "model")):
-    """Host entry: shards db over the mesh and runs the distributed scan."""
-    n = db.shape[0]
-    n_dev = 1
-    for a in axes:
-        n_dev *= mesh.shape[a]
-    rows = -(-n // n_dev)
-    dbp = jnp.pad(jnp.asarray(db), ((0, rows * n_dev - n), (0, 0)),
-                  constant_values=jnp.inf)   # inf rows never win top-k
-    fn = make_sharded_brute_fn(mesh, axes, k, rows)
-    with mesh:
-        dbs = jax.device_put(dbp, NamedSharding(mesh, P(axes, None)))
-        qs = jax.device_put(jnp.asarray(queries),
-                            NamedSharding(mesh, P(None, None)))
-        d, i = fn(dbs, qs)
-    d, i = jax.device_get((d, i))
-    i = jnp.where(i < n, i, -1)
-    return d, i
-
-
-def make_sharded_ivf_fn(mesh: Mesh, axes: tuple[str, ...], k: int,
-                        nprobe_local: int, buckets_per_shard: int):
-    """Distributed two-level: centroids + padded buckets sharded over mesh.
-
-    Each chip: (1) scores its local centroids, (2) probes its local
-    ``nprobe_local`` best buckets, (3) contributes its local top-k to the
-    global all-gather merge.  Global nprobe = nprobe_local * n_shards —
-    probing is *wider* than single-chip at equal latency, a scale-out win
-    the paper's single-device protocol cannot reach.
-    """
-
-    def local(cents, bucket_ids, bucket_vecs, q):
-        # cents: (Kloc, d); bucket_ids: (Kloc, cap); bucket_vecs (Kloc, cap, d)
-        d2c = pairwise_l2sq(q, cents)                      # (B, Kloc)
-        _, probe = jax.lax.top_k(-d2c, nprobe_local)       # (B, np)
-
-        def scan_probe(carry, j):
-            best_d, best_i = carry
-            bsel = probe[:, j]                             # (B,)
-            ids = bucket_ids[bsel]                         # (B, cap)
-            vecs = bucket_vecs[bsel]                       # (B, cap, d)
-            d2 = (
-                jnp.sum(vecs * vecs, -1)
-                - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
-                + jnp.sum(q * q, -1, keepdims=True)
-            )
-            d2 = jnp.where(ids >= 0, d2, jnp.inf)
-            cat_d = jnp.concatenate([best_d, d2], axis=1)
-            cat_i = jnp.concatenate([best_i, ids], axis=1)
-            neg, sel = jax.lax.top_k(-cat_d, k)
-            return (-neg, jnp.take_along_axis(cat_i, sel, 1)), None
-
-        B = q.shape[0]
-        init = (jnp.full((B, k), jnp.inf, jnp.float32),
-                jnp.full((B, k), -1, jnp.int32))
-        (ld, li), _ = jax.lax.scan(scan_probe, init,
-                                   jnp.arange(nprobe_local))
-        gd = jax.lax.all_gather(ld, axes, tiled=False)
-        gi = jax.lax.all_gather(li, axes, tiled=False)
-        return _merge_gathered(gd, gi, k)
-
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axes, None), P(axes, None), P(axes, None, None),
-                  P(None, None)),
-        out_specs=(P(None, None), P(None, None)),
-        check_vma=False,   # outputs replicated by the final all-gather merge
-    )
-
-
-def sharded_ivf_search(mesh, index, queries, k=10, nprobe_local=2,
-                       axes=("data", "model")):
-    """Host entry: shards a built TwoLevelIndex over the mesh.
-
-    ``index.bucket_ids`` keeps *global* entity ids, so the merged result
-    ids are directly comparable with the single-chip index.
-    """
-    n_dev = 1
-    for a in axes:
-        n_dev *= mesh.shape[a]
-    K, cap = index.bucket_ids.shape
-    Kp = -(-K // n_dev) * n_dev
-    pad = Kp - K
-    cents = jnp.pad(jnp.asarray(index.centroids), ((0, pad), (0, 0)),
-                    constant_values=jnp.inf)
-    bids = jnp.pad(jnp.asarray(index.bucket_ids), ((0, pad), (0, 0)),
-                   constant_values=-1)
-    dbj = jnp.asarray(index.db)
-    bvecs = dbj[jnp.maximum(bids, 0)]
-    bvecs = jnp.where((bids >= 0)[..., None], bvecs, 0.0)
-    fn = make_sharded_ivf_fn(mesh, axes, k, nprobe_local, Kp // n_dev)
-    with mesh:
-        put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
-        d, i = fn(
-            put(cents, P(axes, None)),
-            put(bids, P(axes, None)),
-            put(bvecs, P(axes, None, None)),
-            put(jnp.asarray(queries, jnp.float32), P(None, None)),
-        )
-    return jax.device_get((d, i))

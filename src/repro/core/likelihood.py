@@ -68,8 +68,6 @@ def beta_for_unbalance(
     """
     if not 0.0 <= target < 1.0:
         raise ValueError("target unbalance must be in [0, 1)")
-    rng = np.random.default_rng(seed)
-    # Sample base uniforms once so the search is monotone in `a`.
     lo, hi = 1e-3, 64.0
 
     def score_for(a: float) -> tuple[float, np.ndarray]:

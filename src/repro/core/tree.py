@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.brute import batched_l2sq
+
 __all__ = [
     "FlatTree",
     "build_rp_tree",
@@ -525,9 +527,7 @@ def tree_search(
                                 steps, visits, n_cand)
 
     vecs = db[jnp.maximum(cand, 0)]                        # (B, C, d)
-    diff2 = jnp.sum(vecs * vecs, -1) - 2.0 * jnp.einsum(
-        "bcd,bd->bc", vecs, queries
-    ) + jnp.sum(queries * queries, -1, keepdims=True)
+    diff2 = batched_l2sq(vecs, queries)
     diff2 = jnp.where(cand >= 0, diff2, jnp.inf)
     # dedupe identical ids from overlapping beams is unnecessary: leaves
     # partition entities, so ids are unique by construction.

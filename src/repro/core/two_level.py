@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tree as tree_mod
-from repro.core.brute import l2_topk_exact, pairwise_l2sq
+from repro.core.brute import batched_l2sq, l2_topk_exact, pairwise_l2sq
 from repro.core.kmeans import kmeans_fit
 from repro.core.lsh import LSHIndex, hamming_scores, lsh_build, pack_bits
 from repro.core.pq import ProductQuantizer, adc_lut, adc_scores, pq_train
@@ -275,17 +275,12 @@ def _probe_scan_brute(db, bucket_ids, buckets, q, k):
     is the `kernels/l2_topk` tile loop over the probed buckets.
     """
     B = q.shape[0]
-    qn = jnp.sum(q * q, axis=-1, keepdims=True)
 
     def step(carry, bs):                       # bs: (B,) bucket id per query
         best_d, best_i = carry
         cand = bucket_ids[bs]                  # (B, cap)
         vecs = db[jnp.maximum(cand, 0)]        # (B, cap, d)
-        d2 = (
-            jnp.sum(vecs * vecs, -1)
-            - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
-            + qn
-        )
+        d2 = batched_l2sq(vecs, q)
         d2 = jnp.where(cand >= 0, d2, jnp.inf)
         cat_d = jnp.concatenate([best_d, d2], axis=1)
         cat_i = jnp.concatenate([best_i, cand], axis=1)
@@ -330,15 +325,23 @@ def _probe_scan_lsh(codes, proj, bucket_ids, buckets, q, shortlist):
 @partial(jax.jit, static_argnames=("k",))
 def _rerank(db, q, cand, k):
     vecs = db[jnp.maximum(cand, 0)]
-    d2 = (
-        jnp.sum(vecs * vecs, -1)
-        - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
-        + jnp.sum(q * q, -1, keepdims=True)
-    )
+    d2 = batched_l2sq(vecs, q)
     d2 = jnp.where(cand >= 0, d2, jnp.inf)
-    # mask duplicate ids (same entity can enter via two probes only when
-    # forests overlap; brute path ids are unique). Cheap sort-free dedupe:
-    # keep first occurrence by penalizing later equal ids.
+    # mask duplicate ids (the same entity can enter via two overlapping
+    # probes): stable-sort the ids, flag every repeat of its left
+    # neighbour, scatter the flags back, and penalize all but the first
+    # occurrence so one entity holds at most one top-k slot.
+    B = cand.shape[0]
+    order = jnp.argsort(cand, axis=1)
+    sorted_ids = jnp.take_along_axis(cand, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((B, 1), bool),
+         (sorted_ids[:, 1:] == sorted_ids[:, :-1]) & (sorted_ids[:, 1:] >= 0)],
+        axis=1,
+    )
+    dup = jnp.zeros(cand.shape, bool) \
+        .at[jnp.arange(B)[:, None], order].set(dup_sorted)
+    d2 = jnp.where(dup, jnp.inf, d2)
     k = min(k, cand.shape[1])
     neg, sel = jax.lax.top_k(-d2, k)
     ids = jnp.take_along_axis(cand, sel, axis=1)

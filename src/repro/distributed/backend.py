@@ -1,0 +1,98 @@
+"""Sharded search as a ``ServingEngine`` backend.
+
+The host entries in :mod:`repro.distributed.sharding` re-place the corpus
+on every call — fine for tests, wrong for serving.  The backend does the
+expensive work once at construction (pad, shard, ``device_put``, build and
+``jit`` the shard_map callable) and leaves only query placement + the
+collective on the per-batch hot path, so the engine's micro-batches hit a
+handful of cached jit shapes.
+
+    eng = ServingEngine.sharded(mesh, index, k=10)        # convenience
+    eng = ServingEngine(ShardedSearchBackend(mesh, db))   # explicit
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    _axes_size,
+    _brute_device_arrays,
+    _forest_device_arrays,
+    _ivf_device_arrays,
+    _pad_queries,
+    _q_spec,
+    make_sharded_brute_fn,
+    make_sharded_forest_fn,
+    make_sharded_ivf_fn,
+)
+
+__all__ = ["ShardedSearchBackend"]
+
+
+class ShardedSearchBackend:
+    """Callable ``queries (B, d) -> (dists (B, k), ids (B, k))``.
+
+    ``target`` is either a raw ``(N, d)`` corpus (exact sharded scan) or a
+    built ``TwoLevelIndex`` (IVF for a brute bottom, forest descent for a
+    tree/qlbt bottom).  ``kind="auto"`` picks accordingly.
+    """
+
+    def __init__(self, mesh, target, *, kind: str = "auto", k: int = 10,
+                 axes=("data", "model"), query_axes=(),
+                 nprobe_local: int = 2, beam_width: int = 8):
+        self.mesh = mesh
+        self.k = k
+        self.axes = tuple(axes)
+        self.query_axes = tuple(query_axes)
+        n_dev = _axes_size(mesh, self.axes)
+
+        if kind == "auto":
+            if isinstance(target, np.ndarray) or hasattr(target, "shape"):
+                kind = "brute"
+            elif getattr(target, "forest", None) is not None:
+                kind = "forest"
+            else:
+                kind = "ivf"
+        self.kind = kind
+
+        put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
+        if kind == "brute":
+            dbp, rows, n = _brute_device_arrays(target, n_dev)
+            self._args = (put(dbp, P(self.axes, None)),)
+            self._fn = jax.jit(make_sharded_brute_fn(
+                mesh, self.axes, k, rows, n, self.query_axes))
+        elif kind == "ivf":
+            cents, bids, bvecs, Kp = _ivf_device_arrays(target, n_dev)
+            self._args = (
+                put(cents, P(self.axes, None)),
+                put(bids, P(self.axes, None)),
+                put(bvecs, P(self.axes, None, None)),
+            )
+            self._fn = jax.jit(make_sharded_ivf_fn(
+                mesh, self.axes, k, nprobe_local, Kp // n_dev,
+                target.bucket_ids.shape[0], self.query_axes))
+        elif kind == "forest":
+            dev, max_depth = _forest_device_arrays(
+                mesh, target, self.axes, n_dev)
+            self._args = (dev["cents"], dev["valid"], dev["roots"],
+                          dev["bucket_ids"], dev["bvecs"],
+                          dev["proj"], dev["dims"], dev["tau"],
+                          dev["children"], dev["leaf_row"],
+                          dev["leaf_entities"])
+            self._fn = jax.jit(make_sharded_forest_fn(
+                mesh, self.axes, k, nprobe_local, beam_width,
+                target.config.tree_leaf, max_depth, self.query_axes))
+        else:
+            raise ValueError(f"unknown backend kind {kind!r}")
+
+    def __call__(self, queries):
+        q, B = _pad_queries(self.mesh, queries, self.query_axes)
+        with self.mesh:
+            qs = jax.device_put(
+                q, NamedSharding(self.mesh, _q_spec(self.query_axes)))
+            d, i = self._fn(*self._args, qs)
+        d, i = jax.device_get((d, i))
+        return np.asarray(d)[:B], np.asarray(i)[:B]

@@ -1,8 +1,10 @@
-"""ShardPlan: symbolic sharding axes resolved per mesh.
+"""Sharded execution: ShardPlan (symbolic axes) + the sharded ANN search.
 
-Models annotate params/activations with *roles* — "dp" (batch), "fsdp"
-(param gather), "tp" (tensor), "ep" (expert) — and the launcher binds roles
-to concrete mesh axes:
+Two halves, one subsystem:
+
+``ShardPlan`` — models annotate params/activations with *roles* — "dp"
+(batch), "fsdp" (param gather), "tp" (tensor), "ep" (expert) — and the
+launcher binds roles to concrete mesh axes:
 
   single-pod (16,16) ("data","model"): dp=(data,) fsdp=(data,) tp=(model,)
                                        ep=(data,model)
@@ -11,6 +13,29 @@ to concrete mesh axes:
 so the same model code lowers on any mesh.  With no mesh bound, ``p()``
 returns fully-replicated specs and ``constrain`` is a no-op — the path unit
 tests take.
+
+Sharded search — the paper's two-level structure gains one more level: the
+mesh.  Buckets (and their centroids) are sharded across chips; each chip
+runs the paper's top+bottom search over its local shard; a tiny
+``all_gather`` of per-chip top-k (k * 8 bytes per query) merges globally.
+The collective term is O(devices * B * k) bytes — independent of corpus
+size, which is what makes the approach scale-out friendly (EXPERIMENTS.md
+§Roofline, ann rows).  Three bottom levels are distributed here:
+
+  * ``sharded_brute_search``  — exact scan, db row-sharded;
+  * ``sharded_ivf_search``    — two-level brute bottom, buckets sharded;
+  * ``sharded_forest_search`` — two-level tree/QLBT bottom: each shard
+    holds a slice of the concatenated per-bucket forest and descends it
+    locally before the global merge.
+
+Every entry point takes ``query_axes`` to additionally shard the *query*
+batch over a second mesh axis (corpus over one, queries over the other),
+so both B and N scale; the merge all-gathers only over the corpus axes and
+results come back sharded over the query axes.
+
+All collectives go through :mod:`repro.compat`'s ``shard_map`` so the
+communication pattern is explicit in the lowered HLO and the code runs on
+any JAX version (``jax.shard_map`` vs the 0.4.x experimental home).
 """
 from __future__ import annotations
 
@@ -18,10 +43,20 @@ import dataclasses
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN"]
+from repro.compat import shard_map
+from repro.core.brute import batched_l2sq, pairwise_l2sq
+
+__all__ = [
+    "ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN",
+    "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
+    "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
+    "shard_forest",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,3 +140,405 @@ MULTI_POD_PLAN = ShardPlan(
     dp=("pod", "data"), fsdp=("pod", "data"), tp=("model",),
     ep=("data", "model"), pp=("pod",),
 )
+
+
+# ---------------------------------------------------------------------------
+# Sharded search
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _q_spec(query_axes) -> P:
+    return P(tuple(query_axes), None) if query_axes else P(None, None)
+
+
+def _check_disjoint(axes, query_axes):
+    """Corpus and query axes must not overlap: the merge all-gathers over
+    the corpus axes, and a shared axis would top-k-merge results belonging
+    to *different* queries — silently wrong, so refuse up front."""
+    overlap = set(axes) & set(query_axes)
+    if overlap:
+        raise ValueError(
+            f"query_axes {tuple(query_axes)} overlap corpus axes "
+            f"{tuple(axes)} on {sorted(overlap)}; pass disjoint axes, e.g. "
+            "axes=('data',), query_axes=('model',)")
+
+
+def _brute_device_arrays(db, n_dev):
+    """Zero-pad db rows to the shard grid (pads masked by global row
+    index downstream).  Returns (padded db, rows per shard, real rows)."""
+    db = jnp.asarray(db, jnp.float32)
+    n = db.shape[0]
+    rows = -(-n // n_dev)
+    return jnp.pad(db, ((0, rows * n_dev - n), (0, 0))), rows, n
+
+
+def _merge_gathered(gd, gi, k):
+    """(S, B, k) per-shard results -> merged (B, k)."""
+    s, b, kk = gd.shape
+    cat_d = jnp.moveaxis(gd, 0, 1).reshape(b, s * kk)
+    cat_i = jnp.moveaxis(gi, 0, 1).reshape(b, s * kk)
+    neg, sel = jax.lax.top_k(-cat_d, k)
+    ids = jnp.take_along_axis(cat_i, sel, axis=1)
+    return -neg, jnp.where(jnp.isinf(-neg), -1, ids)
+
+
+def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
+                          n_rows: int, query_axes: tuple = ()):
+    """Exact distributed search: db row-sharded over ``axes``; queries
+    optionally batch-sharded over ``query_axes``.
+
+    Pad rows (db zero-padded up to the shard grid) are masked by *global row
+    index* — never by inf-valued vectors, whose distances evaluate to
+    ``inf - inf = NaN`` and can outrank real candidates in XLA's top_k.
+    """
+    _check_disjoint(axes, query_axes)
+    k_loc = min(k, shard_rows)   # a shard may hold fewer rows than k
+
+    def local(db_shard, q):
+        d2 = pairwise_l2sq(q, db_shard)                    # (B, rows)
+        lin = jax.lax.axis_index(axes)                     # flattened index
+        grow = lin * shard_rows + jnp.arange(shard_rows, dtype=jnp.int32)
+        d2 = jnp.where(grow[None, :] < n_rows, d2, jnp.inf)
+        neg, ids = jax.lax.top_k(-d2, k_loc)
+        gids = (ids + lin * shard_rows).astype(jnp.int32)
+        ld, li = -neg, gids
+        if k_loc < k:
+            ld = jnp.pad(ld, ((0, 0), (0, k - k_loc)),
+                         constant_values=jnp.inf)
+            li = jnp.pad(li, ((0, 0), (0, k - k_loc)), constant_values=-1)
+        gd = jax.lax.all_gather(ld, axes, tiled=False)     # (S, B, k)
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        return _merge_gathered(gd, gi, k)
+
+    qs = _q_spec(query_axes)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tuple(axes), None), qs),
+        out_specs=(qs, qs),
+        check_vma=False,   # merge all-gathers over the corpus axes only
+    )
+
+
+def _pad_queries(mesh, queries, query_axes):
+    q = jnp.asarray(queries, jnp.float32)
+    B = q.shape[0]
+    n_q = _axes_size(mesh, query_axes) if query_axes else 1
+    Bp = -(-B // n_q) * n_q
+    if Bp > B:
+        q = jnp.pad(q, ((0, Bp - B), (0, 0)))
+    return q, B
+
+
+def sharded_brute_search(mesh, db, queries, k=10, axes=("data", "model"),
+                         query_axes=()):
+    """Host entry: shards db rows over ``axes`` and runs the distributed
+    scan; ``query_axes`` shards the batch dim over a *disjoint* axis set."""
+    n_dev = _axes_size(mesh, axes)
+    dbp, rows, n = _brute_device_arrays(db, n_dev)
+    q, B = _pad_queries(mesh, queries, query_axes)
+    fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows, n,
+                               tuple(query_axes))
+    with mesh:
+        dbs = jax.device_put(dbp, NamedSharding(mesh, P(tuple(axes), None)))
+        qs = jax.device_put(q, NamedSharding(mesh, _q_spec(query_axes)))
+        d, i = fn(dbs, qs)
+    d, i = jax.device_get((d, i))
+    return np.asarray(d)[:B], np.asarray(i)[:B]
+
+
+def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
+                        buckets_per_shard: int, n_buckets: int,
+                        query_axes: tuple = ()):
+    """Distributed two-level, brute bottom: centroids + padded buckets
+    sharded over the mesh.
+
+    Each chip: (1) scores its local centroids, (2) probes its local
+    ``nprobe_local`` best buckets, (3) contributes its local top-k to the
+    global all-gather merge.  Global nprobe = nprobe_local * n_shards —
+    probing is *wider* than single-chip at equal latency, a scale-out win
+    the paper's single-device protocol cannot reach.  Pad centroids (zero
+    vectors beyond ``n_buckets``) are masked by global bucket index.
+    """
+
+    _check_disjoint(axes, query_axes)
+    nprobe_local = min(nprobe_local, buckets_per_shard)
+
+    def local(cents, bucket_ids, bucket_vecs, q):
+        # cents: (Kloc, d); bucket_ids: (Kloc, cap); bucket_vecs (Kloc, cap, d)
+        lin = jax.lax.axis_index(axes)
+        gbucket = lin * buckets_per_shard + jnp.arange(
+            buckets_per_shard, dtype=jnp.int32)
+        d2c = pairwise_l2sq(q, cents)                      # (B, Kloc)
+        d2c = jnp.where(gbucket[None, :] < n_buckets, d2c, jnp.inf)
+        _, probe = jax.lax.top_k(-d2c, nprobe_local)       # (B, np)
+
+        def scan_probe(carry, j):
+            best_d, best_i = carry
+            bsel = probe[:, j]                             # (B,)
+            ids = bucket_ids[bsel]                         # (B, cap)
+            vecs = bucket_vecs[bsel]                       # (B, cap, d)
+            d2 = batched_l2sq(vecs, q)
+            d2 = jnp.where(ids >= 0, d2, jnp.inf)
+            cat_d = jnp.concatenate([best_d, d2], axis=1)
+            cat_i = jnp.concatenate([best_i, ids], axis=1)
+            neg, sel = jax.lax.top_k(-cat_d, k)
+            return (-neg, jnp.take_along_axis(cat_i, sel, 1)), None
+
+        B = q.shape[0]
+        init = (jnp.full((B, k), jnp.inf, jnp.float32),
+                jnp.full((B, k), -1, jnp.int32))
+        (ld, li), _ = jax.lax.scan(scan_probe, init,
+                                   jnp.arange(nprobe_local))
+        gd = jax.lax.all_gather(ld, axes, tiled=False)
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        return _merge_gathered(gd, gi, k)
+
+    qs = _q_spec(query_axes)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tuple(axes), None), P(tuple(axes), None),
+                  P(tuple(axes), None, None), qs),
+        out_specs=(qs, qs),
+        check_vma=False,   # merge all-gathers over the corpus axes only
+    )
+
+
+def _ivf_device_arrays(index, n_dev):
+    """Pad a built TwoLevelIndex's centroid/bucket tables to the shard grid
+    (zero vectors, -1 ids — pads are masked by index, never by inf)."""
+    K, cap = index.bucket_ids.shape
+    Kp = -(-K // n_dev) * n_dev
+    pad = Kp - K
+    cents = jnp.pad(jnp.asarray(index.centroids, jnp.float32),
+                    ((0, pad), (0, 0)))
+    bids = jnp.pad(jnp.asarray(index.bucket_ids), ((0, pad), (0, 0)),
+                   constant_values=-1)
+    dbj = jnp.asarray(index.db)
+    bvecs = dbj[jnp.maximum(bids, 0)]
+    bvecs = jnp.where((bids >= 0)[..., None], bvecs, 0.0)
+    return cents, bids, bvecs, Kp
+
+
+def sharded_ivf_search(mesh, index, queries, k=10, nprobe_local=2,
+                       axes=("data", "model"), query_axes=()):
+    """Host entry: shards a built TwoLevelIndex (brute bottom) over the
+    mesh.  ``index.bucket_ids`` keeps *global* entity ids, so the merged
+    result ids are directly comparable with the single-chip index."""
+    n_dev = _axes_size(mesh, axes)
+    K = index.bucket_ids.shape[0]
+    cents, bids, bvecs, Kp = _ivf_device_arrays(index, n_dev)
+    fn = make_sharded_ivf_fn(mesh, tuple(axes), k, nprobe_local,
+                             Kp // n_dev, K, tuple(query_axes))
+    q, B = _pad_queries(mesh, queries, query_axes)
+    with mesh:
+        put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
+        d, i = fn(
+            put(cents, P(tuple(axes), None)),
+            put(bids, P(tuple(axes), None)),
+            put(bvecs, P(tuple(axes), None, None)),
+            put(q, _q_spec(query_axes)),
+        )
+    d, i = jax.device_get((d, i))
+    return np.asarray(d)[:B], np.asarray(i)[:B]
+
+
+# ---------------------------------------------------------------------------
+# Sharded tree/QLBT forest bottom level
+# ---------------------------------------------------------------------------
+
+
+def shard_forest(index, n_dev: int) -> dict:
+    """Slice a built forest index into ``n_dev`` equal-shape shards.
+
+    The two-level build concatenates per-bucket trees into one node table
+    (``two_level._build_forest``); bucket ``b`` owns node range
+    ``[roots[b], roots[b+1])`` and a contiguous run of leaf-table rows.
+    Each shard takes a contiguous block of buckets, re-bases node/leaf
+    offsets, and remaps leaf entity ids from *global* entity ids to local
+    *bucket-slot* ids (``bucket_row * cap + col``) so the rerank gathers
+    from the shard's own ``(Kloc, cap, d)`` vector tile — corpus memory
+    stays sharded.  One extra dead node per shard backs padded bucket
+    roots.  Returns host (numpy) arrays stacked on a leading shard dim.
+    """
+    f = index.forest
+    if f is None:
+        raise ValueError("index has no forest (bottom must be tree/qlbt)")
+    K, cap = index.bucket_ids.shape
+    Kloc = -(-K // n_dev)
+    arrays = {name: np.asarray(v) for name, v in f.arrays.items()}
+    roots = np.asarray(f.roots, dtype=np.int64)
+    n_nodes = arrays["children"].shape[0]
+    bounds = np.concatenate([roots, [n_nodes]])
+    d = index.db.shape[1]
+    leaf_sz = arrays["leaf_entities"].shape[1]
+
+    slices = []
+    for s in range(n_dev):
+        b0 = min(s * Kloc, K)
+        b1 = min(b0 + Kloc, K)
+        N0 = int(bounds[b0]) if b0 < K else n_nodes
+        N1 = int(bounds[b1]) if b0 < K else n_nodes
+        lr = arrays["leaf_row"][N0:N1]
+        rows = lr[lr >= 0]
+        L0 = int(rows.min()) if rows.size else 0
+        L1 = int(rows.max()) + 1 if rows.size else 0
+        if rows.size not in (0, L1 - L0):
+            raise ValueError(
+                f"shard {s}: leaf rows not contiguous ({rows.size} rows in "
+                f"window [{L0}, {L1})); _build_forest concatenation order "
+                "changed?")
+        slices.append((b0, b1, N0, N1, L0, L1))
+
+    maxN = max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0)
+    maxN = max(maxN, 1)
+    maxL = max((L1 - L0 for *_, L0, L1 in slices), default=0)
+    maxL = max(maxL, 1)
+    dead = maxN                               # per-shard dead-leaf node id
+
+    out = {
+        "proj": np.zeros((n_dev, maxN + 1, d), np.float32),
+        "dims": np.zeros((n_dev, maxN + 1), arrays["dims"].dtype),
+        "tau": np.zeros((n_dev, maxN + 1), np.float32),
+        "children": np.full((n_dev, maxN + 1, 2), -1, np.int32),
+        "leaf_row": np.full((n_dev, maxN + 1), -1, np.int32),
+        "leaf_entities": np.full((n_dev, maxL, leaf_sz), -1, np.int32),
+        "roots": np.full((n_dev, Kloc), dead, np.int32),
+        "valid": np.zeros((n_dev, Kloc), bool),
+        "cents": np.zeros((n_dev, Kloc, d), np.float32),
+        "bucket_ids": np.full((n_dev, Kloc, cap), -1, np.int32),
+        "bvecs": np.zeros((n_dev, Kloc, cap, d), np.float32),
+    }
+    for s, (b0, b1, N0, N1, L0, L1) in enumerate(slices):
+        nb, nn, nl = b1 - b0, N1 - N0, L1 - L0
+        if nb == 0:
+            continue
+        ch = arrays["children"][N0:N1].copy()
+        ch[ch >= 0] -= N0
+        lr = arrays["leaf_row"][N0:N1].copy()
+        lr[lr >= 0] -= L0
+        out["proj"][s, :nn] = arrays["proj"][N0:N1]
+        out["dims"][s, :nn] = arrays["dims"][N0:N1]
+        out["tau"][s, :nn] = arrays["tau"][N0:N1]
+        out["children"][s, :nn] = ch
+        out["leaf_row"][s, :nn] = lr
+        out["roots"][s, :nb] = (roots[b0:b1] - N0).astype(np.int32)
+        out["valid"][s, :nb] = True
+        out["cents"][s, :nb] = index.centroids[b0:b1]
+        bl = index.bucket_ids[b0:b1]
+        out["bucket_ids"][s, :nb] = bl
+        bv = index.db[np.maximum(bl, 0)]
+        out["bvecs"][s, :nb] = np.where((bl >= 0)[..., None], bv, 0.0)
+        # global entity id -> local bucket-slot id for this shard's leaves
+        slot_of = np.full(index.db.shape[0], -1, np.int64)
+        rr, cc = np.nonzero(bl >= 0)
+        slot_of[bl[rr, cc]] = rr * cap + cc
+        le = arrays["leaf_entities"][L0:L1].copy()
+        m = le >= 0
+        le[m] = slot_of[le[m]]
+        out["leaf_entities"][s, :nl] = le
+    out["max_depth"] = f.max_depth
+    return out
+
+
+def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,
+                           beam_width: int, leaf_size: int, max_depth: int,
+                           query_axes: tuple = ()):
+    """Distributed two-level, tree/QLBT bottom.
+
+    Per chip: score local centroids -> descend the local forest for the
+    ``nprobe_local`` best buckets (one batched beam search over the
+    shard's node table) -> rerank candidates against the shard's bucket
+    vector tile -> global all-gather merge, exactly as the brute/IVF paths.
+    """
+    from repro.core.tree import tree_search
+
+    _check_disjoint(axes, query_axes)
+
+    def local(cents, valid, roots, bids, bvecs,
+              proj, dims, tau, children, leaf_row, leaf_ents, q):
+        # every corpus-side array carries a leading length-1 shard dim
+        cents, valid, roots = cents[0], valid[0], roots[0]
+        bids, bvecs = bids[0], bvecs[0]
+        arrays = dict(proj=proj[0], dims=dims[0], tau=tau[0],
+                      children=children[0], leaf_row=leaf_row[0],
+                      leaf_entities=leaf_ents[0])
+        B, dd = q.shape
+        np_eff = min(nprobe_local, cents.shape[0])
+        d2c = pairwise_l2sq(q, cents)
+        d2c = jnp.where(valid[None, :], d2c, jnp.inf)
+        _, probe = jax.lax.top_k(-d2c, np_eff)             # (B, np)
+        rr = roots[probe].reshape(-1)
+        qq = jnp.repeat(q, np_eff, axis=0)                 # (B*np, d)
+        vecs_flat = bvecs.reshape(-1, dd)                  # (Kloc*cap, d)
+        res = tree_search(
+            arrays, vecs_flat, qq, kind="rp", beam_width=beam_width,
+            k=beam_width * leaf_size, max_steps=max_depth + 4,
+            rerank=False, roots=rr,
+        )
+        cand = res.ids.reshape(B, -1)                      # local slot ids
+        vecs = vecs_flat[jnp.maximum(cand, 0)]
+        d2 = batched_l2sq(vecs, q)
+        d2 = jnp.where(cand >= 0, d2, jnp.inf)
+        k_eff = min(k, cand.shape[1])
+        neg, sel = jax.lax.top_k(-d2, k_eff)
+        slot = jnp.take_along_axis(cand, sel, axis=1)
+        gids = bids.reshape(-1)[jnp.maximum(slot, 0)]
+        gids = jnp.where((slot >= 0) & ~jnp.isinf(-neg), gids, -1)
+        ld, li = -neg, gids.astype(jnp.int32)
+        if k_eff < k:
+            ld = jnp.pad(ld, ((0, 0), (0, k - k_eff)),
+                         constant_values=jnp.inf)
+            li = jnp.pad(li, ((0, 0), (0, k - k_eff)), constant_values=-1)
+        gd = jax.lax.all_gather(ld, axes, tiled=False)
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        return _merge_gathered(gd, gi, k)
+
+    qs = _q_spec(query_axes)
+    corpus = lambda ndim: P(tuple(axes), *([None] * (ndim - 1)))
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(corpus(3), corpus(2), corpus(2), corpus(3), corpus(4),
+                  corpus(3), corpus(2), corpus(2), corpus(3), corpus(2),
+                  corpus(3), qs),
+        out_specs=(qs, qs),
+        check_vma=False,   # merge all-gathers over the corpus axes only
+    )
+
+
+def _forest_device_arrays(mesh, index, axes, n_dev):
+    sh = shard_forest(index, n_dev)
+    max_depth = sh.pop("max_depth")
+    put = lambda x: jax.device_put(
+        jnp.asarray(x),
+        NamedSharding(mesh, P(tuple(axes), *([None] * (np.ndim(x) - 1)))),
+    )
+    return {name: put(v) for name, v in sh.items()}, max_depth
+
+
+def sharded_forest_search(mesh, index, queries, k=10, nprobe_local=2,
+                          beam_width=8, axes=("data", "model"),
+                          query_axes=()):
+    """Host entry: shards a built TwoLevelIndex with a tree/QLBT forest
+    bottom level over the mesh and runs the distributed descent."""
+    n_dev = _axes_size(mesh, axes)
+    dev, max_depth = _forest_device_arrays(mesh, index, axes, n_dev)
+    fn = make_sharded_forest_fn(
+        mesh, tuple(axes), k, nprobe_local, beam_width,
+        index.config.tree_leaf, max_depth, tuple(query_axes),
+    )
+    q, B = _pad_queries(mesh, queries, query_axes)
+    with mesh:
+        qs = jax.device_put(q, NamedSharding(mesh, _q_spec(query_axes)))
+        d, i = fn(dev["cents"], dev["valid"], dev["roots"],
+                  dev["bucket_ids"], dev["bvecs"],
+                  dev["proj"], dev["dims"], dev["tau"], dev["children"],
+                  dev["leaf_row"], dev["leaf_entities"], qs)
+    d, i = jax.device_get((d, i))
+    return np.asarray(d)[:B], np.asarray(i)[:B]

@@ -463,7 +463,7 @@ def _recsys_retrieval_cell(cfg, plan: ShardPlan, shape: ShapeSpec):
 
 
 def _ann_cell(cfg: AnnConfig, plan: ShardPlan, shape: ShapeSpec):
-    from repro.core.distributed import make_sharded_ivf_fn
+    from repro.distributed import make_sharded_ivf_fn
 
     mesh = plan.mesh
     axes = tuple(a for a in mesh.axis_names)
@@ -472,7 +472,8 @@ def _ann_cell(cfg: AnnConfig, plan: ShardPlan, shape: ShapeSpec):
     K = _pad_to(cfg.n_clusters, n_dev)
     cap = _pad_to(int(np.ceil(2.5 * cfg.n / cfg.n_clusters)), 8)
     nprobe_local = max(1, cfg.nprobe // n_dev)
-    fn = make_sharded_ivf_fn(mesh, axes, k, nprobe_local, K // n_dev)
+    fn = make_sharded_ivf_fn(mesh, axes, k, nprobe_local, K // n_dev,
+                             cfg.n_clusters)
     args = (
         jax.ShapeDtypeStruct((K, cfg.d), jnp.float32),
         jax.ShapeDtypeStruct((K, cap), jnp.int32),

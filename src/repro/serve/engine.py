@@ -77,6 +77,24 @@ class ServingEngine:
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
+    @classmethod
+    def sharded(cls, mesh, target, *, kind: str = "auto", k: int = 10,
+                axes=("data", "model"), query_axes=(), nprobe_local: int = 2,
+                beam_width: int = 8, **engine_kw) -> "ServingEngine":
+        """Engine over a mesh-sharded corpus/index.
+
+        Builds a :class:`repro.distributed.backend.ShardedSearchBackend`
+        (corpus pre-placed on the mesh, shard_map search jitted once) and
+        serves it; ``engine_kw`` passes through to the engine constructor
+        (``max_batch``, ``hedge_fn``, ...).
+        """
+        from repro.distributed.backend import ShardedSearchBackend
+
+        fn = ShardedSearchBackend(
+            mesh, target, kind=kind, k=k, axes=axes, query_axes=query_axes,
+            nprobe_local=nprobe_local, beam_width=beam_width)
+        return cls(fn, **engine_kw)
+
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)

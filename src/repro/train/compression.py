@@ -9,10 +9,12 @@ Two integration points:
   * ``make_ef_transform`` — a gradient transform inside the train step
     (models the end-to-end numerics anywhere, used by default when
     ``compress_grads`` is on; convergence-parity tested).
-  * ``compressed_psum`` — an explicit shard_map collective that all-gathers
-    int8 payloads and reduces locally: 4x less cross-pod traffic than an
-    fp32 all-reduce.  Used by the hand-rolled DP driver and exercised on
-    the fake 8-device mesh in tests.
+  * ``compressed_psum`` — an explicit shard_map collective (build the
+    wrapper with :func:`repro.compat.shard_map`, which papers over the
+    ``jax.shard_map`` vs ``jax.experimental.shard_map`` move) that
+    all-gathers int8 payloads and reduces locally: 4x less cross-pod
+    traffic than an fp32 all-reduce.  Used by the hand-rolled DP driver
+    and exercised on the fake 8-device mesh in tests.
 """
 from __future__ import annotations
 
@@ -60,7 +62,8 @@ def make_ef_transform():
 def compressed_psum(x, axis_name):
     """int8 all-gather + local reduce — a compressed mean over ``axis``.
 
-    Must run inside shard_map.  Payload: 1 byte/element + one fp32 scale
+    Must run inside shard_map (``repro.compat.shard_map`` for the
+    version-portable entry).  Payload: 1 byte/element + one fp32 scale
     per shard, vs 4 bytes/element for fp32 psum.
     """
     q, scale = quantize_int8(x)

@@ -5,3 +5,20 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def subprocess_env():
+    """Env for subprocess tests that re-import JAX with their own XLA_FLAGS.
+
+    ``JAX_PLATFORMS=cpu`` is mandatory: the image ships a TPU PJRT plugin
+    and without the pin the child probes for TPU hardware and can hang for
+    minutes before falling back to CPU.
+    """
+    return {
+        "PYTHONPATH": os.path.join(REPO, "src"),
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": "cpu",
+    }

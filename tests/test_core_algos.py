@@ -180,3 +180,49 @@ def test_radius_graph_two_level_matches_brute():
     e1 = set(zip(s1.tolist(), d1.tolist()))
     e2 = set(zip(s2.tolist(), d2.tolist()))
     assert len(e2 & e1) / max(len(e1), 1) > 0.95
+
+
+def test_rerank_dedupes_duplicate_candidates():
+    """One entity must hold at most one top-k slot even when overlapping
+    probes surface it several times (satellite of the forest dedupe fix)."""
+    from repro.core.two_level import _rerank
+
+    rng = np.random.default_rng(11)
+    db = rng.normal(size=(50, 8)).astype(np.float32)
+    q = rng.normal(size=(3, 8)).astype(np.float32)
+    # heavy duplication + pads; unique real candidates: {1, 3, 5, 7}
+    row = np.array([3, 3, 7, 1, 3, -1, 7, 5, -1, 3], np.int32)
+    cand = np.tile(row, (3, 1))
+    d, i = _rerank(jnp.asarray(db), jnp.asarray(q), jnp.asarray(cand), 6)
+    d, i = np.asarray(d), np.asarray(i)
+    uniq = np.array([1, 3, 5, 7])
+    d_true, i_true = brute_search(q, db[uniq], 4)
+    for b in range(3):
+        real = i[b][i[b] >= 0]
+        assert len(set(real.tolist())) == len(real) == 4   # unique, all 4
+        assert np.array_equal(uniq[i_true[b]], real)       # right order
+        assert np.allclose(d[b, :4], d_true[b], atol=1e-5)
+        assert (i[b, 4:] == -1).all() and np.isinf(d[b, 4:]).all()
+
+
+def test_add_entities_grows_bucket_pad_on_overflow():
+    """Incremental insert past total pad capacity must grow the pad width
+    and keep every entity indexed exactly once."""
+    rng = np.random.default_rng(12)
+    db = _clustered(rng, 40, 8, k=2)
+    cap = 30
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=2, top="brute", bottom="brute", kmeans_iters=4,
+        bucket_cap=cap))
+    assert idx.bucket_ids.shape[1] == cap
+    new = _clustered(rng, 25, 8, k=2)          # 65 > 2 * 30 total capacity
+    ids = idx.add_entities(new)
+    assert idx.bucket_ids.shape[1] > cap       # pad width grew
+    flat = idx.bucket_ids[idx.bucket_ids >= 0]
+    assert sorted(flat.tolist()) == list(range(65))   # each exactly once
+    assert np.array_equal(ids, np.arange(40, 65))
+    assert np.array_equal(
+        idx.bucket_counts,
+        np.array([(idx.bucket_ids[b] >= 0).sum() for b in range(2)]))
+    d, i, _ = idx.search(new, 1, nprobe=2)
+    assert (i[:, 0] >= 40).mean() > 0.9        # new points are findable

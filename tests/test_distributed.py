@@ -1,11 +1,21 @@
 """Multi-device semantics on 8 fake devices (subprocess: tests themselves
-run single-device).  Covers: distributed exact/IVF search, compressed psum,
-elastic checkpoint resharding, and a sharded LM train step."""
+run single-device).  Covers: distributed exact/IVF/forest search, query+
+corpus 2-axis sharding, the serving backend, compressed psum, elastic
+checkpoint resharding, and a sharded LM train step.
+
+The subprocess tests are marked ``slow`` (each pays a fresh 8-device JAX
+start-up); the in-process compat/slicing tests run in the default CI job.
+"""
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
+
+from conftest import REPO, subprocess_env
+
+slow = pytest.mark.slow
 
 _PRELUDE = """
 import os
@@ -20,18 +30,105 @@ def _run(body: str):
     code = _PRELUDE + textwrap.dedent(body)
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo",
+        timeout=600, env=subprocess_env(), cwd=REPO,
     )
     assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
     return r.stdout
 
 
+# ---------------------------------------------------------------------------
+# fast, in-process: the compat shim and the forest slicer
+# ---------------------------------------------------------------------------
+
+
+def test_compat_shard_map_single_device():
+    """The shim resolves a working shard_map and rewrites check_vma /
+    check_rep to whatever the installed JAX accepts."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import SHARD_MAP_CHECK_KWARG, shard_map
+
+    assert SHARD_MAP_CHECK_KWARG in ("check_vma", "check_rep", None)
+    mesh = jax.make_mesh((1,), ("data",))
+    x = np.arange(4, dtype=np.float32)
+    for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+        fn = shard_map(lambda s: s * 2, mesh=mesh, in_specs=(P("data"),),
+                       out_specs=P("data"), **kw)
+        assert np.allclose(np.asarray(fn(x)), x * 2)
+    with pytest.raises(ValueError):
+        shard_map(lambda s: s, mesh=mesh, in_specs=(P("data"),),
+                  out_specs=P("data"), check_vma=True, check_rep=False)
+
+
+def test_query_axes_must_be_disjoint_from_corpus_axes():
+    """A shared axis would top-k-merge results of *different* queries —
+    refuse loudly instead of returning silently wrong neighbors."""
+    import jax
+
+    from repro.distributed import sharded_brute_search
+
+    mesh = jax.make_mesh((1,), ("data",))
+    db = np.zeros((8, 4), np.float32)
+    with pytest.raises(ValueError, match="disjoint"):
+        sharded_brute_search(mesh, db, db[:2], 2,
+                             axes=("data",), query_axes=("data",))
+
+
+def test_core_distributed_shim_reexports():
+    """Old import path keeps working after the move to repro.distributed."""
+    from repro.core import distributed as old
+    from repro.distributed import sharding as new
+
+    assert old.sharded_brute_search is new.sharded_brute_search
+    assert old.sharded_ivf_search is new.sharded_ivf_search
+    assert old.sharded_forest_search is new.sharded_forest_search
+
+
+def test_shard_forest_slices_conserve_entities():
+    """Slicing the concatenated forest into shards keeps every node and
+    maps each leaf slot id back to the entity the global forest holds."""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed import shard_forest
+
+    rng = np.random.default_rng(0)
+    db = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=16, top="brute", bottom="tree", kmeans_iters=3,
+        tree_leaf=4))
+    n_dev = 4
+    sh = shard_forest(idx, n_dev)
+    K, cap = idx.bucket_ids.shape
+    Kloc = -(-K // n_dev)
+    # a real node is internal (children >= 0) or a leaf (leaf_row >= 0);
+    # everything else is shard padding / the dead node
+    total_nodes = sum(
+        int(((sh["children"][s, :, 0] >= 0)
+             | (sh["leaf_row"][s] >= 0)).sum())
+        for s in range(n_dev))
+    assert total_nodes == np.asarray(idx.forest.arrays["children"]).shape[0]
+    seen = []
+    for s in range(n_dev):
+        assert sh["valid"][s].sum() == min(Kloc, max(0, K - s * Kloc))
+        le = sh["leaf_entities"][s]
+        slots = le[le >= 0]
+        gids = sh["bucket_ids"][s].reshape(-1)[slots]
+        assert (gids >= 0).all()      # every slot id resolves to an entity
+        seen.append(gids)
+    seen = np.concatenate(seen)
+    # forests partition entities: each appears exactly once across shards
+    assert np.array_equal(np.sort(seen), np.arange(db.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# slow, subprocess: real 8-device semantics
+# ---------------------------------------------------------------------------
+
+
+@slow
 def test_sharded_brute_matches_exact():
     out = _run("""
-    from repro.core.distributed import sharded_brute_search
+    from repro.distributed import sharded_brute_search
     from repro.core.brute import brute_search
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
@@ -44,9 +141,31 @@ def test_sharded_brute_matches_exact():
     assert "MATCH 1.0" in out
 
 
+@slow
+def test_query_and_corpus_2axis_sharded_matches_exact():
+    """Corpus sharded over one mesh axis, query batch over the other —
+    results identical to the single-device scan (B not divisible by the
+    query axis exercises the host-side batch pad)."""
+    out = _run("""
+    from repro.distributed import sharded_brute_search
+    from repro.core.brute import brute_search
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(1)
+    db = rng.normal(size=(2500, 16)).astype(np.float32)
+    q = rng.normal(size=(37, 16)).astype(np.float32)   # 37 % 4 != 0
+    d, i = sharded_brute_search(mesh, db, q, 10,
+                                axes=("data",), query_axes=("model",))
+    dt, it = brute_search(q, db, 10)
+    print("MATCH", float((np.asarray(i) == it).mean()),
+          float(np.abs(np.asarray(d) - dt).max()))
+    """)
+    assert "MATCH 1.0" in out
+
+
+@slow
 def test_sharded_ivf_recall():
     out = _run("""
-    from repro.core.distributed import sharded_ivf_search
+    from repro.distributed import sharded_ivf_search
     from repro.core.two_level import TwoLevelConfig, build_two_level
     from repro.core.brute import brute_search
     from repro.core.metrics import recall_at_k
@@ -65,15 +184,67 @@ def test_sharded_ivf_recall():
     assert recall > 0.8
 
 
+@slow
+def test_sharded_forest_recall():
+    """Tree/QLBT forest bottom level, sharded: each chip descends its own
+    slice of the concatenated forest; merged recall clears the paper bar."""
+    out = _run("""
+    from repro.distributed import sharded_forest_search
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.core.brute import brute_search
+    from repro.core.metrics import recall_at_k
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    c = rng.normal(size=(32, 16)) * 4
+    db = (c[rng.integers(0, 32, 4000)] + rng.normal(size=(4000, 16))).astype(np.float32)
+    q = db[:64] + rng.normal(size=(64, 16)).astype(np.float32) * 0.05
+    idx = build_two_level(db, TwoLevelConfig(n_clusters=64, top="brute",
+                          bottom="tree", kmeans_iters=5, tree_leaf=8))
+    d, i = sharded_forest_search(mesh, idx, q, 10, nprobe_local=4,
+                                 beam_width=8)
+    _, it = brute_search(q, db, 10)
+    print("RECALL", recall_at_k(np.asarray(i), it))
+    d2, i2 = sharded_forest_search(mesh, idx, q, 10, nprobe_local=4,
+                                   beam_width=8, axes=("data",),
+                                   query_axes=("model",))
+    print("RECALL2", recall_at_k(np.asarray(i2), it))
+    """)
+    assert float(out.split("RECALL2")[1].strip()) > 0.8
+    assert float(out.split("RECALL")[1].split()[0]) > 0.8
+
+
+@slow
+def test_serving_engine_sharded_backend():
+    """ServingEngine.sharded: exact sharded scan behind the micro-batcher
+    returns the single-device answers."""
+    out = _run("""
+    from repro.serve.engine import ServingEngine
+    from repro.core.brute import brute_search
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(2)
+    db = rng.normal(size=(2000, 16)).astype(np.float32)
+    eng = ServingEngine.sharded(mesh, db, k=5, max_batch=16, max_wait_ms=2.0)
+    q = rng.normal(size=(40, 16)).astype(np.float32)
+    futs = [eng.submit(q[j]) for j in range(40)]
+    ids = np.stack([f.get(timeout=60)[1] for f in futs])
+    eng.close()
+    _, it = brute_search(q, db, 5)
+    print("MATCH", float((ids == it).mean()))
+    """)
+    assert "MATCH 1.0" in out
+
+
+@slow
 def test_compressed_psum_approximates_mean():
     out = _run("""
+    from repro.compat import shard_map
     from repro.train.compression import compressed_psum
     mesh = jax.make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     x = rng.normal(size=(8, 64)).astype(np.float32)
-    fn = jax.shard_map(lambda s: compressed_psum(s[0], "data"),
-                       mesh=mesh, in_specs=P("data", None),
-                       out_specs=P(None), check_vma=False)
+    fn = shard_map(lambda s: compressed_psum(s[0], "data"),
+                   mesh=mesh, in_specs=P("data", None),
+                   out_specs=P(None), check_vma=False)
     got = np.asarray(fn(x))
     want = x.mean(0)
     err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
@@ -82,6 +253,7 @@ def test_compressed_psum_approximates_mean():
     assert float(out.split("ERR")[1]) < 0.05
 
 
+@slow
 def test_elastic_reshard_restore_1_to_8_devices():
     out = _run("""
     import tempfile
@@ -102,6 +274,7 @@ def test_elastic_reshard_restore_1_to_8_devices():
     assert "OK True" in out
 
 
+@slow
 def test_lm_train_step_sharded_equals_local():
     """One train step on a 2x4 mesh == the same step on one device."""
     out = _run("""

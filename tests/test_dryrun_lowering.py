@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+from conftest import REPO, subprocess_env
+
 CASES = [
     ("qwen3-0.6b", "train_4k", "single"),
     ("qwen3-14b", "prefill_32k", "single"),
@@ -51,8 +53,8 @@ def test_cell_lowers(arch, shape, mesh):
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=subprocess_env(),
+        cwd=REPO,
     )
     assert r.returncode == 0, f"{arch}/{shape}/{mesh}:\n{r.stderr[-2500:]}"
     assert "LOWER_OK" in r.stdout

@@ -58,10 +58,11 @@ def test_analyze_hlo_counts_collectives():
     a = analyze_hlo(c.as_text())
     print("COLL", a["collective_bytes"]["total"] > 0)
     """)
+    from conftest import REPO, subprocess_env
+
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"}, cwd="/root/repo")
+                       env=subprocess_env(), cwd=REPO)
     assert r.returncode == 0, r.stderr[-1500:]
     assert "COLL True" in r.stdout
 

@@ -197,4 +197,24 @@ def test_serving_engine_hedges_stragglers():
     d, i = eng.search(np.zeros(3, np.float32))
     assert eng.hedges >= 1
     assert i[0] == 1          # the hedge's answer won
+    assert eng.stats().hedges == eng.hedges   # stats report the hedge
+    eng.close()
+
+
+def test_serving_engine_fast_primary_never_hedges():
+    """The hedge only fires after hedge_ms: a primary that answers well
+    inside the deadline keeps the hedge count at zero."""
+    def fast(qs):
+        return (np.zeros((qs.shape[0], 1)),
+                np.zeros((qs.shape[0], 1), np.int32))
+
+    def hedge(qs):
+        raise AssertionError("hedge must not fire for a fast primary")
+
+    eng = ServingEngine(fast, hedge_fn=hedge, hedge_ms=500.0, max_batch=4)
+    for _ in range(5):
+        d, i = eng.search(np.zeros(3, np.float32))
+        assert i[0] == 0                      # the primary's answer
+    st = eng.stats()
+    assert st.hedges == 0 and st.n == 5
     eng.close()
