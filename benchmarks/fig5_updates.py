@@ -1,0 +1,100 @@
+"""Online-mutation quality and rebalance cost (the index lifecycle).
+
+For each mutation fraction f, interleave ``f*N/2`` deletes and ``f*N/2``
+adds (round-robin, the skewed-traffic pattern the paper's edge indices
+live under), then measure recall@10 against a fresh exact ground truth of
+the surviving corpus at three points:
+
+  * ``mutated``     — after the adds/deletes (dirty-bucket trees already
+    incrementally rebuilt on the tree bottom);
+  * ``rebalanced``  — after one ``rebalance()`` (drift recenter + reroute),
+    with the pass's wall time as the *rebalance cost*;
+  * ``rebuilt``     — a from-scratch build on the same surviving corpus
+    (the quality ceiling the mutated index is judged against, and the
+    cost a build-once index would pay on every update).
+
+Rows land in ``benchmarks/results/updates.csv`` and on stdout via
+``common.csv_row``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, csv_row
+
+
+def _mk(rng, centers, n, d):
+    return (centers[rng.integers(0, centers.shape[0], n)]
+            + rng.normal(size=(n, d))).astype(np.float32)
+
+
+def run(n: int = 20000, d: int = 32, n_clusters: int = 64,
+        fractions=(0.1, 0.2, 0.3, 0.5), bottoms=("brute", "tree"),
+        nq: int = 256) -> None:
+    from repro.core.brute import brute_search
+    from repro.core.metrics import recall_at_k
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(64, d)) * 4
+    rows = []
+    for bottom in bottoms:
+        for frac in fractions:
+            rng = np.random.default_rng(17)
+            db = _mk(rng, centers, n, d)
+            cfg = TwoLevelConfig(n_clusters=n_clusters, top="brute",
+                                 bottom=bottom, kmeans_iters=5,
+                                 tree_leaf=8)
+            idx = build_two_level(db, cfg)
+            half = int(frac * n / 2)
+            chunk = max(1, half // 4)
+            t_mut = time.perf_counter()
+            done = 0
+            while done < half:
+                c = min(chunk, half - done)
+                live = np.nonzero(idx.alive)[0]
+                idx.delete_entities(rng.choice(live, c, replace=False))
+                idx.add_entities(_mk(rng, centers, c, d))
+                done += c
+            t_mut = time.perf_counter() - t_mut
+            live = np.nonzero(idx.alive)[0]
+            surv = idx.db[live]
+            q = _mk(rng, centers, nq, d)
+            _, truth = brute_search(q, surv, 10)
+
+            def recall(index, mapped):
+                _, ids, _ = index.search(q, 10, nprobe=8, beam_width=8)
+                t = live[truth] if mapped else truth
+                return recall_at_k(np.asarray(ids), t)
+
+            r_mut = recall(idx, True)
+            t0 = time.perf_counter()
+            stats = idx.rebalance()
+            t_reb = (time.perf_counter() - t0) * 1e3
+            r_reb = recall(idx, True)
+            t0 = time.perf_counter()
+            idx2 = build_two_level(surv, cfg)
+            t_build = (time.perf_counter() - t0) * 1e3
+            r_new = recall(idx2, False)
+            rows.append((bottom, frac, r_mut, r_reb, r_new, t_reb,
+                         t_build, stats["n_drifted"],
+                         stats["n_rebuilt_buckets"]))
+            csv_row(
+                f"updates_{bottom}_f{frac}", t_reb * 1e3,
+                f"recall_mut={r_mut:.4f},recall_reb={r_reb:.4f},"
+                f"recall_rebuild={r_new:.4f},rebuild_ms={t_build:.0f},"
+                f"mutate_s={t_mut:.1f},drifted={stats['n_drifted']}")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "updates.csv"), "w") as f:
+        f.write("bottom,fraction,recall_mutated,recall_rebalanced,"
+                "recall_rebuilt,rebalance_ms,rebuild_ms,"
+                "n_drifted,n_rebuilt_buckets\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+if __name__ == "__main__":
+    run()

@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-scale corpora (1M SIFT / 10M DEEP)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,table1,fig2d,fig3,sharded,"
-                         "roofline")
+                         "updates,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,6 +48,10 @@ def main() -> None:
 
         fig4_sharded.run(shards=(1, 2, 4, 8) if args.full else (1, 2, 4),
                          n=100_000 if args.full else 20_000)
+    if want("updates"):
+        from benchmarks import fig5_updates
+
+        fig5_updates.run(n=100_000 if args.full else 20_000)
     if want("roofline"):
         from benchmarks import roofline
 

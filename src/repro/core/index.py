@@ -25,6 +25,8 @@ class SearchIndex:
     db: np.ndarray
     tree: Optional[FlatTree] = None
     two_level: Optional[TwoLevelIndex] = None
+    p: Optional[np.ndarray] = None      # traffic estimate (qlbt rebuilds)
+    alive: Optional[np.ndarray] = None  # single-tree tombstones
 
     def search(
         self,
@@ -63,6 +65,72 @@ class SearchIndex:
             tot += self.two_level.footprint_bytes(include_db=False)
         return tot
 
+    # ---------------- online mutation (lifecycle API) ----------------
+    def _tree_rebuild(self) -> None:
+        """Rebuild the single tree over *live* rows only (tombstoned rows
+        must never be re-indexed) and remap leaf ids back to global."""
+        live = np.nonzero(self.alive)[0]
+        if self.spec.kind == "qlbt" and self.p is not None:
+            t = build_qlbt(self.db[live], self.p[live])
+        else:
+            t = build_rp_tree(self.db[live])
+        leaf = t.leaf_entities
+        m = leaf >= 0
+        leaf[m] = live[leaf[m]].astype(leaf.dtype)
+        self.tree = t
+
+    def _ensure_alive(self) -> None:
+        if self.alive is None:
+            self.alive = np.ones(self.db.shape[0], dtype=bool)
+
+    def add_entities(self, new_vecs: np.ndarray, **kw) -> np.ndarray:
+        """Insert new entities; returns their global ids.
+
+        Two-level indexes take the incremental path (bucket routing +
+        dirty-bucket forest rebuild, see ``TwoLevelIndex.add_entities``).
+        Single-tree indexes (protocol: small corpora) rebuild the tree
+        over the surviving rows — a whole-tree build at that scale is the
+        paper's own update model.
+        """
+        if self.two_level is not None:
+            ids = self.two_level.add_entities(new_vecs, **kw)
+            self.db = self.two_level.db
+            return ids
+        self._ensure_alive()
+        new_vecs = np.ascontiguousarray(new_vecs, dtype=np.float32)
+        start = self.db.shape[0]
+        ids = np.arange(start, start + new_vecs.shape[0], dtype=np.int32)
+        self.db = np.concatenate([self.db, new_vecs], axis=0)
+        self.alive = np.concatenate([self.alive, np.ones(ids.size, bool)])
+        if self.spec.kind == "qlbt" and self.p is not None:
+            p_new = kw.get("p")
+            if p_new is None:
+                p_new = np.full(ids.size, float(np.mean(self.p)))
+            self.p = np.concatenate([self.p, np.asarray(p_new)])
+        self._tree_rebuild()
+        return ids
+
+    def delete_entities(self, ids: np.ndarray) -> None:
+        """Tombstone-delete: ids stay stable, deleted ids are immediately
+        unreturnable (bucket-slot compaction / in-place leaf masking)."""
+        if self.two_level is not None:
+            self.two_level.delete_entities(ids)
+            return
+        self._ensure_alive()
+        ids = np.asarray(ids)
+        self.alive[ids] = False
+        self.tree.drop_entities(ids)
+
+    def rebalance(self, **kw) -> dict:
+        """Two-level: drifted-bucket Lloyd step + dirty-tree rebuild.
+        Single-tree: full rebuild from the surviving corpus."""
+        if self.two_level is not None:
+            return self.two_level.rebalance(**kw)
+        self._ensure_alive()
+        self._tree_rebuild()
+        return {"n_rebuilt_buckets": 1, "n_moved": 0,
+                "n_drifted": 0, "max_drift": 0.0}
+
     def rebuild_with_likelihood(self, p: np.ndarray, *, seed: int = 0):
         """Paper §3.1: 'if only this distribution changes, a new search
         tree can be easily built, keeping other configurations the same'
@@ -89,7 +157,8 @@ def build_index(
         if p is None:
             raise ValueError("QLBT requires a query-likelihood vector p")
         t = build_qlbt(db, p, seed=seed)
-        return SearchIndex(spec=spec, db=db, tree=t)
+        return SearchIndex(spec=spec, db=db, tree=t,
+                           p=np.asarray(p, np.float64))
     if spec.kind == "tree":
         return SearchIndex(spec=spec, db=db, tree=build_rp_tree(db, seed=seed))
     if spec.kind == "two_level":

@@ -102,6 +102,23 @@ class FlatTree:
             leaf_entities=jnp.asarray(self.leaf_entities),
         )
 
+    def drop_entities(self, ids: np.ndarray) -> int:
+        """Tombstone-delete: blank the leaf slots holding ``ids`` in place.
+
+        The split structure is untouched (it becomes stale, not wrong): a
+        descent can still route through regions the dropped entities shaped,
+        but the dropped ids can never be returned.  This is the cheap half
+        of the mutation model — rebuild (``build_qlbt``/``build_rp_tree``)
+        when enough mass has been dropped that depth quality matters.
+        Returns the number of slots blanked.
+        """
+        ids = np.asarray(ids)
+        if ids.size == 0 or self.leaf_entities.size == 0:
+            return 0
+        mask = np.isin(self.leaf_entities, ids) & (self.leaf_entities >= 0)
+        self.leaf_entities[mask] = -1
+        return int(mask.sum())
+
 
 # ---------------------------------------------------------------------------
 # Builders (host-side numpy; vectorized per node)

@@ -11,6 +11,27 @@ gather; the bottom-level brute scan is the `kernels/l2_topk` tile loop; the
 top-level PQ scan is `kernels/pq_adc`.  Per-bucket trees are stored as one
 concatenated *forest* (single SoA node table + per-bucket root ids) so the
 beam descent stays a single batched kernel.
+
+Mutation model (online index lifecycle): the index is long-lived under
+shifting traffic, so it supports in-place updates with bounded staleness
+instead of build-once:
+
+  * ``add_entities``    — route new vectors to the nearest centroid with a
+    free bucket slot (spill to next-nearest, grow the pad on overflow) and
+    incrementally rebuild *only the dirty buckets'* trees (the forest is a
+    list of per-bucket trees re-concatenated on refresh);
+  * ``delete_entities`` — tombstones: the db row stays (ids are stable),
+    the bucket slot is compacted for reuse, and forest leaves are masked in
+    place so a deleted id can never be returned;
+  * ``rebalance``       — a Lloyd step restricted to *drifted* buckets
+    (member mean moved vs the stored centroid): recenters them, re-routes
+    their members through the capped assignment, rebuilds the top-level
+    centroid index and every dirty bucket's tree.
+
+Staleness guarantees: deletes are immediately invisible on every search
+path; adds are immediately visible on brute/LSH bottoms and visible on
+tree bottoms after the (default, per-call) dirty-bucket refresh; centroid
+drift only degrades *recall*, never correctness, until ``rebalance()``.
 """
 from __future__ import annotations
 
@@ -54,11 +75,18 @@ class TwoLevelConfig:
 
 @dataclasses.dataclass
 class _Forest:
-    """Per-bucket trees concatenated into one node table."""
+    """Per-bucket trees concatenated into one node table.
+
+    ``trees`` keeps the per-bucket :class:`FlatTree` segments (leaf ids
+    already global) so a mutation can rebuild one bucket's tree and
+    re-concatenate without touching the other K-1 — the incremental path
+    ``add_entities``/``rebalance`` take.
+    """
     arrays: dict                  # device arrays (see FlatTree.device_arrays)
     roots: np.ndarray             # (K,) int32 root node per bucket
     max_depth: int
     nbytes: int
+    trees: Optional[list] = None  # per-bucket FlatTrees (global leaf ids)
 
 
 @dataclasses.dataclass
@@ -72,6 +100,14 @@ class TwoLevelIndex:
     top_kd: Optional[FlatTree] = None
     bottom_lsh: Optional[LSHIndex] = None
     forest: Optional[_Forest] = None
+    # ---- mutation state (online lifecycle; see module docstring) ----
+    alive: Optional[np.ndarray] = None          # (N,) bool, False = tombstone
+    entity_bucket: Optional[np.ndarray] = None  # (N,) int32, -1 = deleted
+    dirty: Optional[np.ndarray] = None          # (K,) bool, membership changed
+    p: Optional[np.ndarray] = None              # (N,) likelihood (qlbt)
+    part_feats: Optional[np.ndarray] = None     # (N, pd) if built on features
+    n_adds: int = 0                             # mutations since last rebalance
+    n_deletes: int = 0
 
     # ---------------- construction helpers ----------------
     @property
@@ -79,52 +115,265 @@ class TwoLevelIndex:
         return int(self.db.shape[0])
 
     @property
+    def n_live(self) -> int:
+        return self.n if self.alive is None else int(self.alive.sum())
+
+    @property
     def k_clusters(self) -> int:
         return int(self.centroids.shape[0])
 
-    def add_entities(self, new_vecs: np.ndarray) -> np.ndarray:
-        """Incremental insert: route each new vector to its nearest
-        centroid with a free slot (spill to next-nearest like the build
-        path).  Buckets whose pad fills grow the pad width.  Returns the
-        assigned global entity ids.  Centroids are NOT refit — the paper's
-        update model (rebuild k-means offline when drift accumulates).
+    @property
+    def feats(self) -> np.ndarray:
+        """Partition-feature view of the corpus (db itself by default)."""
+        return self.db if self.part_feats is None else self.part_feats
 
-        Only supported for brute bottom level (tree forests would need a
-        per-bucket rebuild; LSH would need code append — both are offline
-        rebuilds in the paper's protocol)."""
-        if self.config.bottom != "brute":
-            raise NotImplementedError(
-                "incremental insert supports bottom='brute'; rebuild for "
-                "tree/lsh bottoms (paper §3.1 update model)")
+    def _ensure_mutable(self):
+        """Lazily create mutation state for indexes built before it."""
+        if self.alive is None:
+            self.alive = np.ones(self.n, dtype=bool)
+        if self.dirty is None:
+            self.dirty = np.zeros(self.k_clusters, dtype=bool)
+        if self.entity_bucket is None:
+            eb = np.full(self.n, -1, dtype=np.int32)
+            rr, cc = np.nonzero(self.bucket_ids >= 0)
+            eb[self.bucket_ids[rr, cc]] = rr
+            self.entity_bucket = eb
+
+    def _place(self, feat_rows: np.ndarray, gids: np.ndarray) -> None:
+        """Route rows into buckets: nearest centroid with a free slot,
+        spill to next-nearest, grow the pad width on overflow.  Marks the
+        receiving buckets dirty."""
         from repro.core.kmeans import _assign_topm
 
-        new_vecs = np.ascontiguousarray(new_vecs, dtype=np.float32)
-        start = self.n
-        ids = np.arange(start, start + new_vecs.shape[0], dtype=np.int32)
-        self.db = np.concatenate([self.db, new_vecs], axis=0)
-        top_b, _ = _assign_topm(new_vecs, self.centroids,
+        top_b, _ = _assign_topm(feat_rows, self.centroids,
                                 min(4, self.k_clusters))
         cap = self.bucket_ids.shape[1]
         counts = self.bucket_counts.astype(np.int64).copy()
-        placed_b = np.empty(ids.size, dtype=np.int64)
-        for j in range(ids.size):
+        for j in range(gids.size):
             for b in top_b[j]:
                 if counts[b] < cap:
-                    placed_b[j] = b
                     break
             else:
                 b = int(top_b[j, 0])
-                placed_b[j] = b
                 if counts[b] >= cap:          # grow the pad width
                     grow = max(8, cap // 4)
                     self.bucket_ids = np.pad(
                         self.bucket_ids, ((0, 0), (0, grow)),
                         constant_values=-1)
                     cap += grow
-            self.bucket_ids[placed_b[j], counts[placed_b[j]]] = ids[j]
-            counts[placed_b[j]] += 1
+            self.bucket_ids[b, counts[b]] = gids[j]
+            counts[b] += 1
+            self.entity_bucket[gids[j]] = b
+            self.dirty[b] = True
         self.bucket_counts = counts.astype(np.int32)
+
+    def add_entities(
+        self,
+        new_vecs: np.ndarray,
+        *,
+        partition_features: Optional[np.ndarray] = None,
+        p: Optional[np.ndarray] = None,
+        refresh: bool = True,
+    ) -> np.ndarray:
+        """Incremental insert for every bottom level.  Returns the new
+        global entity ids (db rows are append-only; deleted rows are
+        tombstones, so ids never shift).
+
+        Routing reuses the build path's capped spill; freed (tombstoned)
+        slots are reused before the pad grows.  Bottom-level upkeep:
+        brute — none; lsh — append packed codes under the shared
+        projections; tree/qlbt — rebuild the *dirty buckets'* trees only,
+        then re-concatenate the forest.  The re-concat is O(forest size)
+        even for one dirty bucket, so for a high-rate insert stream pass
+        ``refresh=False`` and call ``refresh_forest()`` once per batch
+        (or let the next ``rebalance()`` do it); until then new entities
+        are invisible to the forest descent — bounded staleness, never
+        wrong results.
+
+        Centroids are NOT refit here — drift accumulates until
+        ``rebalance()`` (the paper's offline-update model, made online).
+        """
+        self._ensure_mutable()
+        new_vecs = np.ascontiguousarray(new_vecs, dtype=np.float32)
+        if self.part_feats is not None:
+            if partition_features is None:
+                raise ValueError(
+                    "index was built on side partition features; "
+                    "add_entities needs partition_features for new rows")
+            partition_features = np.ascontiguousarray(
+                partition_features, np.float32)
+            if partition_features.shape[0] != new_vecs.shape[0]:
+                raise ValueError(
+                    f"partition_features has {partition_features.shape[0]} "
+                    f"rows for {new_vecs.shape[0]} new vectors")
+        elif partition_features is not None:
+            raise ValueError(
+                "index was built on the embeddings themselves; "
+                "partition_features would be silently ignored")
+        m = new_vecs.shape[0]
+        start = self.n
+        ids = np.arange(start, start + m, dtype=np.int32)
+        self.db = np.concatenate([self.db, new_vecs], axis=0)
+        self.alive = np.concatenate([self.alive, np.ones(m, bool)])
+        self.entity_bucket = np.concatenate(
+            [self.entity_bucket, np.full(m, -1, np.int32)])
+        if self.part_feats is not None:
+            self.part_feats = np.concatenate(
+                [self.part_feats, partition_features])
+        if self.p is not None:
+            if p is None:
+                # no traffic estimate yet: assume average likelihood
+                p = np.full(m, float(np.mean(self.p)), self.p.dtype)
+            self.p = np.concatenate([self.p, np.asarray(p, self.p.dtype)])
+
+        feat_rows = (new_vecs if self.part_feats is None
+                     else self.part_feats[ids])
+        self._place(feat_rows, ids)
+        self.n_adds += m
+
+        if self.bottom_lsh is not None:
+            bits = (new_vecs @ self.bottom_lsh.proj > 0).astype(np.uint8)
+            self.bottom_lsh.codes = np.concatenate(
+                [self.bottom_lsh.codes, pack_bits(bits)], axis=0)
+        if self.forest is not None and refresh:
+            self.refresh_forest()
         return ids
+
+    def delete_entities(self, ids: np.ndarray) -> None:
+        """Tombstone-delete: compact the bucket slot for reuse, mask any
+        forest leaves holding the id, keep the db row (stable ids).  A
+        deleted id is immediately invisible on every search path."""
+        self._ensure_mutable()
+        ids = np.unique(np.asarray(ids, dtype=np.int64))
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.n:
+            raise ValueError("delete_entities: id out of range")
+        if not self.alive[ids].all():
+            raise ValueError("delete_entities: id already deleted")
+        for e in ids:
+            b = int(self.entity_bucket[e])
+            row = self.bucket_ids[b]
+            col = int(np.nonzero(row == e)[0][0])
+            last = int(self.bucket_counts[b]) - 1
+            row[col] = row[last]              # swap-fill the hole
+            row[last] = -1
+            self.bucket_counts[b] = last
+            self.dirty[b] = True
+        self.alive[ids] = False
+        self.entity_bucket[ids] = -1
+        self.n_deletes += ids.size
+        if self.forest is not None:
+            # mask in the live device arrays AND the per-bucket segments so
+            # a later partial refresh can't resurrect a deleted id
+            le = np.asarray(self.forest.arrays["leaf_entities"]).copy()
+            le[np.isin(le, ids) & (le >= 0)] = -1
+            self.forest.arrays["leaf_entities"] = jnp.asarray(le)
+            if self.forest.trees is not None:
+                for t in self.forest.trees:
+                    t.drop_entities(ids)
+
+    def refresh_forest(self) -> int:
+        """Rebuild the trees of dirty buckets only and re-concatenate the
+        forest (clears the dirty flags; no-op for non-tree bottoms).
+        Returns #buckets rebuilt."""
+        self._ensure_mutable()
+        if self.forest is None:
+            self.dirty[:] = False
+            return 0
+        if not self.dirty.any():
+            return 0
+        rebuilt = 0
+        for b in np.nonzero(self.dirty)[0]:
+            ids = self.bucket_ids[b][: self.bucket_counts[b]]
+            ids = ids[ids >= 0]
+            self.forest.trees[b] = _bucket_tree(
+                self.db, ids.astype(np.int64), self.config, self.p, int(b))
+            rebuilt += 1
+        self.dirty[:] = False
+        new = _concat_forest(self.forest.trees)
+        self.forest.arrays = new.arrays
+        self.forest.roots = new.roots
+        self.forest.max_depth = new.max_depth
+        self.forest.nbytes = new.nbytes
+        return rebuilt
+
+    def rebalance(
+        self,
+        *,
+        drift_threshold: float = 0.25,
+        recenter: bool = True,
+    ) -> dict:
+        """Restore partition quality after accumulated mutations.
+
+        A bucket has *drifted* when its live-member mean (in partition-
+        feature space) moved more than ``drift_threshold`` of the bucket's
+        own radius from the stored centroid.  For drifted buckets: move
+        the centroid to the member mean (one Lloyd step, restricted), pull
+        their members out and re-route them through the capped assignment
+        against the updated centroids.  Then rebuild the top-level
+        centroid index (PQ/kd) if centroids moved, rebuild every dirty
+        bucket's tree, and clear the mutation counters.
+
+        Returns a stats dict: ``n_drifted``, ``n_moved``,
+        ``n_rebuilt_buckets``, ``max_drift``.
+        """
+        self._ensure_mutable()
+        K = self.k_clusters
+        feats = self.feats
+        # live-member mean + radius per bucket
+        drifted, max_drift = [], 0.0
+        means = {}
+        for b in range(K):
+            ids = self.bucket_ids[b][: self.bucket_counts[b]]
+            ids = ids[ids >= 0]
+            if ids.size == 0:
+                continue
+            fb = feats[ids]
+            mean = fb.mean(axis=0)
+            radius = float(
+                np.sqrt(((fb - self.centroids[b]) ** 2).sum(1).mean()))
+            drift = float(np.linalg.norm(mean - self.centroids[b]))
+            rel = drift / max(radius, 1e-12)
+            max_drift = max(max_drift, rel)
+            if rel > drift_threshold:
+                drifted.append(b)
+                means[b] = mean
+        moved_ids = []
+        if drifted and recenter:
+            if not self.centroids.flags.writeable:   # np view of a jax array
+                self.centroids = np.array(self.centroids, np.float32)
+            for b in drifted:
+                self.centroids[b] = means[b]
+            # pull every member of a drifted bucket and re-route it
+            for b in drifted:
+                ids = self.bucket_ids[b][: self.bucket_counts[b]]
+                ids = ids[ids >= 0]
+                moved_ids.append(ids.astype(np.int64))
+                self.bucket_ids[b, :] = -1
+                self.bucket_counts[b] = 0
+                self.entity_bucket[ids] = -1
+                self.dirty[b] = True
+            moved = np.concatenate(moved_ids) if moved_ids else \
+                np.zeros(0, np.int64)
+            if moved.size:
+                self._place(feats[moved], moved)
+            # centroids changed -> the top-level index over them is stale
+            if self.top_pq is not None:
+                self.top_pq = pq_train(
+                    self.centroids, m=self.config.pq_m,
+                    seed=self.config.seed, train_sample=None)
+            if self.top_kd is not None:
+                self.top_kd = build_kd_tree(self.centroids, leaf_size=4)
+        n_rebuilt = self.refresh_forest()
+        self.n_adds = 0
+        self.n_deletes = 0
+        return {
+            "n_drifted": len(drifted),
+            "n_moved": int(sum(x.size for x in moved_ids)),
+            "n_rebuilt_buckets": n_rebuilt,
+            "max_drift": max_drift,
+        }
 
     def footprint_bytes(self, include_db: bool = True) -> int:
         tot = self.centroids.nbytes + self.bucket_ids.nbytes
@@ -380,11 +629,19 @@ def build_two_level(
         cap = int(min(counts.max(), max(int(np.ceil(2.5 * n / k)), 32)))
     bucket_ids, counts = _capped_assign(feats, km.centroids, k, cap)
 
+    entity_bucket = np.full(n, -1, dtype=np.int32)
+    rr, cc = np.nonzero(bucket_ids >= 0)
+    entity_bucket[bucket_ids[rr, cc]] = rr
     idx = TwoLevelIndex(
         config=config, db=db,
         centroids=km.centroids,
         bucket_ids=bucket_ids,
         bucket_counts=counts.astype(np.int32),
+        alive=np.ones(n, dtype=bool),
+        entity_bucket=entity_bucket,
+        dirty=np.zeros(k, dtype=bool),
+        p=None if p is None else np.asarray(p, np.float64),
+        part_feats=None if partition_features is None else feats,
     )
 
     if config.top == "pq":
@@ -450,41 +707,53 @@ def _capped_assign(
     return bucket_ids, fill.astype(np.int32)
 
 
+def _bucket_tree(db, ids, config: TwoLevelConfig, p, b: int) -> FlatTree:
+    """Build one bucket's tree with leaf entity ids remapped to *global*
+    ids — the unit the incremental refresh rebuilds."""
+    ids = np.asarray(ids, dtype=np.int64)
+    sub = db[ids] if ids.size else np.zeros((1, db.shape[1]), np.float32)
+    if config.bottom == "qlbt" and p is not None and ids.size:
+        t = build_qlbt(
+            sub, p[ids], leaf_size=config.tree_leaf,
+            n_candidates=config.tree_candidates,
+            boost_depth=config.qlbt_boost_depth,
+            lam=config.qlbt_lambda, seed=config.seed + b,
+        )
+    else:
+        t = build_rp_tree(
+            sub, leaf_size=config.tree_leaf,
+            n_candidates=config.tree_candidates, seed=config.seed + b,
+        )
+    le = t.leaf_entities.copy()
+    if ids.size:
+        mask = le >= 0
+        le[mask] = ids[le[mask]].astype(le.dtype)
+    else:
+        le[:] = -1
+    return dataclasses.replace(t, leaf_entities=le)
+
+
 def _build_forest(db, bucket_ids, counts, config: TwoLevelConfig, p):
     """Concatenate per-bucket trees into one node table (global entity ids)."""
     trees: list[FlatTree] = []
-    roots = np.zeros(bucket_ids.shape[0], dtype=np.int32)
-    offset = 0
     for b in range(bucket_ids.shape[0]):
         ids = bucket_ids[b][: counts[b]]
         ids = ids[ids >= 0]
-        if ids.size == 0:
-            # empty bucket: single empty leaf
-            ids = np.zeros(0, dtype=np.int32)
-        sub = db[ids] if ids.size else np.zeros((1, db.shape[1]), np.float32)
-        if config.bottom == "qlbt" and p is not None and ids.size:
-            t = build_qlbt(
-                sub, p[ids], leaf_size=config.tree_leaf,
-                n_candidates=config.tree_candidates,
-                boost_depth=config.qlbt_boost_depth,
-                lam=config.qlbt_lambda, seed=config.seed + b,
-            )
-        else:
-            t = build_rp_tree(
-                sub, leaf_size=config.tree_leaf,
-                n_candidates=config.tree_candidates, seed=config.seed + b,
-            )
-        # remap leaf entity local ids -> global ids
-        le = t.leaf_entities.copy()
-        if ids.size:
-            mask = le >= 0
-            le[mask] = ids[le[mask]]
-        else:
-            le[:] = -1
-        t = dataclasses.replace(t, leaf_entities=le)
+        trees.append(_bucket_tree(db, ids, config, p, b))
+    return _concat_forest(trees)
+
+
+def _concat_forest(trees: list) -> _Forest:
+    """Concatenate per-bucket trees into one SoA node table.
+
+    Leaf tables may have different widths after per-bucket rebuilds with a
+    changed leaf size — they are right-padded to the widest.
+    """
+    roots = np.zeros(len(trees), dtype=np.int32)
+    offset = 0
+    for b, t in enumerate(trees):
         roots[b] = offset
         offset += t.n_nodes
-        trees.append(t)
 
     def cat(field, fill_shift=None):
         parts = []
@@ -508,13 +777,19 @@ def _build_forest(db, bucket_ids, counts, config: TwoLevelConfig, p):
         lshift += t.n_leaves
         leaf_rows.append(lr)
 
+    leaf_w = max(t.leaf_entities.shape[1] for t in trees)
+    leaf_parts = [
+        np.pad(t.leaf_entities, ((0, 0), (0, leaf_w - t.leaf_entities.shape[1])),
+               constant_values=-1)
+        for t in trees
+    ]
     arrays = dict(
         proj=jnp.asarray(cat("proj")),
         dims=jnp.asarray(cat("dims")),
         tau=jnp.asarray(cat("tau")),
         children=jnp.asarray(cat("children", fill_shift=True)),
         leaf_row=jnp.asarray(np.concatenate(leaf_rows)),
-        leaf_entities=jnp.asarray(cat("leaf_entities")),
+        leaf_entities=jnp.asarray(np.concatenate(leaf_parts, axis=0)),
     )
     nbytes = sum(
         int(np.asarray(v).nbytes) for v in arrays.values()
@@ -523,4 +798,5 @@ def _build_forest(db, bucket_ids, counts, config: TwoLevelConfig, p):
         arrays=arrays, roots=roots,
         max_depth=max(t.max_depth for t in trees),
         nbytes=nbytes,
+        trees=trees,
     )

@@ -14,7 +14,9 @@ from repro.distributed.sharding import (
     LOCAL_PLAN,
     MULTI_POD_PLAN,
     SINGLE_POD_PLAN,
+    ForestShardShapes,
     ShardPlan,
+    forest_shard_shapes,
     make_sharded_brute_fn,
     make_sharded_forest_fn,
     make_sharded_ivf_fn,
@@ -28,5 +30,6 @@ __all__ = [
     "ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN",
     "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
     "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
-    "shard_forest", "ShardedSearchBackend",
+    "shard_forest", "forest_shard_shapes", "ForestShardShapes",
+    "ShardedSearchBackend",
 ]

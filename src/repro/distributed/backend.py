@@ -9,8 +9,22 @@ handful of cached jit shapes.
 
     eng = ServingEngine.sharded(mesh, index, k=10)        # convenience
     eng = ServingEngine(ShardedSearchBackend(mesh, db))   # explicit
+
+Online updates: :meth:`ShardedSearchBackend.apply_updates` re-places a
+*mutated* corpus/index (``add_entities`` / ``delete_entities`` /
+``rebalance``) into the device-array shapes recorded at construction, so
+the jitted search function — and its compile cache — survives the whole
+index lifecycle.  ``headroom`` > 1 reserves growth room (more corpus
+rows, wider buckets, bigger rebuilt trees); if a mutation outgrows the
+reservation, ``apply_updates`` raises and the caller rebuilds the
+backend (a cold, re-jitting path — the thing this class exists to avoid
+on the common path).  Placement is serialized against in-flight searches
+with a lock, so the engine worker thread never sees a half-swapped
+argument tuple.
 """
 from __future__ import annotations
+
+import threading
 
 import jax
 import numpy as np
@@ -24,6 +38,7 @@ from repro.distributed.sharding import (
     _ivf_device_arrays,
     _pad_queries,
     _q_spec,
+    forest_shard_shapes,
     make_sharded_brute_fn,
     make_sharded_forest_fn,
     make_sharded_ivf_fn,
@@ -42,15 +57,19 @@ class ShardedSearchBackend:
 
     def __init__(self, mesh, target, *, kind: str = "auto", k: int = 10,
                  axes=("data", "model"), query_axes=(),
-                 nprobe_local: int = 2, beam_width: int = 8):
+                 nprobe_local: int = 2, beam_width: int = 8,
+                 headroom: float = 1.0, alive=None):
         self.mesh = mesh
         self.k = k
         self.axes = tuple(axes)
         self.query_axes = tuple(query_axes)
-        n_dev = _axes_size(mesh, self.axes)
+        self.headroom = headroom
+        self.n_dev = _axes_size(mesh, self.axes)
+        self._lock = threading.Lock()
 
         if kind == "auto":
-            if isinstance(target, np.ndarray) or hasattr(target, "shape"):
+            if isinstance(target, np.ndarray) or not hasattr(
+                    target, "bucket_ids"):
                 kind = "brute"
             elif getattr(target, "forest", None) is not None:
                 kind = "forest"
@@ -58,39 +77,84 @@ class ShardedSearchBackend:
                 kind = "ivf"
         self.kind = kind
 
-        put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
         if kind == "brute":
-            dbp, rows, n = _brute_device_arrays(target, n_dev)
-            self._args = (put(dbp, P(self.axes, None)),)
+            n = int(np.shape(target)[0])
+            self._rows = -(-int(np.ceil(n * headroom)) // self.n_dev)
             self._fn = jax.jit(make_sharded_brute_fn(
-                mesh, self.axes, k, rows, n, self.query_axes))
+                mesh, self.axes, k, self._rows, self.query_axes))
         elif kind == "ivf":
-            cents, bids, bvecs, Kp = _ivf_device_arrays(target, n_dev)
+            self._K = int(target.bucket_ids.shape[0])
+            self._cap = int(np.ceil(target.bucket_ids.shape[1] * headroom))
+            Kp = -(-self._K // self.n_dev) * self.n_dev
+            self._fn = jax.jit(make_sharded_ivf_fn(
+                mesh, self.axes, k, nprobe_local, Kp // self.n_dev,
+                self._K, self.query_axes))
+        elif kind == "forest":
+            self._shapes = forest_shard_shapes(target, self.n_dev, headroom)
+            self._fn = jax.jit(make_sharded_forest_fn(
+                mesh, self.axes, k, nprobe_local, beam_width,
+                self._shapes.leaf_sz, self._shapes.max_depth,
+                self.query_axes))
+        else:
+            raise ValueError(f"unknown backend kind {kind!r}")
+        self._place(target, alive=alive)
+
+    # ------------------------------------------------------------------
+    def _place(self, target, alive=None) -> None:
+        """Pad/shard/device_put ``target`` into the recorded shapes."""
+        put = lambda x, spec: jax.device_put(
+            x, NamedSharding(self.mesh, spec))
+        if self.kind == "brute":
+            dbp, valid, _, _ = _brute_device_arrays(
+                np.asarray(target, np.float32), self.n_dev,
+                rows=self._rows, alive=alive)
+            self._args = (put(dbp, P(self.axes, None)),
+                          put(valid, P(self.axes)))
+        elif self.kind == "ivf":
+            if int(target.bucket_ids.shape[0]) != self._K:
+                raise ValueError(
+                    f"cluster count changed ({target.bucket_ids.shape[0]} "
+                    f"!= {self._K}); rebuild the backend")
+            cents, bids, bvecs, _ = _ivf_device_arrays(
+                target, self.n_dev, cap=self._cap)
             self._args = (
                 put(cents, P(self.axes, None)),
                 put(bids, P(self.axes, None)),
                 put(bvecs, P(self.axes, None, None)),
             )
-            self._fn = jax.jit(make_sharded_ivf_fn(
-                mesh, self.axes, k, nprobe_local, Kp // n_dev,
-                target.bucket_ids.shape[0], self.query_axes))
-        elif kind == "forest":
-            dev, max_depth = _forest_device_arrays(
-                mesh, target, self.axes, n_dev)
+        else:  # forest
+            dev, _ = _forest_device_arrays(
+                self.mesh, target, self.axes, self.n_dev,
+                shapes=self._shapes)
             self._args = (dev["cents"], dev["valid"], dev["roots"],
                           dev["bucket_ids"], dev["bvecs"],
                           dev["proj"], dev["dims"], dev["tau"],
                           dev["children"], dev["leaf_row"],
                           dev["leaf_entities"])
-            self._fn = jax.jit(make_sharded_forest_fn(
-                mesh, self.axes, k, nprobe_local, beam_width,
-                target.config.tree_leaf, max_depth, self.query_axes))
-        else:
-            raise ValueError(f"unknown backend kind {kind!r}")
+
+    def apply_updates(self, target, alive=None) -> None:
+        """Serve a mutated corpus/index through the already-jitted search.
+
+        Re-pads and re-places the device arrays into the shapes recorded
+        at construction; raises ``ValueError`` when the mutation outgrew
+        the reservation (rebuild the backend with more ``headroom``).
+        The jitted callable is untouched, so queries issued after this
+        call hit the existing compile cache — no re-jit, no cold batch.
+        ``alive`` (brute kind only) marks tombstoned corpus rows.
+        """
+        with self._lock:
+            self._place(target, alive=alive)
+
+    def jit_cache_size(self) -> int:
+        """Compiled-variant count of the underlying search (test hook)."""
+        try:
+            return int(self._fn._cache_size())
+        except AttributeError:          # older jax: no introspection
+            return -1
 
     def __call__(self, queries):
         q, B = _pad_queries(self.mesh, queries, self.query_axes)
-        with self.mesh:
+        with self._lock, self.mesh:
             qs = jax.device_put(
                 q, NamedSharding(self.mesh, _q_spec(self.query_axes)))
             d, i = self._fn(*self._args, qs)

@@ -36,6 +36,14 @@ results come back sharded over the query axes.
 All collectives go through :mod:`repro.compat`'s ``shard_map`` so the
 communication pattern is explicit in the lowered HLO and the code runs on
 any JAX version (``jax.shard_map`` vs the 0.4.x experimental home).
+
+Online mutation: every sharder here can re-place a *mutated* index into
+previously recorded array shapes — ``forest_shard_shapes`` +
+``shard_forest(shapes=...)`` for the forest, a reserved row grid with an
+explicit ``valid`` operand for the brute scan, a reserved bucket cap for
+IVF — so :class:`repro.distributed.backend.ShardedSearchBackend` serves
+through ``add_entities``/``delete_entities``/``rebalance`` without
+re-jitting (see the README's "Online mutation" section).
 """
 from __future__ import annotations
 
@@ -55,7 +63,7 @@ __all__ = [
     "ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN",
     "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
     "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
-    "shard_forest",
+    "shard_forest", "forest_shard_shapes", "ForestShardShapes",
 ]
 
 
@@ -170,13 +178,25 @@ def _check_disjoint(axes, query_axes):
             "axes=('data',), query_axes=('model',)")
 
 
-def _brute_device_arrays(db, n_dev):
-    """Zero-pad db rows to the shard grid (pads masked by global row
-    index downstream).  Returns (padded db, rows per shard, real rows)."""
+def _brute_device_arrays(db, n_dev, rows=None, alive=None):
+    """Zero-pad db rows to the shard grid.  Pads (and tombstoned rows, via
+    ``alive``) are masked by an explicit per-row *valid* array rather than
+    a row count baked into the jitted program, so a mutated corpus can be
+    re-placed without re-jitting as long as the grid fits.  Returns
+    (padded db, valid mask, rows per shard, real rows)."""
     db = jnp.asarray(db, jnp.float32)
     n = db.shape[0]
-    rows = -(-n // n_dev)
-    return jnp.pad(db, ((0, rows * n_dev - n), (0, 0))), rows, n
+    if rows is None:
+        rows = -(-n // n_dev)
+    if rows * n_dev < n:
+        raise ValueError(
+            f"corpus has {n} rows but the shard grid holds only "
+            f"{rows * n_dev}; rebuild the backend (or raise headroom)")
+    valid = np.arange(rows * n_dev) < n
+    if alive is not None:
+        valid[:n] &= np.asarray(alive, bool)
+    return (jnp.pad(db, ((0, rows * n_dev - n), (0, 0))),
+            jnp.asarray(valid), rows, n)
 
 
 def _merge_gathered(gd, gi, k):
@@ -190,22 +210,24 @@ def _merge_gathered(gd, gi, k):
 
 
 def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
-                          n_rows: int, query_axes: tuple = ()):
+                          query_axes: tuple = ()):
     """Exact distributed search: db row-sharded over ``axes``; queries
     optionally batch-sharded over ``query_axes``.
 
-    Pad rows (db zero-padded up to the shard grid) are masked by *global row
-    index* — never by inf-valued vectors, whose distances evaluate to
-    ``inf - inf = NaN`` and can outrank real candidates in XLA's top_k.
+    Pad rows (db zero-padded up to the shard grid) and tombstoned rows are
+    masked by the explicit ``valid`` operand — never by inf-valued vectors,
+    whose distances evaluate to ``inf - inf = NaN`` and can outrank real
+    candidates in XLA's top_k.  ``valid`` being data (not a baked-in row
+    count) is what lets ``ShardedSearchBackend.apply_updates`` serve
+    through corpus mutations without re-jitting.
     """
     _check_disjoint(axes, query_axes)
     k_loc = min(k, shard_rows)   # a shard may hold fewer rows than k
 
-    def local(db_shard, q):
+    def local(db_shard, valid_shard, q):
         d2 = pairwise_l2sq(q, db_shard)                    # (B, rows)
+        d2 = jnp.where(valid_shard[None, :], d2, jnp.inf)
         lin = jax.lax.axis_index(axes)                     # flattened index
-        grow = lin * shard_rows + jnp.arange(shard_rows, dtype=jnp.int32)
-        d2 = jnp.where(grow[None, :] < n_rows, d2, jnp.inf)
         neg, ids = jax.lax.top_k(-d2, k_loc)
         gids = (ids + lin * shard_rows).astype(jnp.int32)
         ld, li = -neg, gids
@@ -220,7 +242,7 @@ def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
     qs = _q_spec(query_axes)
     return shard_map(
         local, mesh=mesh,
-        in_specs=(P(tuple(axes), None), qs),
+        in_specs=(P(tuple(axes), None), P(tuple(axes)), qs),
         out_specs=(qs, qs),
         check_vma=False,   # merge all-gathers over the corpus axes only
     )
@@ -241,14 +263,14 @@ def sharded_brute_search(mesh, db, queries, k=10, axes=("data", "model"),
     """Host entry: shards db rows over ``axes`` and runs the distributed
     scan; ``query_axes`` shards the batch dim over a *disjoint* axis set."""
     n_dev = _axes_size(mesh, axes)
-    dbp, rows, n = _brute_device_arrays(db, n_dev)
+    dbp, valid, rows, n = _brute_device_arrays(db, n_dev)
     q, B = _pad_queries(mesh, queries, query_axes)
-    fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows, n,
-                               tuple(query_axes))
+    fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows, tuple(query_axes))
     with mesh:
         dbs = jax.device_put(dbp, NamedSharding(mesh, P(tuple(axes), None)))
+        vs = jax.device_put(valid, NamedSharding(mesh, P(tuple(axes))))
         qs = jax.device_put(q, NamedSharding(mesh, _q_spec(query_axes)))
-        d, i = fn(dbs, qs)
+        d, i = fn(dbs, vs, qs)
     d, i = jax.device_get((d, i))
     return np.asarray(d)[:B], np.asarray(i)[:B]
 
@@ -310,16 +332,25 @@ def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
     )
 
 
-def _ivf_device_arrays(index, n_dev):
+def _ivf_device_arrays(index, n_dev, cap=None):
     """Pad a built TwoLevelIndex's centroid/bucket tables to the shard grid
-    (zero vectors, -1 ids — pads are masked by index, never by inf)."""
-    K, cap = index.bucket_ids.shape
+    (zero vectors, -1 ids — pads are masked by index, never by inf).
+    ``cap`` pads the bucket width beyond the index's own (update headroom:
+    a mutated index re-places into the same shapes, so the jitted search
+    is reused)."""
+    K, cap_now = index.bucket_ids.shape
+    if cap is None:
+        cap = cap_now
+    if cap < cap_now:
+        raise ValueError(
+            f"bucket cap grew to {cap_now} > reserved {cap}; rebuild the "
+            f"backend (or raise headroom)")
     Kp = -(-K // n_dev) * n_dev
     pad = Kp - K
     cents = jnp.pad(jnp.asarray(index.centroids, jnp.float32),
                     ((0, pad), (0, 0)))
-    bids = jnp.pad(jnp.asarray(index.bucket_ids), ((0, pad), (0, 0)),
-                   constant_values=-1)
+    bids = jnp.pad(jnp.asarray(index.bucket_ids),
+                   ((0, pad), (0, cap - cap_now)), constant_values=-1)
     dbj = jnp.asarray(index.db)
     bvecs = dbj[jnp.maximum(bids, 0)]
     bvecs = jnp.where((bids >= 0)[..., None], bvecs, 0.0)
@@ -354,7 +385,76 @@ def sharded_ivf_search(mesh, index, queries, k=10, nprobe_local=2,
 # ---------------------------------------------------------------------------
 
 
-def shard_forest(index, n_dev: int) -> dict:
+@dataclasses.dataclass(frozen=True)
+class ForestShardShapes:
+    """Fixed per-shard array shapes for a sliced forest.
+
+    Recorded at backend construction (optionally with headroom) and
+    re-applied by :meth:`ShardedSearchBackend.apply_updates`: a mutated
+    index re-slices into the *same* shapes, so the jitted shard_map search
+    keeps its compile cache across the whole index lifecycle.
+    """
+    n_dev: int
+    kloc: int       # buckets per shard
+    cap: int        # bucket pad width
+    nodes: int      # node-table rows per shard (excluding the dead node)
+    leaves: int     # leaf-table rows per shard
+    leaf_sz: int    # leaf width (entities per leaf row)
+    max_depth: int  # bound on descent steps
+
+
+def _forest_slices(index, n_dev: int):
+    """Per-shard (b0, b1, N0, N1, L0, L1) bucket/node/leaf windows."""
+    f = index.forest
+    if f is None:
+        raise ValueError("index has no forest (bottom must be tree/qlbt)")
+    K = index.bucket_ids.shape[0]
+    Kloc = -(-K // n_dev)
+    leaf_row = np.asarray(f.arrays["leaf_row"])
+    roots = np.asarray(f.roots, dtype=np.int64)
+    n_nodes = leaf_row.shape[0]
+    bounds = np.concatenate([roots, [n_nodes]])
+    slices = []
+    for s in range(n_dev):
+        b0 = min(s * Kloc, K)
+        b1 = min(b0 + Kloc, K)
+        N0 = int(bounds[b0]) if b0 < K else n_nodes
+        N1 = int(bounds[b1]) if b0 < K else n_nodes
+        lr = leaf_row[N0:N1]
+        rows = lr[lr >= 0]
+        L0 = int(rows.min()) if rows.size else 0
+        L1 = int(rows.max()) + 1 if rows.size else 0
+        if rows.size not in (0, L1 - L0):
+            raise ValueError(
+                f"shard {s}: leaf rows not contiguous ({rows.size} rows in "
+                f"window [{L0}, {L1})); _build_forest concatenation order "
+                "changed?")
+        slices.append((b0, b1, N0, N1, L0, L1))
+    return slices, Kloc
+
+
+def forest_shard_shapes(index, n_dev: int,
+                        headroom: float = 1.0) -> ForestShardShapes:
+    """Measure the natural per-shard shapes; ``headroom`` > 1 reserves
+    room for post-mutation growth (bigger buckets after adds, deeper or
+    wider trees after dirty-bucket rebuilds)."""
+    slices, Kloc = _forest_slices(index, n_dev)
+    f = index.forest
+    maxN = max(max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0), 1)
+    maxL = max(max((L1 - L0 for *_, L0, L1 in slices), default=0), 1)
+    cap = index.bucket_ids.shape[1]
+    leaf_sz = np.asarray(f.arrays["leaf_entities"]).shape[1]
+    grow = lambda x: int(np.ceil(x * headroom))
+    extra_depth = 8 if headroom > 1.0 else 0
+    return ForestShardShapes(
+        n_dev=n_dev, kloc=Kloc, cap=grow(cap), nodes=grow(maxN),
+        leaves=grow(maxL), leaf_sz=leaf_sz,
+        max_depth=f.max_depth + extra_depth,
+    )
+
+
+def shard_forest(index, n_dev: int, *,
+                 shapes: Optional[ForestShardShapes] = None) -> dict:
     """Slice a built forest index into ``n_dev`` equal-shape shards.
 
     The two-level build concatenates per-bucket trees into one node table
@@ -366,49 +466,59 @@ def shard_forest(index, n_dev: int) -> dict:
     from the shard's own ``(Kloc, cap, d)`` vector tile — corpus memory
     stays sharded.  One extra dead node per shard backs padded bucket
     roots.  Returns host (numpy) arrays stacked on a leading shard dim.
+
+    ``shapes`` pads every shard to the given fixed sizes (raising if the
+    forest outgrew them) so re-slicing a *mutated* index produces arrays
+    of identical shape — the no-re-jit update path.  Deleted entities are
+    naturally dropped: they are absent from ``bucket_ids``, so their leaf
+    slots remap to -1.
     """
+    slices, Kloc = _forest_slices(index, n_dev)
     f = index.forest
-    if f is None:
-        raise ValueError("index has no forest (bottom must be tree/qlbt)")
-    K, cap = index.bucket_ids.shape
-    Kloc = -(-K // n_dev)
+    K, cap_now = index.bucket_ids.shape
     arrays = {name: np.asarray(v) for name, v in f.arrays.items()}
     roots = np.asarray(f.roots, dtype=np.int64)
-    n_nodes = arrays["children"].shape[0]
-    bounds = np.concatenate([roots, [n_nodes]])
     d = index.db.shape[1]
-    leaf_sz = arrays["leaf_entities"].shape[1]
+    leaf_sz_now = arrays["leaf_entities"].shape[1]
+    maxN = max(max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0), 1)
+    maxL = max(max((L1 - L0 for *_, L0, L1 in slices), default=0), 1)
 
-    slices = []
-    for s in range(n_dev):
-        b0 = min(s * Kloc, K)
-        b1 = min(b0 + Kloc, K)
-        N0 = int(bounds[b0]) if b0 < K else n_nodes
-        N1 = int(bounds[b1]) if b0 < K else n_nodes
-        lr = arrays["leaf_row"][N0:N1]
-        rows = lr[lr >= 0]
-        L0 = int(rows.min()) if rows.size else 0
-        L1 = int(rows.max()) + 1 if rows.size else 0
-        if rows.size not in (0, L1 - L0):
+    if shapes is None:
+        shapes = ForestShardShapes(
+            n_dev=n_dev, kloc=Kloc, cap=cap_now, nodes=maxN, leaves=maxL,
+            leaf_sz=leaf_sz_now, max_depth=f.max_depth)
+    else:
+        over = []
+        if shapes.n_dev != n_dev:
+            over.append(f"n_dev {n_dev} != {shapes.n_dev}")
+        if Kloc > shapes.kloc:
+            over.append(f"kloc {Kloc} > {shapes.kloc}")
+        if cap_now > shapes.cap:
+            over.append(f"cap {cap_now} > {shapes.cap}")
+        if maxN > shapes.nodes:
+            over.append(f"nodes {maxN} > {shapes.nodes}")
+        if maxL > shapes.leaves:
+            over.append(f"leaves {maxL} > {shapes.leaves}")
+        if leaf_sz_now > shapes.leaf_sz:
+            over.append(f"leaf_sz {leaf_sz_now} > {shapes.leaf_sz}")
+        if f.max_depth > shapes.max_depth:
+            over.append(f"max_depth {f.max_depth} > {shapes.max_depth}")
+        if over:
             raise ValueError(
-                f"shard {s}: leaf rows not contiguous ({rows.size} rows in "
-                f"window [{L0}, {L1})); _build_forest concatenation order "
-                "changed?")
-        slices.append((b0, b1, N0, N1, L0, L1))
-
-    maxN = max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0)
-    maxN = max(maxN, 1)
-    maxL = max((L1 - L0 for *_, L0, L1 in slices), default=0)
-    maxL = max(maxL, 1)
-    dead = maxN                               # per-shard dead-leaf node id
+                "forest outgrew the reserved shard shapes ("
+                + ", ".join(over)
+                + "); rebuild the backend (or raise headroom)")
+    Kloc, cap = shapes.kloc, shapes.cap
+    padN, padL, leaf_sz = shapes.nodes, shapes.leaves, shapes.leaf_sz
+    dead = padN                               # per-shard dead-leaf node id
 
     out = {
-        "proj": np.zeros((n_dev, maxN + 1, d), np.float32),
-        "dims": np.zeros((n_dev, maxN + 1), arrays["dims"].dtype),
-        "tau": np.zeros((n_dev, maxN + 1), np.float32),
-        "children": np.full((n_dev, maxN + 1, 2), -1, np.int32),
-        "leaf_row": np.full((n_dev, maxN + 1), -1, np.int32),
-        "leaf_entities": np.full((n_dev, maxL, leaf_sz), -1, np.int32),
+        "proj": np.zeros((n_dev, padN + 1, d), np.float32),
+        "dims": np.zeros((n_dev, padN + 1), arrays["dims"].dtype),
+        "tau": np.zeros((n_dev, padN + 1), np.float32),
+        "children": np.full((n_dev, padN + 1, 2), -1, np.int32),
+        "leaf_row": np.full((n_dev, padN + 1), -1, np.int32),
+        "leaf_entities": np.full((n_dev, padL, leaf_sz), -1, np.int32),
         "roots": np.full((n_dev, Kloc), dead, np.int32),
         "valid": np.zeros((n_dev, Kloc), bool),
         "cents": np.zeros((n_dev, Kloc, d), np.float32),
@@ -432,18 +542,22 @@ def shard_forest(index, n_dev: int) -> dict:
         out["valid"][s, :nb] = True
         out["cents"][s, :nb] = index.centroids[b0:b1]
         bl = index.bucket_ids[b0:b1]
-        out["bucket_ids"][s, :nb] = bl
+        out["bucket_ids"][s, :nb, :cap_now] = bl
         bv = index.db[np.maximum(bl, 0)]
-        out["bvecs"][s, :nb] = np.where((bl >= 0)[..., None], bv, 0.0)
+        out["bvecs"][s, :nb, :cap_now] = np.where((bl >= 0)[..., None], bv,
+                                                  0.0)
         # global entity id -> local bucket-slot id for this shard's leaves
+        # (deleted entities are absent from bucket_ids -> slot -1)
         slot_of = np.full(index.db.shape[0], -1, np.int64)
         rr, cc = np.nonzero(bl >= 0)
         slot_of[bl[rr, cc]] = rr * cap + cc
-        le = arrays["leaf_entities"][L0:L1].copy()
+        le = arrays["leaf_entities"][L0:L1]
+        le = np.pad(le, ((0, 0), (0, leaf_sz - le.shape[1])),
+                    constant_values=-1).copy()
         m = le >= 0
         le[m] = slot_of[le[m]]
         out["leaf_entities"][s, :nl] = le
-    out["max_depth"] = f.max_depth
+    out["max_depth"] = shapes.max_depth
     return out
 
 
@@ -512,8 +626,8 @@ def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,
     )
 
 
-def _forest_device_arrays(mesh, index, axes, n_dev):
-    sh = shard_forest(index, n_dev)
+def _forest_device_arrays(mesh, index, axes, n_dev, shapes=None):
+    sh = shard_forest(index, n_dev, shapes=shapes)
     max_depth = sh.pop("max_depth")
     put = lambda x: jax.device_put(
         jnp.asarray(x),

@@ -36,8 +36,10 @@ _HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
 _WHILE_RE = re.compile(
     r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+# operands may carry their type ("dot(f32[8,64]{1,0} %lhs, ...)" — newer
+# XLA dumps) or not ("dot(%lhs, ...)"); skip the optional type prefix.
 _DOT_RE = re.compile(
-    r"dot\(\s*%?([\w\.\-]+),")
+    r"dot\(\s*(?:[\w\[\]\{\},]+\s+)?%?([\w\.\-]+)\s*,")
 _LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 

@@ -80,20 +80,49 @@ class ServingEngine:
     @classmethod
     def sharded(cls, mesh, target, *, kind: str = "auto", k: int = 10,
                 axes=("data", "model"), query_axes=(), nprobe_local: int = 2,
-                beam_width: int = 8, **engine_kw) -> "ServingEngine":
+                beam_width: int = 8, headroom: float = 1.0,
+                **engine_kw) -> "ServingEngine":
         """Engine over a mesh-sharded corpus/index.
 
         Builds a :class:`repro.distributed.backend.ShardedSearchBackend`
         (corpus pre-placed on the mesh, shard_map search jitted once) and
         serves it; ``engine_kw`` passes through to the engine constructor
-        (``max_batch``, ``hedge_fn``, ...).
+        (``max_batch``, ``hedge_fn``, ...).  ``headroom`` > 1 reserves
+        device-array growth room so later ``apply_updates`` calls (online
+        index mutation) keep hitting the jitted search.
         """
         from repro.distributed.backend import ShardedSearchBackend
 
         fn = ShardedSearchBackend(
             mesh, target, kind=kind, k=k, axes=axes, query_axes=query_axes,
-            nprobe_local=nprobe_local, beam_width=beam_width)
+            nprobe_local=nprobe_local, beam_width=beam_width,
+            headroom=headroom)
         return cls(fn, **engine_kw)
+
+    def apply_updates(self, target, **kw) -> None:
+        """Swap in a mutated corpus/index without stopping the engine.
+
+        Delegates to the backend's ``apply_updates`` (e.g.
+        :class:`repro.distributed.backend.ShardedSearchBackend`): device
+        placement happens under the backend's lock, in-flight batches
+        finish against the old arrays, later batches see the new ones,
+        and the jitted search kernel is reused — no cold (re-compiling)
+        batch anywhere in the swap.  A hedge replica is updated too —
+        a stale replica would keep serving deleted entities on every
+        hedged request, so a hedge_fn without ``apply_updates`` is an
+        error rather than a silent staleness hole.
+        """
+        for name, fn in (("search_fn", self.search_fn),
+                         ("hedge_fn", self.hedge_fn)):
+            if fn is None:
+                continue
+            if not hasattr(fn, "apply_updates"):
+                raise TypeError(
+                    f"{name} {type(fn).__name__} has no apply_updates; "
+                    "only pre-placed backends support online mutation")
+        self.search_fn.apply_updates(target, **kw)
+        if self.hedge_fn is not None:
+            self.hedge_fn.apply_updates(target, **kw)
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray) -> "queue.Queue":

@@ -25,9 +25,16 @@ __all__ = ["quantize_int8", "dequantize_int8", "make_ef_transform",
            "compressed_psum"]
 
 
-def quantize_int8(x):
+def quantize_int8(x, axis=None):
+    """int8 absmax quantization.  ``axis=None``: one scale per tensor (the
+    collective payload layout).  ``axis`` (int or tuple): per-slice scales
+    with ``keepdims`` so dequantization is a broadcast multiply."""
     xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    if axis is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    else:
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(xf), axis=axis, keepdims=True), 1e-12) / 127.0
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -37,7 +44,14 @@ def dequantize_int8(q, scale):
 
 
 def make_ef_transform():
-    """Returns (init(grads)->buf, apply(grads, buf)->(grads', buf'))."""
+    """Returns (init(grads)->buf, apply(grads, buf)->(grads', buf')).
+
+    Matrices quantize with one scale per leading-axis row (per output
+    channel): a single per-tensor absmax lets one outlier row (embedding /
+    unembedding gradients) wash out every small-magnitude row's signal, and
+    the extra scales are dim(row) fp32 — noise next to the int8 payload.
+    Convergence parity vs fp32 is tested (test_compressed_training_parity).
+    """
 
     def init(grads):
         return jax.tree.map(
@@ -46,7 +60,9 @@ def make_ef_transform():
     def apply(grads, buf):
         def one(g, e):
             corrected = g.astype(jnp.float32) + e
-            q, s = quantize_int8(corrected)
+            axis = (tuple(range(1, corrected.ndim))
+                    if corrected.ndim > 1 else None)
+            q, s = quantize_int8(corrected, axis=axis)
             deq = dequantize_int8(q, s)
             return deq.astype(g.dtype), corrected - deq
 

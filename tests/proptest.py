@@ -31,6 +31,20 @@ class Case:
         return (self.rng.normal(size=shape) * scale).astype(dtype)
 
 
+def run_cases(fn, n_cases: int = 10, base_seed: int = 0, **kw):
+    """Imperative form of :func:`sweep` for properties that also take
+    pytest-parametrized arguments (``fn(case=..., **kw)``).  Failures
+    re-raise with the reproduction seed, like the decorator."""
+    for i in range(n_cases):
+        seed = base_seed * 10_000 + i
+        try:
+            fn(case=Case(seed), **kw)
+        except AssertionError as e:
+            raise AssertionError(
+                f"{fn.__name__} failed on case seed={seed}: {e}"
+            ) from e
+
+
 def sweep(n_cases: int = 10, base_seed: int = 0):
     """Run the property for ``n_cases`` deterministic seeds.
 

@@ -1,0 +1,113 @@
+"""Cross-algorithm conformance suite for the two-level index.
+
+Every ``top x bottom`` combination of :class:`TwoLevelConfig` must satisfy
+the same contract, checked per combo on seeded random cases (``proptest``):
+
+  (a) returned ids are unique per query (the rerank dedupe holds);
+  (b) recall@k vs ``l2_topk_exact`` is monotone non-decreasing in
+      ``nprobe`` (exact for the brute bottom — more probes mean a
+      candidate *superset*; a small slack for LSH, whose fixed-size
+      Hamming shortlist is not a superset under more probes);
+  (c) results are invariant to corpus row permutation: exact (id-set)
+      invariance at full probe for the brute bottom, recall-parity for
+      the approximate bottoms (their build order legitimately shapes the
+      tree/code structure).
+
+Shapes are pinned (same n/d/K/cap across cases) so every case after the
+first hits the jit cache.
+"""
+import numpy as np
+import pytest
+
+from proptest import run_cases
+from repro.core.brute import brute_search
+from repro.core.metrics import recall_at_k
+from repro.core.two_level import (
+    BOTTOM_ALGOS,
+    TOP_ALGOS,
+    TwoLevelConfig,
+    build_two_level,
+)
+
+N, D, K, CAP, NQ, TOPK = 600, 8, 16, 96, 16, 10
+COMBOS = [(t, b) for t in TOP_ALGOS for b in BOTTOM_ALGOS]
+
+
+def _corpus(rng, n):
+    c = rng.normal(size=(8, D)) * 4
+    return (c[rng.integers(0, 8, n)]
+            + rng.normal(size=(n, D))).astype(np.float32)
+
+
+def _build(db, top, bottom, p):
+    cfg = TwoLevelConfig(
+        n_clusters=K, top=top, bottom=bottom, kmeans_iters=3,
+        kmeans_minibatch=None, bucket_cap=CAP, tree_leaf=4,
+        lsh_bits=32, pq_m=4,
+    )
+    return build_two_level(db, cfg, p=p)
+
+
+def _search_ids(idx, q, nprobe, k=TOPK):
+    # LSH keeps a fixed-size Hamming shortlist, which is NOT a candidate
+    # superset as nprobe grows; scale the rerank budget with the probe
+    # count so the monotonicity contract tests the algorithm, not an
+    # artificially starved shortlist.
+    d, i, _ = idx.search(q, k, nprobe=nprobe, beam_width=8,
+                         lsh_candidates=64 * nprobe)
+    return np.asarray(d), np.asarray(i)
+
+
+@pytest.mark.parametrize("top,bottom", COMBOS)
+def test_conformance_sweep(top, bottom):
+    run_cases(
+        _conformance_property, n_cases=2,
+        base_seed=TOP_ALGOS.index(top) * 10 + BOTTOM_ALGOS.index(bottom),
+        top=top, bottom=bottom)
+
+
+def _conformance_property(case, top, bottom):
+    rng = case.rng
+    db = _corpus(rng, N)
+    p = rng.dirichlet(np.full(N, 0.5)) if bottom == "qlbt" else None
+    idx = _build(db, top, bottom, p)
+    q = _corpus(rng, NQ)
+    _, i_true = brute_search(q, db, TOPK)
+
+    # (a) unique ids per query, at partial and full probe
+    for nprobe in (4, K):
+        _, ids = _search_ids(idx, q, nprobe)
+        for b in range(NQ):
+            real = ids[b][ids[b] >= 0]
+            assert len(set(real.tolist())) == len(real), (
+                f"{top}/{bottom} nprobe={nprobe}: duplicate ids {ids[b]}")
+
+    # (b) recall monotone non-decreasing in nprobe
+    recalls = []
+    for nprobe in (1, 4, K):
+        _, ids = _search_ids(idx, q, nprobe)
+        recalls.append(recall_at_k(ids, i_true))
+    slack = 0.05 if bottom == "lsh" else 1e-9
+    assert all(b >= a - slack for a, b in zip(recalls, recalls[1:])), (
+        f"{top}/{bottom}: recall not monotone in nprobe: {recalls}")
+
+    # (c) corpus row permutation invariance
+    perm = rng.permutation(N)
+    p_perm = None if p is None else p[perm]
+    idx_p = _build(db[perm], top, bottom, p_perm)
+    d0, i0 = _search_ids(idx, q, K)
+    dp, ip = _search_ids(idx_p, q, K)
+    ip_mapped = np.where(ip >= 0, perm[np.maximum(ip, 0)], -1)
+    if bottom == "brute":
+        # full probe == exact scan -> identical answer sets
+        np.testing.assert_allclose(dp, d0, rtol=1e-4, atol=1e-4)
+        for b in range(NQ):
+            assert set(ip_mapped[b].tolist()) == set(i0[b].tolist()), (
+                f"{top}/{bottom}: permuted corpus changed the exact "
+                f"result set")
+    else:
+        r0 = recall_at_k(i0, i_true)
+        rp = recall_at_k(ip_mapped, i_true)
+        assert abs(r0 - rp) < 0.25, (
+            f"{top}/{bottom}: permutation moved recall "
+            f"{r0:.3f} -> {rp:.3f}")

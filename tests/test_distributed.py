@@ -120,6 +120,48 @@ def test_shard_forest_slices_conserve_entities():
     assert np.array_equal(np.sort(seen), np.arange(db.shape[0]))
 
 
+def test_shard_forest_shapes_stable_across_mutation():
+    """Slicing a mutated forest into the shapes recorded before the
+    mutation yields identically-shaped shards (the no-re-jit contract),
+    and outgrowing the reservation raises instead of silently reshaping."""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed import forest_shard_shapes, shard_forest
+
+    rng = np.random.default_rng(1)
+    db = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=16, top="brute", bottom="tree", kmeans_iters=3,
+        tree_leaf=4))
+    n_dev = 4
+    shapes = forest_shard_shapes(idx, n_dev, headroom=1.5)
+    sh0 = shard_forest(idx, n_dev, shapes=shapes)
+    idx.delete_entities(rng.choice(600, 150, replace=False))
+    idx.add_entities(rng.normal(size=(180, 8)).astype(np.float32))
+    idx.rebalance()
+    sh1 = shard_forest(idx, n_dev, shapes=shapes)
+    for name in sh0:
+        if name == "max_depth":
+            assert sh0[name] == sh1[name]
+            continue
+        assert sh0[name].shape == sh1[name].shape, name
+    # shard contents track the mutation: no deleted slot survives
+    le = sh1["leaf_entities"]
+    slots = le[le >= 0]
+    # every remaining slot resolves to a live entity
+    for s in range(n_dev):
+        les = sh1["leaf_entities"][s]
+        gids = sh1["bucket_ids"][s].reshape(-1)[les[les >= 0]]
+        assert (gids >= 0).all()
+        assert idx.alive[gids].all()
+    # tiny reservation -> loud failure, not silent reshape
+    import dataclasses
+
+    small = dataclasses.replace(
+        forest_shard_shapes(idx, n_dev, headroom=1.0), nodes=2)
+    with pytest.raises(ValueError, match="outgrew"):
+        shard_forest(idx, n_dev, shapes=small)
+
+
 # ---------------------------------------------------------------------------
 # slow, subprocess: real 8-device semantics
 # ---------------------------------------------------------------------------
@@ -211,6 +253,103 @@ def test_sharded_forest_recall():
     """)
     assert float(out.split("RECALL2")[1].strip()) > 0.8
     assert float(out.split("RECALL")[1].split()[0]) > 0.8
+
+
+@slow
+def test_sharded_ivf_full_probe_identical_to_single_device():
+    """At full probe both paths are exact scans over the bucketed corpus,
+    so the sharded IVF must return the *identical* (id, distance) sets as
+    the unsharded index — including bucket-grid padding (K % shards != 0)
+    and row padding (N % shards != 0), the PR 2 edge cases."""
+    out = _run("""
+    from repro.distributed import sharded_ivf_search
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(3)
+    c = rng.normal(size=(32, 16)) * 4
+    db = (c[rng.integers(0, 32, 2500)] + rng.normal(size=(2500, 16))).astype(np.float32)
+    q = db[:40] + rng.normal(size=(40, 16)).astype(np.float32) * 0.05
+    idx = build_two_level(db, TwoLevelConfig(n_clusters=50, top="brute",
+                          bottom="brute", kmeans_iters=5))
+    Kp = -(-50 // 8) * 8
+    d, i = sharded_ivf_search(mesh, idx, q, 10, nprobe_local=Kp // 8)
+    ds, js, _ = idx.search(q, 10, nprobe=50)
+    ok_d = np.allclose(np.sort(d), np.sort(ds), rtol=1e-4, atol=1e-4)
+    ok_i = all(set(i[b].tolist()) == set(js[b].tolist()) for b in range(40))
+    print("IDENT", bool(ok_d and ok_i))
+    """)
+    assert "IDENT True" in out
+
+
+@slow
+def test_sharded_forest_full_probe_identical_to_single_device():
+    """Every shard descends the same per-bucket trees the single-device
+    forest holds; with every bucket probed on both sides the candidate
+    sets coincide, so the merged (id, distance) sets must be identical."""
+    out = _run("""
+    from repro.distributed import sharded_forest_search
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(4)
+    c = rng.normal(size=(32, 16)) * 4
+    db = (c[rng.integers(0, 32, 2700)] + rng.normal(size=(2700, 16))).astype(np.float32)
+    q = db[:40] + rng.normal(size=(40, 16)).astype(np.float32) * 0.05
+    idx = build_two_level(db, TwoLevelConfig(n_clusters=50, top="brute",
+                          bottom="tree", kmeans_iters=5, tree_leaf=8))
+    Kp = -(-50 // 8) * 8
+    d, i = sharded_forest_search(mesh, idx, q, 10, nprobe_local=Kp // 8,
+                                 beam_width=8)
+    ds, js, _ = idx.search(q, 10, nprobe=50, beam_width=8)
+    ok_d = np.allclose(np.sort(d), np.sort(ds), rtol=1e-4, atol=1e-4)
+    ok_i = all(set(i[b].tolist()) == set(js[b].tolist()) for b in range(40))
+    print("IDENT", bool(ok_d and ok_i))
+    """)
+    assert "IDENT True" in out
+
+
+@slow
+def test_serving_engine_sharded_survives_mutation_without_rejit():
+    """Acceptance: ServingEngine.sharded keeps answering through a 30%
+    interleaved add/delete + rebalance — deleted ids never served, the
+    jitted search kernel's compile cache is untouched (no re-jit)."""
+    out = _run("""
+    from repro.serve.engine import ServingEngine
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(5)
+    c = rng.normal(size=(32, 16)) * 4
+    def mk(n):
+        return (c[rng.integers(0, 32, n)] + rng.normal(size=(n, 16))).astype(np.float32)
+    db = mk(3000)
+    idx = build_two_level(db, TwoLevelConfig(n_clusters=64, top="brute",
+                          bottom="tree", kmeans_iters=4, tree_leaf=8))
+    eng = ServingEngine.sharded(mesh, idx, kind="forest", k=10,
+                                nprobe_local=4, beam_width=8, headroom=1.5,
+                                max_batch=16, max_wait_ms=2.0)
+    q = mk(48)
+    futs = [eng.submit(q[j]) for j in range(48)]
+    _ = [f.get(timeout=120) for f in futs]
+    cache0 = eng.search_fn.jit_cache_size()
+    deleted = []
+    for r in range(3):
+        live = np.nonzero(idx.alive)[0]
+        dele = rng.choice(live, 300, replace=False)
+        idx.delete_entities(dele); deleted.append(dele)
+        idx.add_entities(mk(300))
+    idx.rebalance()
+    eng.apply_updates(idx)
+    deleted = np.concatenate(deleted)
+    futs = [eng.submit(q[j]) for j in range(48)]
+    ids = np.stack([f.get(timeout=120)[1] for f in futs])
+    cache1 = eng.search_fn.jit_cache_size()
+    eng.close()
+    print("CACHE", cache0, cache1, "CLEAN", bool(not np.isin(ids, deleted).any()))
+    """)
+    parts = out.split()
+    c0 = int(parts[parts.index("CACHE") + 1])
+    c1 = int(parts[parts.index("CACHE") + 2])
+    assert "CLEAN True" in out
+    assert c1 == c0, f"search kernel re-jitted: {c0} -> {c1}"
 
 
 @slow
