@@ -37,6 +37,14 @@ def ground_truth(db, queries, k=10, tag=None):
     return d, i
 
 
+def clustered_corpus(rng, n: int, d: int) -> "np.ndarray":
+    """Mildly clustered entity embeddings (8-point clusters) — the shared
+    workload shape for the QLBT figures (fig1, fig6)."""
+    c = rng.normal(size=(n // 8, d)).astype(np.float32)
+    x = (c[:, None, :] + 0.8 * rng.normal(size=(n // 8, 8, d)))
+    return x.reshape(-1, d)[:n].astype(np.float32)
+
+
 def heldout_split(db, n_queries: int):
     """Hold out the corpus tail as queries (SIFT-style true held-out —
     near-duplicate queries make one-level trees trivially strong and
@@ -54,6 +62,23 @@ def timed(fn, *args, warmup=1, iters=3, **kw):
         out = fn(*args, **kw)
         ts.append(time.perf_counter() - t0)
     return out, float(np.median(ts))
+
+
+def lat_summary(samples_s) -> dict:
+    """p50 AND p99 (plus mean) of a latency sample list, in ms.
+
+    Benchmark summaries report the pair so tail effects — e.g. a
+    maintenance pass stealing cycles from the serving loop — show up
+    next to the median instead of hiding behind it.
+    """
+    a = np.asarray(list(samples_s), dtype=np.float64) * 1e3
+    if a.size == 0:
+        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+    return {
+        "p50_ms": float(np.percentile(a, 50)),
+        "p99_ms": float(np.percentile(a, 99)),
+        "mean_ms": float(a.mean()),
+    }
 
 
 def csv_row(name: str, us_per_call: float, derived: str):

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_row, timed
+from benchmarks.common import clustered_corpus, csv_row, timed
 from repro.core.likelihood import beta_for_unbalance, sample_queries
 from repro.core.metrics import recall_at_k
 from repro.core.tree import build_qlbt, build_rp_tree, tree_search
@@ -28,10 +28,7 @@ import jax.numpy as jnp
 
 def _corpus(rng, n=256, d=256):
     # mild cluster structure like real entity embeddings
-    c = rng.normal(size=(n // 8, d)).astype(np.float32)
-    x = (c[:, None, :] + 0.8 * rng.normal(size=(n // 8, 8, d))) \
-        .reshape(n, d)
-    return x.astype(np.float32)
+    return clustered_corpus(rng, n, d)
 
 
 def _work_at_recall(tree, db, q, gt, target=0.95):

@@ -1,0 +1,251 @@
+"""Fig. 6 (beyond paper): adaptive re-boost under a drifting-Zipf workload.
+
+A QLBT is boosted for the traffic of phase 0; every later phase rotates
+the Zipf head to a fresh random permutation (the "new things got popular"
+regime).  Three strategies serve the same query stream:
+
+  * ``stale``    — the phase-0 tree, never touched (a build-once index);
+  * ``adaptive`` — the sketch -> drift -> ``reboost`` loop: an
+    ``OnlineLikelihoodEstimator`` observes the returned top-1 ids and a
+    reboost fires when total-variation drift crosses the threshold;
+  * ``oracle``   — a from-scratch ``build_qlbt`` on the true phase
+    likelihood (the quality ceiling, at full rebuild cost).
+
+Reported per phase: mean work (internal dot products + exact distance
+evals — fig1's machine-independent latency proxy), recall@10, and wall
+p50/p99 per search call; plus the reboost-vs-rebuild cost ratio and the
+recovered fraction of the stale->oracle work gap (the PR acceptance
+asks >= 0.5).  A second segment measures the serving cache: hit rate and
+p50/p99 of ``ServingEngine.search`` with and without the
+``FrequencyAdmissionCache`` under the same Zipf traffic.
+
+Rows land in ``benchmarks/results/adaptive.csv`` and on stdout.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, clustered_corpus, csv_row, lat_summary
+
+
+def _phase_p(rng, n, alpha):
+    from repro.core.likelihood import zipf_likelihood
+
+    z = zipf_likelihood(n, alpha)
+    perm = rng.permutation(n)
+    p = np.empty(n)
+    p[perm] = z
+    return p
+
+
+def run(n: int = 8192, d: int = 128, phases: int = 3,
+        batches_per_phase: int = 10, batch: int = 256,
+        zipf_alpha: float = 1.1, drift_threshold: float = 0.3,
+        seed: int = 0) -> list:
+    import jax.numpy as jnp
+
+    from repro.adaptive import MaintenanceScheduler, OnlineLikelihoodEstimator
+    from repro.core.index import SearchIndex
+    from repro.core.likelihood import sample_queries
+    from repro.core.metrics import recall_at_k
+    from repro.core.protocol import IndexSpec
+    from repro.core.tree import build_qlbt, tree_search
+
+    rng = np.random.default_rng(seed)
+    db = clustered_corpus(rng, n, d)
+    dbj = jnp.asarray(db)
+    p0 = _phase_p(rng, n, zipf_alpha)
+
+    stale = build_qlbt(db, p0, seed=1, n_candidates=16, lam=0.2)
+    # the adaptive strategy is the SHIPPED maintenance path, not a
+    # re-implementation: a SearchIndex (whose base_tree keeps reboosts
+    # deriving from the build) driven by the MaintenanceScheduler's own
+    # trigger logic (threshold + mass gate + cooldown + raw re-anchor)
+    adaptive = SearchIndex(
+        spec=IndexSpec(kind="qlbt"), db=db,
+        tree=build_qlbt(db, p0, seed=1, n_candidates=16, lam=0.2), p=p0)
+    # halflife/threshold calibrated so stationary sampling noise settles
+    # under the trigger (~0.22-0.25 at steady mass) while a head rotation
+    # crosses it within 1-2 batches — detection speed dominates the
+    # latency-vs-time curve, since a tree adapted to the previous head is
+    # *worse* than a never-boosted one for the next rotation until the
+    # reboost lands; the mass gate skips the noisy warmup
+    est = OnlineLikelihoodEstimator(n, reference=p0, halflife=2 * batch)
+    sched = MaintenanceScheduler(
+        est, adaptive, interval_s=None, drift_threshold=drift_threshold,
+        min_observations=2.7 * batch,     # warmup gate, in decayed mass
+        cooldown_observations=3 * batch,  # debounce, in observations
+        rebalance=False,
+        reboost_kw=dict(n_candidates=12, lam=0.2))
+
+    def padded_arrays(tree):
+        """Pad the node/leaf tables to fixed buckets so a reboosted tree
+        hits the already-compiled search kernel (the device-side analogue
+        of ShardedSearchBackend's recorded shapes) — re-boost pauses must
+        not turn into serving-loop compile spikes."""
+        arrs = tree.device_arrays()
+        import jax.numpy as jnp
+
+        def bucket(x):                      # next multiple of 2048
+            return -(-x // 2048) * 2048
+
+        pn = bucket(tree.n_nodes)
+        pl = bucket(max(tree.n_leaves, 1))
+        out = {}
+        out["proj"] = jnp.zeros((pn, arrs["proj"].shape[1]),
+                                arrs["proj"].dtype).at[
+            : tree.n_nodes].set(arrs["proj"])
+        out["dims"] = jnp.zeros((pn,), arrs["dims"].dtype).at[
+            : tree.n_nodes].set(arrs["dims"])
+        out["tau"] = jnp.zeros((pn,), arrs["tau"].dtype).at[
+            : tree.n_nodes].set(arrs["tau"])
+        out["children"] = jnp.full((pn, 2), -1, arrs["children"].dtype).at[
+            : tree.n_nodes].set(arrs["children"])
+        out["leaf_row"] = jnp.full((pn,), -1, arrs["leaf_row"].dtype).at[
+            : tree.n_nodes].set(arrs["leaf_row"])
+        le = arrs["leaf_entities"]
+        out["leaf_entities"] = jnp.full(
+            (pl, le.shape[1] if le.size else tree.leaf_size), -1,
+            le.dtype).at[: le.shape[0]].set(le)
+        return out
+
+    # padded arrays are per-publish state, not per-batch work: cache by
+    # tree identity (keeping the tree ref pinned so ids can't be reused)
+    pad_cache: dict = {}
+
+    def arrays_of(tree):
+        ent = pad_cache.get(id(tree))
+        if ent is None or ent[0] is not tree:
+            pad_cache[id(tree)] = ent = (tree, padded_arrays(tree))
+        return ent[1]
+
+    def searched(tree, qj):
+        arrs = arrays_of(tree)
+        t0 = time.perf_counter()
+        res = tree_search(arrs, dbj, qj, beam_width=4, k=10, max_steps=64)
+        res.ids.block_until_ready()
+        wall = time.perf_counter() - t0
+        work = np.asarray(res.internal_visits) + np.asarray(res.candidates)
+        return np.asarray(res.ids), float(work.mean()), wall
+
+    rows = []
+    reboost_ms, rebuild_ms, reboosts = [], [], 0
+    gaps, recovered = [], []
+    for phase in range(phases):
+        p_t = p0 if phase == 0 else _phase_p(rng, n, zipf_alpha)
+        t0 = time.perf_counter()
+        oracle = build_qlbt(db, p_t, seed=1, n_candidates=16, lam=0.2)
+        rebuild_ms.append((time.perf_counter() - t0) * 1e3)
+        walls = {"stale": [], "adaptive": [], "oracle": []}
+        works = {"stale": [], "adaptive": [], "oracle": []}
+        recalls = {"stale": [], "adaptive": [], "oracle": []}
+        for _ in range(batches_per_phase):
+            q, gt = sample_queries(rng, db, p_t, batch, noise_scale=0.05)
+            qj = jnp.asarray(q)
+            for name, tree in (("stale", stale),
+                               ("adaptive", adaptive.tree),
+                               ("oracle", oracle)):
+                ids, work, wall = searched(tree, qj)
+                works[name].append(work)
+                walls[name].append(wall)
+                recalls[name].append(recall_at_k(ids, gt))
+                if name == "adaptive":
+                    est.observe(ids[:, 0])
+                    ev = sched.check_now()
+                    if ev is not None:
+                        reboost_ms.append(ev["duration_s"] * 1e3)
+                        # warm the search kernel for the new tree as part
+                        # of maintenance (untimed, like the rebuild's) —
+                        # the scheduler compiles/pads off the serving path
+                        # (the sharded backend reuses its jitted fn
+                        # outright), so serving never eats it
+                        searched(adaptive.tree, qj)
+                        reboosts += 1
+        row = {"phase": phase}
+        for name in works:
+            row[f"work_{name}"] = float(np.mean(works[name]))
+            row[f"recall_{name}"] = float(np.mean(recalls[name]))
+            row.update({f"{k}_{name}": v
+                        for k, v in lat_summary(walls[name]).items()})
+        rows.append(row)
+        if phase > 0:
+            gap = row["work_stale"] - row["work_oracle"]
+            gaps.append(gap)
+            recovered.append(row["work_stale"] - row["work_adaptive"])
+        csv_row(
+            f"fig6_phase{phase}", row["p50_ms_adaptive"] * 1e3,
+            f"work_stale={row['work_stale']:.1f},"
+            f"work_adapt={row['work_adaptive']:.1f},"
+            f"work_oracle={row['work_oracle']:.1f},"
+            f"recall_adapt={row['recall_adaptive']:.3f},"
+            f"p99_ms_stale={row['p99_ms_stale']:.2f},"
+            f"p99_ms_adapt={row['p99_ms_adaptive']:.2f}")
+
+    frac = (float(np.sum(recovered) / np.sum(gaps))
+            if gaps and np.sum(gaps) > 0 else float("nan"))
+    mean_reb = float(np.mean(reboost_ms)) if reboost_ms else 0.0
+    mean_bld = float(np.mean(rebuild_ms))
+    csv_row(
+        "fig6_summary", mean_reb * 1e3,
+        f"recovered_frac={frac:.2f},reboosts={reboosts},"
+        f"reboost_ms={mean_reb:.0f},rebuild_ms={mean_bld:.0f},"
+        f"speedup={mean_bld / max(mean_reb, 1e-9):.1f}x")
+
+    cache_row = _cache_segment(rng, db, adaptive.tree, p0, n, batch)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "adaptive.csv"), "w") as f:
+        cols = sorted(rows[0])
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+        f.write(f"# summary recovered_frac={frac:.3f} reboosts={reboosts} "
+                f"reboost_ms={mean_reb:.1f} rebuild_ms={mean_bld:.1f}\n")
+        f.write(f"# cache {cache_row}\n")
+    return rows
+
+
+def _cache_segment(rng, db, tree, p, n, batch):
+    """Serving-cache segment: hit rate + p50/p99 with and without."""
+    import jax.numpy as jnp
+
+    from repro.adaptive import FrequencyAdmissionCache
+    from repro.core.tree import tree_search
+    from repro.serve.engine import ServingEngine
+
+    dbj = jnp.asarray(db)
+
+    def fn(qs):
+        res = tree_search(tree.device_arrays(), dbj, jnp.asarray(qs),
+                          beam_width=4, k=10,
+                          max_steps=tree.max_depth + 4)
+        return np.asarray(res.dists), np.asarray(res.ids)
+
+    qids = rng.choice(n, 2000, p=p / p.sum())
+    out = {}
+    for label, cache in (("nocache", None),
+                         ("cache", FrequencyAdmissionCache(capacity=512))):
+        eng = ServingEngine(fn, cache=cache, max_batch=64, max_wait_ms=0.5)
+        try:
+            ts = []
+            for qid in qids:
+                t0 = time.perf_counter()
+                eng.search(db[qid], timeout=30.0)
+                ts.append(time.perf_counter() - t0)
+            s = lat_summary(ts)
+            st = eng.stats()
+            hit_rate = (st.cache_hits / max(st.cache_hits
+                                            + st.cache_misses, 1))
+            out[label] = {**s, "hit_rate": round(hit_rate, 3)}
+            csv_row(f"fig6_serve_{label}", s["p50_ms"] * 1e3,
+                    f"p99_ms={s['p99_ms']:.2f},hit_rate={hit_rate:.2f}")
+        finally:
+            eng.close()
+    return out
+
+
+if __name__ == "__main__":
+    run()

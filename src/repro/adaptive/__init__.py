@@ -1,0 +1,28 @@
+"""Online workload adaptation: serving-time telemetry back into the index.
+
+The paper boosts the tree once at build time from a static likelihood
+vector; real traffic is skewed *and shifting*.  This package closes the
+loop:
+
+  * :mod:`repro.adaptive.sketch` — fixed-shape decayed count-min sketch
+    with heavy-hitter tracking, on JAX arrays;
+  * :mod:`repro.adaptive.estimator` — ``OnlineLikelihoodEstimator`` turns
+    returned entity ids into a smoothed likelihood and drift metrics;
+  * :mod:`repro.adaptive.maintenance` — ``MaintenanceScheduler`` triggers
+    incremental ``reboost``/``rebalance`` past a drift threshold and
+    republishes through ``ServingEngine.apply_updates``;
+  * :mod:`repro.adaptive.cache` — ``FrequencyAdmissionCache``, a
+    TinyLFU-style exact-match result cache fronting the engine.
+"""
+from repro.adaptive.cache import FrequencyAdmissionCache
+from repro.adaptive.estimator import OnlineLikelihoodEstimator
+from repro.adaptive.maintenance import HostIndexBackend, MaintenanceScheduler
+from repro.adaptive.sketch import CountMinSketch
+
+__all__ = [
+    "CountMinSketch",
+    "FrequencyAdmissionCache",
+    "HostIndexBackend",
+    "MaintenanceScheduler",
+    "OnlineLikelihoodEstimator",
+]

@@ -1,0 +1,201 @@
+"""Drift-triggered background index maintenance.
+
+``MaintenanceScheduler`` closes the serving -> index loop: a daemon
+thread polls the estimator's drift against the likelihood the deployed
+index was boosted with and, past a threshold, runs the incremental
+maintenance chain *off* the serving path:
+
+    p_new = estimator.likelihood()
+    index.reboost(p_new)          # top-level re-split, subtrees reused
+    index.rebalance()             # PR-3 drifted-bucket Lloyd step
+    engine.apply_updates(target)  # republish under the backend's lock
+                                  # (also invalidates the result cache)
+    estimator.set_reference(p_new)
+
+The serving loop is never blocked: ``reboost`` builds off to the side
+and swaps a reference; ``apply_updates`` re-places device arrays under
+the existing ``ShardedSearchBackend`` lock (in-flight batches finish on
+the old arrays).  For engines serving a host-resident index,
+``HostIndexBackend`` provides the same ``apply_updates`` surface as the
+sharded backend so cache invalidation and republish work identically.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+__all__ = ["HostIndexBackend", "MaintenanceScheduler"]
+
+
+class HostIndexBackend:
+    """``queries (B, d) -> (dists, ids)`` over an in-process index.
+
+    The engine-facing twin of ``ShardedSearchBackend`` for single-host
+    serving: a callable with ``apply_updates`` so the engine's cache
+    invalidation and the scheduler's republish path work unchanged.
+    ``index`` is anything with ``.search(queries, k, **kw)`` returning
+    ``(dists, ids, work)`` — ``SearchIndex`` or ``TwoLevelIndex``.
+    """
+
+    def __init__(self, index, *, k: int = 10, **search_kw):
+        self.index = index
+        self.k = k
+        self.search_kw = search_kw
+
+    def __call__(self, queries):
+        idx = self.index           # snapshot: apply_updates swaps the ref
+        d, i, _ = idx.search(np.asarray(queries), self.k, **self.search_kw)
+        return np.asarray(d), np.asarray(i)
+
+    def apply_updates(self, index, **kw) -> None:
+        self.index = index
+
+
+class MaintenanceScheduler:
+    """Background drift watcher driving reboost/rebalance/republish.
+
+    Parameters
+    ----------
+    estimator : OnlineLikelihoodEstimator (drift + likelihood source)
+    index     : object with ``reboost(p)`` — ``SearchIndex`` or
+                ``TwoLevelIndex``; ``rebalance()`` is chained when present
+    engine    : optional ``ServingEngine`` — republished to via
+                ``apply_updates`` (which also invalidates its cache)
+    cache     : optional cache to invalidate when no engine is given
+    publish_target : maps the index to the ``apply_updates`` target
+                (identity by default: a ``TwoLevelIndex`` is what
+                ``ShardedSearchBackend`` re-places)
+    interval_s : poll period; ``None`` disables the thread (tests drive
+                :meth:`check_now` directly)
+    drift_threshold : trigger level on ``metric`` ("tv" or "kl")
+    min_observations : decayed observation mass required before a trigger
+                (drift of an empty estimator is noise)
+    rebalance : chain ``index.rebalance()`` after reboost; "auto" enables
+                it only for two-level indexes (a single-tree rebalance is
+                a full rebuild — exactly what reboost avoids)
+    """
+
+    def __init__(
+        self,
+        estimator,
+        index,
+        *,
+        engine=None,
+        cache=None,
+        publish_target: Optional[Callable[[Any], Any]] = None,
+        interval_s: Optional[float] = 1.0,
+        drift_threshold: float = 0.3,
+        metric: str = "tv",
+        min_observations: float = 256.0,
+        cooldown_observations: Optional[float] = None,
+        rebalance: "bool | str" = "auto",
+        reboost_kw: Optional[dict] = None,
+        on_event: Optional[Callable[[dict], None]] = None,
+    ):
+        if metric not in ("tv", "kl"):
+            raise ValueError(f"metric must be 'tv' or 'kl', got {metric!r}")
+        self.estimator = estimator
+        self.index = index
+        self.engine = engine
+        self.cache = cache
+        self.publish_target = publish_target or (lambda idx: idx)
+        self.interval = interval_s
+        self.drift_threshold = drift_threshold
+        self.metric = metric
+        self.min_observations = min_observations
+        # debounce: require this much fresh traffic between triggers so a
+        # noisy drift estimate can't thrash reboosts back-to-back
+        self.cooldown_observations = (
+            min_observations if cooldown_observations is None
+            else cooldown_observations)
+        self._last_trigger_n = -float("inf")
+        if rebalance == "auto":
+            rebalance = (getattr(index, "two_level", None) is not None
+                         or hasattr(index, "bucket_ids"))
+        self.rebalance = bool(rebalance)
+        self.reboost_kw = reboost_kw or {}
+        self.on_event = on_event
+        self.events: list[dict] = []
+        self.n_reboosts = 0
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if interval_s is not None:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+    def check_now(self) -> Optional[dict]:
+        """One synchronous drift check; returns the event dict if it
+        triggered maintenance, else None."""
+        d = self.estimator.drift()
+        if d["n_observed"] < self.min_observations:
+            return None
+        n_total = getattr(self.estimator, "n_total", 0)
+        if n_total - self._last_trigger_n < self.cooldown_observations:
+            return None
+        if d[self.metric] <= self.drift_threshold:
+            return None
+        self._last_trigger_n = n_total
+        return self._trigger(d)
+
+    def _trigger(self, drift: dict) -> dict:
+        t0 = time.perf_counter()
+        # the corpus may have grown since the estimator was sized
+        # (add_entities keeps ids stable and appends) — grow with it so
+        # the likelihood vector matches the index
+        n_idx = getattr(self.index, "n", None)
+        if n_idx is None and hasattr(self.index, "db"):
+            n_idx = int(self.index.db.shape[0])
+        if (n_idx and hasattr(self.estimator, "resize")
+                and n_idx > getattr(self.estimator, "n", n_idx)):
+            self.estimator.resize(n_idx)
+        p_new = self.estimator.likelihood()
+        reboost_stats = self.index.reboost(p_new, **self.reboost_kw)
+        rebalance_stats = None
+        if self.rebalance and hasattr(self.index, "rebalance"):
+            rebalance_stats = self.index.rebalance()
+        if self.engine is not None:
+            self.engine.apply_updates(self.publish_target(self.index))
+        elif self.cache is not None:
+            self.cache.invalidate_all()
+        # re-anchor on the RAW estimate (what drift() compares against);
+        # the smoothed p_new fed to reboost would read as residual drift
+        # at low observation mass
+        if hasattr(self.estimator, "current_raw"):
+            self.estimator.set_reference(self.estimator.current_raw())
+        else:
+            self.estimator.set_reference(p_new)
+        event = {
+            "drift": drift,
+            "reboost": reboost_stats,
+            "rebalance": rebalance_stats,
+            "duration_s": time.perf_counter() - t0,
+            "t": time.time(),
+        }
+        self.events.append(event)
+        self.n_reboosts += 1
+        if self.on_event is not None:
+            self.on_event(event)
+        return event
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.check_now()
+            except Exception as e:       # keep the daemon alive; surface
+                self.last_error = e      # the error through stats/tests
+
+    def close(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,146 @@
+"""Fixed-shape decayed count-min sketch with heavy-hitter tracking (JAX).
+
+The estimator needs per-entity traffic counts without a dense O(N)
+counter update on the hot path.  A count-min sketch gives conservative
+(over-)estimates in O(depth) per id with a fixed (depth, width) table —
+a shape that jits once and batches with search.  Two serving-specific
+extensions:
+
+  * **exponential decay** — counts are multiplied by ``0.5**(m/halflife)``
+    per ``m``-observation batch, so the sketch tracks the *recent*
+    likelihood (what drift detection needs) instead of the all-time one;
+  * **heavy hitters** — a top-k id/estimate pair array maintained inside
+    the same jitted update (candidates = current top-k union the batch),
+    giving the scheduler a cheap read of the current head without a full
+    table scan.
+
+Hashing is multiply-shift over uint32 (width must be a power of two), so
+an update is one gather-free scatter-add per row — no host dicts, no
+recompiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CountMinSketch"]
+
+
+def _hash(ids: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+          width: int) -> jnp.ndarray:
+    """Multiply-shift universal hash -> (depth, m) column indices."""
+    shift = 32 - int(np.log2(width))
+    x = ids.astype(jnp.uint32)
+    h = a[:, None] * x[None, :] + b[:, None]          # uint32 wraparound
+    return (h >> shift).astype(jnp.int32)
+
+
+@jax.jit
+def _update(table, a, b, hh_ids, ids, w, decay):
+    depth, width = table.shape
+    valid = ids >= 0
+    h = _hash(jnp.where(valid, ids, 0), a, b, width)
+    w = jnp.where(valid, w, 0.0)
+    rows = jnp.broadcast_to(jnp.arange(depth)[:, None], h.shape)
+    table = table * decay
+    table = table.at[rows, h].add(jnp.broadcast_to(w[None, :], h.shape))
+
+    # heavy hitters: re-rank current top-k union the batch ids by their
+    # fresh estimates; duplicates are masked so one id holds one slot
+    cand = jnp.concatenate([hh_ids, ids.astype(jnp.int32)])
+    est = _query(table, a, b, cand)
+    est = jnp.where(cand >= 0, est, -jnp.inf)
+    order = jnp.argsort(cand)
+    sc = cand[order]
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros(1, bool), (sc[1:] == sc[:-1]) & (sc[1:] >= 0)])
+    dup = jnp.zeros(cand.shape, bool).at[order].set(dup_sorted)
+    est = jnp.where(dup, -jnp.inf, est)
+    top_est, top_i = jax.lax.top_k(est, hh_ids.shape[0])
+    new_ids = jnp.where(jnp.isneginf(top_est), -1, cand[top_i])
+    new_est = jnp.where(jnp.isneginf(top_est), 0.0, top_est)
+    return table, new_ids, new_est
+
+
+@jax.jit
+def _query(table, a, b, ids):
+    depth, width = table.shape
+    h = _hash(jnp.where(ids >= 0, ids, 0), a, b, width)
+    rows = jnp.broadcast_to(jnp.arange(depth)[:, None], h.shape)
+    est = table[rows, h].min(axis=0)
+    return jnp.where(ids >= 0, est, 0.0)
+
+
+class CountMinSketch:
+    """Decayed CMS + top-k heavy hitters over int entity ids.
+
+    ``halflife`` is measured in observations: after ``halflife`` more
+    observations, an old count has decayed to half its weight.  ``None``
+    disables decay (all-time counts).  Updates pad the batch to the next
+    power of two so the jitted kernel sees a handful of shapes.
+    """
+
+    def __init__(self, *, width: int = 4096, depth: int = 4,
+                 topk: int = 64, halflife: float | None = None,
+                 seed: int = 0):
+        if width & (width - 1):
+            raise ValueError(f"width must be a power of two, got {width}")
+        rng = np.random.default_rng(seed)
+        self.width = width
+        self.depth = depth
+        self.halflife = halflife
+        # odd multipliers make the multiply-shift family universal enough
+        self._a = jnp.asarray(
+            rng.integers(1, 2**32, size=depth, dtype=np.uint32) | 1)
+        self._b = jnp.asarray(
+            rng.integers(0, 2**32, size=depth, dtype=np.uint32))
+        self.table = jnp.zeros((depth, width), jnp.float32)
+        self.hh_ids = jnp.full((topk,), -1, jnp.int32)
+        self.hh_est = jnp.zeros((topk,), jnp.float32)
+        self.n_observed = 0.0      # decayed total weight in the table
+
+    def update(self, ids: np.ndarray, weights: np.ndarray | None = None):
+        """Fold a batch of observed entity ids into the sketch."""
+        ids = np.asarray(ids, dtype=np.int64).ravel()
+        if ids.size == 0:
+            return
+        w = (np.ones(ids.size, np.float32) if weights is None
+             else np.asarray(weights, np.float32).ravel())
+        # decay follows the REAL observation count — computed before the
+        # pow2 padding, which exists only to bound jit shapes and must
+        # not make the effective halflife batching-dependent
+        decay = (1.0 if self.halflife is None
+                 else float(0.5 ** (ids.size / self.halflife)))
+        m = 1
+        while m < ids.size:
+            m <<= 1
+        pad = m - ids.size
+        if pad:
+            ids = np.pad(ids, (0, pad), constant_values=-1)
+            w = np.pad(w, (0, pad))
+        self.table, self.hh_ids, self.hh_est = _update(
+            self.table, self._a, self._b, self.hh_ids,
+            jnp.asarray(ids), jnp.asarray(w), jnp.float32(decay))
+        self.n_observed = self.n_observed * decay + float(w.sum())
+
+    def query(self, ids: np.ndarray) -> np.ndarray:
+        """Conservative count estimates for ``ids`` (0 for id < 0)."""
+        ids = np.asarray(ids, dtype=np.int64).ravel()
+        if ids.size == 0:
+            return np.zeros(0, np.float32)
+        return np.asarray(_query(self.table, self._a, self._b,
+                                 jnp.asarray(ids)))
+
+    def heavy_hitters(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, estimates) of the current top-k, highest first."""
+        ids = np.asarray(self.hh_ids)
+        est = np.asarray(self.hh_est)
+        keep = ids >= 0
+        return ids[keep], est[keep]
+
+    def reset(self) -> None:
+        self.table = jnp.zeros_like(self.table)
+        self.hh_ids = jnp.full_like(self.hh_ids, -1)
+        self.hh_est = jnp.zeros_like(self.hh_est)
+        self.n_observed = 0.0

@@ -27,6 +27,10 @@ class SearchIndex:
     two_level: Optional[TwoLevelIndex] = None
     p: Optional[np.ndarray] = None      # traffic estimate (qlbt rebuilds)
     alive: Optional[np.ndarray] = None  # single-tree tombstones
+    # last fully-built tree: reboost always derives from it, never from a
+    # previous reboost — chained incremental re-splits compound the float
+    # relocations until recall erodes
+    base_tree: Optional[FlatTree] = None
 
     def search(
         self,
@@ -40,10 +44,14 @@ class SearchIndex:
         """Returns (dists, ids, work)."""
         q = np.ascontiguousarray(queries, dtype=np.float32)
         if self.spec.kind in ("qlbt", "tree"):
+            # snapshot once: a maintenance-thread reboost() swaps
+            # self.tree between reads, and mixing the old arrays with the
+            # new tree's max_depth would truncate the descent
+            t = self.tree
             res = tree_mod.tree_search(
-                self.tree.device_arrays(), jnp.asarray(self.db),
-                jnp.asarray(q), kind=self.tree.kind, beam_width=beam_width,
-                k=k, max_steps=self.tree.max_depth + 4,
+                t.device_arrays(), jnp.asarray(self.db),
+                jnp.asarray(q), kind=t.kind, beam_width=beam_width,
+                k=k, max_steps=t.max_depth + 4,
             )
             work = {
                 "internal_visits": int(np.asarray(res.internal_visits).sum()),
@@ -78,6 +86,7 @@ class SearchIndex:
         m = leaf >= 0
         leaf[m] = live[leaf[m]].astype(leaf.dtype)
         self.tree = t
+        self.base_tree = None          # fresh build is the new reboost base
 
     def _ensure_alive(self) -> None:
         if self.alive is None:
@@ -120,6 +129,10 @@ class SearchIndex:
         ids = np.asarray(ids)
         self.alive[ids] = False
         self.tree.drop_entities(ids)
+        if self.base_tree is not None and self.base_tree is not self.tree:
+            # keep the reboost base in sync — a later reboost from a base
+            # still holding the id would resurrect a deleted entity
+            self.base_tree.drop_entities(ids)
 
     def rebalance(self, **kw) -> dict:
         """Two-level: drifted-bucket Lloyd step + dirty-tree rebuild.
@@ -131,6 +144,33 @@ class SearchIndex:
         return {"n_rebuilt_buckets": 1, "n_moved": 0,
                 "n_drifted": 0, "max_drift": 0.0}
 
+    def reboost(self, p: np.ndarray, **kw) -> dict:
+        """Incremental re-boost from a new traffic estimate ``p``.
+
+        Single-tree indexes re-run the boosted split objective on the top
+        levels only, reusing subtrees below (:meth:`FlatTree.reboost`);
+        two-level indexes reboost every bucket tree and swap the forest
+        atomically (:meth:`TwoLevelIndex.reboost`).  Orders of magnitude
+        cheaper than :meth:`rebuild_with_likelihood`'s full rebuild — the
+        drift-triggered maintenance path
+        (``repro.adaptive.MaintenanceScheduler``) calls this.
+        """
+        if self.two_level is not None:
+            stats = self.two_level.reboost(p, **kw)
+            self.p = self.two_level.p
+            return stats
+        self._ensure_alive()
+        p = np.asarray(p, dtype=np.float64)
+        if p.shape[0] != self.db.shape[0]:
+            raise ValueError(
+                f"p has {p.shape[0]} entries for {self.db.shape[0]} rows")
+        self.p = p
+        p_eff = np.where(self.alive, p, 0.0)
+        if self.base_tree is None:
+            self.base_tree = self.tree
+        self.tree = self.base_tree.reboost(self.db, p_eff, **kw)
+        return {"n_reboosted": 1, "n_refreshed": 0}
+
     def rebuild_with_likelihood(self, p: np.ndarray, *, seed: int = 0):
         """Paper §3.1: 'if only this distribution changes, a new search
         tree can be easily built, keeping other configurations the same'
@@ -140,6 +180,7 @@ class SearchIndex:
         if self.spec.kind not in ("qlbt", "tree"):
             return self
         self.tree = build_qlbt(self.db, p, seed=seed)
+        self.base_tree = None          # fresh build is the new reboost base
         self.spec = dataclasses.replace(self.spec, kind="qlbt")
         return self
 

@@ -15,6 +15,8 @@ unbalance score so Fig.-1-style sweeps can be reproduced exactly.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 __all__ = [
@@ -23,6 +25,7 @@ __all__ = [
     "beta_for_unbalance",
     "zipf_likelihood",
     "empirical_likelihood",
+    "decayed_empirical_likelihood",
     "sample_queries",
 ]
 
@@ -98,10 +101,60 @@ def zipf_likelihood(n: int, alpha: float = 1.0) -> np.ndarray:
 
 
 def empirical_likelihood(query_ids: np.ndarray, n: int, smoothing: float = 0.5):
-    """Estimate p from an observed query log (add-``smoothing`` estimator)."""
+    """Estimate p from an observed query log.
+
+    The ``smoothing`` term is Laplace-style additive smoothing: every
+    entity's count gets ``+ smoothing`` pseudo-observations before
+    normalization, so unseen entities keep a small positive likelihood
+    (the default 0.5 is the Jeffreys prior) instead of an exact zero that
+    a KL-divergence drift check could not handle.
+    """
     counts = np.bincount(np.asarray(query_ids, dtype=np.int64), minlength=n)
     counts = counts.astype(np.float64) + smoothing
     return counts / counts.sum()
+
+
+def decayed_empirical_likelihood(
+    query_ids: np.ndarray,
+    n: int,
+    halflife: float,
+    smoothing: float = 0.5,
+    *,
+    prior_counts: Optional[np.ndarray] = None,
+    return_counts: bool = False,
+):
+    """Exponentially-decayed empirical likelihood from a query log.
+
+    The observation ``t`` positions before the newest carries weight
+    ``0.5 ** (t / halflife)`` — the estimator tracks *recent* traffic, the
+    regime index maintenance cares about, rather than the all-time
+    average (``halflife=np.inf`` recovers :func:`empirical_likelihood`).
+    ``smoothing`` is the same Laplace-style additive term.
+
+    ``prior_counts`` chains calls over a stream: pass the counts returned
+    by the previous call (``return_counts=True``) and they are decayed by
+    the new batch's total age before being added, so feeding a log in
+    batches is exactly equivalent to one call over the concatenated log.
+    Shared by ``repro.adaptive.OnlineLikelihoodEstimator`` (its exact,
+    sketch-free mode) and the benchmarks.
+    """
+    ids = np.asarray(query_ids, dtype=np.int64)
+    if ids.size and (ids.min() < 0 or ids.max() >= n):
+        raise ValueError(f"query id out of range [0, {n})")
+    t = ids.size
+    if t:
+        age = (t - 1) - np.arange(t)
+        w = 0.5 ** (age / halflife) if np.isfinite(halflife) else \
+            np.ones(t, np.float64)
+        counts = np.bincount(ids, weights=w, minlength=n)
+    else:
+        counts = np.zeros(n, np.float64)
+    if prior_counts is not None:
+        decay = 0.5 ** (t / halflife) if np.isfinite(halflife) else 1.0
+        counts = counts + np.asarray(prior_counts, np.float64) * decay
+    p = counts + smoothing
+    p = p / p.sum()
+    return (p, counts) if return_counts else p
 
 
 def sample_queries(

@@ -108,6 +108,10 @@ class TwoLevelIndex:
     part_feats: Optional[np.ndarray] = None     # (N, pd) if built on features
     n_adds: int = 0                             # mutations since last rebalance
     n_deletes: int = 0
+    # last fully-BUILT per-bucket trees: reboost always derives from these,
+    # never from a previous reboost (chained incremental re-splits compound
+    # float relocations until recall erodes).  None until the first reboost.
+    base_trees: Optional[list] = None
 
     # ---------------- construction helpers ----------------
     @property
@@ -272,6 +276,11 @@ class TwoLevelIndex:
             if self.forest.trees is not None:
                 for t in self.forest.trees:
                     t.drop_entities(ids)
+        if self.base_trees is not None:
+            # the reboost base must drop the ids too, or the next reboost
+            # would resurrect them
+            for t in self.base_trees:
+                t.drop_entities(ids)
 
     def refresh_forest(self) -> int:
         """Rebuild the trees of dirty buckets only and re-concatenate the
@@ -289,13 +298,15 @@ class TwoLevelIndex:
             ids = ids[ids >= 0]
             self.forest.trees[b] = _bucket_tree(
                 self.db, ids.astype(np.int64), self.config, self.p, int(b))
+            if self.base_trees is not None:
+                self.base_trees[b] = self.forest.trees[b]
             rebuilt += 1
         self.dirty[:] = False
-        new = _concat_forest(self.forest.trees)
-        self.forest.arrays = new.arrays
-        self.forest.roots = new.roots
-        self.forest.max_depth = new.max_depth
-        self.forest.nbytes = new.nbytes
+        # publish with a single reference swap (like reboost): a reader
+        # snapshotting self.forest must never see new roots with old
+        # arrays — the scheduler chains rebalance() on a background
+        # thread while serving continues
+        self.forest = _concat_forest(self.forest.trees)
         return rebuilt
 
     def rebalance(
@@ -374,6 +385,71 @@ class TwoLevelIndex:
             "n_rebuilt_buckets": n_rebuilt,
             "max_drift": max_drift,
         }
+
+    def reboost(
+        self,
+        p: np.ndarray,
+        *,
+        frontier_depth: Optional[int] = None,
+        max_move: float = 0.3,
+    ) -> dict:
+        """Incremental likelihood re-boost for the forest bottom.
+
+        Stores ``p`` as the index's new traffic estimate and re-runs the
+        boosted top-level splits of every per-bucket tree via
+        :meth:`FlatTree.reboost` (subtrees below the frontier are reused).
+        Pending dirty buckets are folded in first, so a drift-triggered
+        reboost also completes any deferred ``add_entities`` refresh.  The
+        rebuilt forest is assembled off to the side and swapped in with a
+        single reference assignment — concurrent searches keep reading the
+        old forest until the swap, never a half-built one (the same
+        single-writer host mutation model as ``add/delete/rebalance``).
+
+        No-op (beyond storing ``p``) for brute/LSH bottoms, whose search
+        order does not depend on the likelihood.  Returns a stats dict:
+        ``n_reboosted`` buckets re-split, ``n_refreshed`` dirty buckets
+        rebuilt from scratch.
+        """
+        self._ensure_mutable()
+        p = np.asarray(p, dtype=np.float64)
+        if p.shape[0] != self.n:
+            raise ValueError(
+                f"p has {p.shape[0]} entries for {self.n} entities")
+        self.p = p
+        if self.forest is None or self.forest.trees is None:
+            return {"n_reboosted": 0, "n_refreshed": 0}
+        cfg = self.config
+        p_eff = np.where(self.alive, p, 0.0)
+        if self.base_trees is None:
+            self.base_trees = list(self.forest.trees)
+        n_ref = 0
+        refreshed = set()
+        for b in np.nonzero(self.dirty)[0]:
+            ids = self.bucket_ids[b][: self.bucket_counts[b]]
+            ids = ids[ids >= 0]
+            self.base_trees[b] = _bucket_tree(
+                self.db, ids.astype(np.int64), cfg, self.p, int(b))
+            refreshed.add(int(b))
+            n_ref += 1
+        n_re = 0
+        trees = list(self.base_trees)
+        for b, t in enumerate(trees):
+            if t.n_nodes <= 1 or b in refreshed:
+                # freshly rebuilt buckets were built with the new p — a
+                # second top-level re-split would only relocate floats
+                continue
+            trees[b] = t.reboost(
+                self.db, p_eff,
+                boost_depth=cfg.qlbt_boost_depth,
+                frontier_depth=frontier_depth,
+                n_candidates=cfg.tree_candidates,
+                lam=cfg.qlbt_lambda,
+                max_move=max_move,
+                seed=cfg.seed + b)
+            n_re += 1
+        self.forest = _concat_forest(trees)   # atomic swap for readers
+        self.dirty[:] = False
+        return {"n_reboosted": n_re, "n_refreshed": n_ref}
 
     def footprint_bytes(self, include_db: bool = True) -> int:
         tot = self.centroids.nbytes + self.bucket_ids.nbytes
@@ -485,15 +561,19 @@ class TwoLevelIndex:
 
     def _forest_candidates(self, q, buckets, beam_width):
         """Descend each probed bucket's tree; union of leaf candidates."""
+        # snapshot the forest once: reboost() publishes a rebuilt forest by
+        # swapping the reference, so a single read keeps roots/arrays/depth
+        # mutually consistent even when a maintenance thread swaps mid-call
+        forest = self.forest
         B, nprobe = buckets.shape
-        roots = jnp.asarray(self.forest.roots)[buckets]      # (B, np)
+        roots = jnp.asarray(forest.roots)[buckets]           # (B, np)
         qq = jnp.repeat(q, nprobe, axis=0)                   # (B*np, d)
         rr = roots.reshape(-1)
         res = tree_mod.tree_search(
-            self.forest.arrays, jnp.asarray(self.db), qq,
+            forest.arrays, jnp.asarray(self.db), qq,
             kind="rp", beam_width=beam_width,
             k=beam_width * self.config.tree_leaf,
-            max_steps=self.forest.max_depth + 4,
+            max_steps=forest.max_depth + 4,
             rerank=False, roots=rr,
         )
         return res.ids.reshape(B, -1)

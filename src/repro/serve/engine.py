@@ -9,7 +9,11 @@ the production shell around any search/scoring function:
     handful of shapes;
   * per-request latency tracking (P50/P90/P99, queue vs compute split);
   * optional hedged dispatch to a replica after ``hedge_ms`` (straggler
-    mitigation for serving).
+    mitigation for serving);
+  * adaptive-serving hooks: an exact-match result cache fronting
+    :meth:`ServingEngine.search` (invalidated on ``apply_updates``) and a
+    likelihood estimator fed the top-1 id of every served query, both
+    surfaced through :class:`EngineStats` (see ``repro.adaptive``).
 """
 from __future__ import annotations
 
@@ -42,6 +46,12 @@ class EngineStats:
     queue_ms: float
     batch_sizes: list
     hedges: int
+    # adaptive-serving gauges (0 when no cache/estimator is attached):
+    # benchmarks and the maintenance scheduler read this one struct
+    # instead of poking engine internals
+    cache_hits: int = 0
+    cache_misses: int = 0
+    drift: float = 0.0
 
 
 def _bucket(n: int) -> int:
@@ -62,10 +72,21 @@ class ServingEngine:
         max_wait_ms: float = 2.0,
         hedge_fn: Optional[Callable] = None,
         hedge_ms: float = 50.0,
+        cache=None,
+        estimator=None,
     ):
+        """``cache`` (repro.adaptive.FrequencyAdmissionCache) fronts
+        :meth:`search` with exact-match results and is invalidated by
+        :meth:`apply_updates`; ``estimator``
+        (repro.adaptive.OnlineLikelihoodEstimator) observes the top-1 id
+        of every served query so drift-triggered maintenance can follow
+        the live traffic."""
         self.search_fn = search_fn
         self.hedge_fn = hedge_fn
         self.hedge_ms = hedge_ms
+        self.cache = cache
+        self.estimator = estimator
+        self.estimator_errors = 0
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.q: "queue.Queue[_Request]" = queue.Queue()
@@ -123,6 +144,11 @@ class ServingEngine:
         self.search_fn.apply_updates(target, **kw)
         if self.hedge_fn is not None:
             self.hedge_fn.apply_updates(target, **kw)
+        if self.cache is not None:
+            # invalidate AFTER the swap: the generation token handed out
+            # at miss time stops in-flight pre-swap results from being
+            # re-inserted (see FrequencyAdmissionCache.offer)
+            self.cache.invalidate_all()
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray) -> "queue.Queue":
@@ -132,8 +158,38 @@ class ServingEngine:
         return fut
 
     def search(self, query: np.ndarray, timeout: float = 30.0):
-        """Blocking single-query convenience call."""
-        return self.submit(query).get(timeout=timeout)
+        """Blocking single-query call, fronted by the result cache.
+
+        Raises :class:`TimeoutError` when no result arrives in
+        ``timeout`` seconds (worker wedged / search_fn stalled).  Cached
+        results are only offered back under the generation observed at
+        miss time, so a search that raced an ``apply_updates`` can never
+        re-insert a stale result.
+        """
+        key = gen = None
+        if self.cache is not None:
+            key = self.cache.key_for(query)
+            gen = self.cache.generation
+            hit = self.cache.get(key)
+            if hit is not None:
+                if self.estimator is not None:
+                    # cache hits ARE head traffic — skipping them would
+                    # blind the drift estimator to exactly the queries
+                    # the index should stay boosted for
+                    try:
+                        self.estimator.observe(np.asarray(hit[1])[:1])
+                    except Exception:
+                        self.estimator_errors += 1
+                return hit
+        try:
+            out = self.submit(query).get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError(
+                f"search timed out after {timeout}s (batch worker "
+                "stalled or search_fn hung)") from None
+        if self.cache is not None:
+            self.cache.offer(key, out, generation=gen)
+        return out
 
     def close(self):
         self._stop.set()
@@ -176,6 +232,12 @@ class ServingEngine:
                 self.latencies.append(t1 - r.t_enqueue)
                 self.queue_waits.append(t0 - r.t_enqueue)
             self.batch_sizes.append(b)
+            if self.estimator is not None:
+                try:
+                    top = np.asarray(i)[:b, 0]
+                    self.estimator.observe(top)
+                except Exception:       # telemetry must never kill serving
+                    self.estimator_errors += 1
 
     def _dispatch(self, qs):
         if self.hedge_fn is None:
@@ -202,8 +264,15 @@ class ServingEngine:
     def stats(self) -> EngineStats:
         a = np.asarray(self.latencies) * 1e3
         qw = np.asarray(self.queue_waits) * 1e3
+        ch = cm = 0
+        drift = 0.0
+        if self.cache is not None:
+            ch, cm = self.cache.hits, self.cache.misses
+        if self.estimator is not None:
+            drift = float(self.estimator.drift()["tv"])
         if a.size == 0:
-            return EngineStats(0, 0, 0, 0, 0, 0, [], self.hedges)
+            return EngineStats(0, 0, 0, 0, 0, 0, [], self.hedges,
+                               cache_hits=ch, cache_misses=cm, drift=drift)
         return EngineStats(
             n=a.size,
             p50_ms=float(np.percentile(a, 50)),
@@ -213,4 +282,7 @@ class ServingEngine:
             queue_ms=float(qw.mean()),
             batch_sizes=self.batch_sizes[-100:],
             hedges=self.hedges,
+            cache_hits=ch,
+            cache_misses=cm,
+            drift=drift,
         )

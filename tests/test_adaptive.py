@@ -1,0 +1,515 @@
+"""repro.adaptive: sketch, estimator, cache, scheduler, reboost loop.
+
+The acceptance check mirrors benchmarks/fig6_adaptive.py at test scale: on
+a drifting-Zipf workload the sketch -> drift -> reboost path must recover
+at least half of the mean-work gap between a stale-boosted tree and an
+oracle rebuild, with the reboost measurably cheaper than the rebuild and
+no stale/deleted id ever returned.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.adaptive import (
+    CountMinSketch,
+    FrequencyAdmissionCache,
+    HostIndexBackend,
+    MaintenanceScheduler,
+    OnlineLikelihoodEstimator,
+)
+from repro.core.likelihood import (
+    decayed_empirical_likelihood,
+    empirical_likelihood,
+    zipf_likelihood,
+)
+from repro.serve.engine import ServingEngine
+
+N, D = 2048, 64
+
+
+# ---------------------------------------------------------------------------
+# sketch
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_overestimates_and_tracks_heavy_hitters():
+    rng = np.random.default_rng(0)
+    s = CountMinSketch(width=1024, depth=4, topk=16, seed=0)
+    ids = rng.choice(100, 4000, p=zipf_likelihood(100, 1.2))
+    for lo in range(0, ids.size, 512):
+        s.update(ids[lo : lo + 512])
+    true = np.bincount(ids, minlength=100)
+    est = s.query(np.arange(100))
+    assert (est >= true - 1e-3).all(), "CMS estimates must be conservative"
+    hh, he = s.heavy_hitters()
+    top5 = set(np.argsort(true)[::-1][:5].tolist())
+    assert len(top5 & set(hh.tolist())) >= 4
+    assert (np.diff(he) <= 1e-6).all(), "heavy hitters sorted descending"
+
+
+def test_sketch_decay_fades_old_traffic():
+    s = CountMinSketch(width=1024, depth=4, topk=8, halflife=100, seed=0)
+    s.update(np.zeros(200, np.int64))
+    s.update(np.ones(400, np.int64))         # id 0 decayed by 0.5**4
+    e = s.query(np.array([0, 1]))
+    assert e[0] < 0.2 * 200 and e[1] >= 400 - 1e-3
+    s.reset()
+    assert s.query(np.array([0, 1])).sum() == 0 and s.n_observed == 0
+
+
+def test_sketch_width_must_be_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        CountMinSketch(width=1000)
+
+
+# ---------------------------------------------------------------------------
+# likelihood helpers
+# ---------------------------------------------------------------------------
+
+
+def test_decayed_empirical_likelihood_chains_and_degenerates():
+    rng = np.random.default_rng(1)
+    log = rng.integers(0, 50, 300)
+    p_once = decayed_empirical_likelihood(log, 50, 64.0)
+    _, c1 = decayed_empirical_likelihood(log[:120], 50, 64.0,
+                                         return_counts=True)
+    p_chain = decayed_empirical_likelihood(log[120:], 50, 64.0,
+                                           prior_counts=c1)
+    np.testing.assert_allclose(p_chain, p_once, rtol=1e-10)
+    # halflife=inf recovers the undecayed estimator exactly
+    np.testing.assert_allclose(
+        decayed_empirical_likelihood(log, 50, np.inf),
+        empirical_likelihood(log, 50), rtol=1e-12)
+    # recency: with a short halflife the newest id dominates the oldest
+    p = decayed_empirical_likelihood(np.array([7] * 50 + [9] * 50), 10, 5.0,
+                                     smoothing=0.0)
+    assert p[9] > 0.9 and p[7] < 0.1
+    with pytest.raises(ValueError, match="out of range"):
+        decayed_empirical_likelihood(np.array([50]), 50, 8.0)
+
+
+# ---------------------------------------------------------------------------
+# estimator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [4096, None])
+def test_estimator_drift_detects_rotation_and_resets(width):
+    rng = np.random.default_rng(2)
+    n = 512
+    z = zipf_likelihood(n, 1.2)
+    p0 = np.empty(n)
+    p0[rng.permutation(n)] = z
+    p1 = np.empty(n)
+    p1[rng.permutation(n)] = z
+    est = OnlineLikelihoodEstimator(n, reference=p0, halflife=1024,
+                                    width=width)
+    for _ in range(8):
+        est.observe(rng.choice(n, 256, p=p0))
+    stationary = est.drift()
+    for _ in range(8):
+        est.observe(rng.choice(n, 256, p=p1))
+    drifted = est.drift()
+    assert drifted["tv"] > stationary["tv"] + 0.2, (stationary, drifted)
+    assert drifted["kl"] > stationary["kl"]
+    # re-anchoring on the current estimate resets the gauge
+    est.set_reference(est.likelihood())
+    assert est.drift()["tv"] < stationary["tv"] + 0.05
+
+
+def test_estimator_sketch_matches_exact_counts():
+    rng = np.random.default_rng(3)
+    n = 256
+    p = zipf_likelihood(n, 1.2)
+    obs = rng.choice(n, 4000, p=p)
+    sk = OnlineLikelihoodEstimator(n, halflife=1e9, width=4096)
+    ex = OnlineLikelihoodEstimator(n, halflife=1e9, width=None)
+    sk.observe(obs)
+    ex.observe(obs)
+    tv = 0.5 * np.abs(sk.likelihood() - ex.likelihood()).sum()
+    assert tv < 0.02, tv
+    hh, _ = sk.heavy_hitters()
+    assert np.argmax(np.bincount(obs)) in hh
+
+
+def test_estimator_ignores_invalid_ids():
+    est = OnlineLikelihoodEstimator(16, width=None)
+    assert est.observe(np.array([-1, 3, 99, 5])) == 2
+    assert est.n_total == 2
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_frequency_admission_protects_head():
+    cache = FrequencyAdmissionCache(capacity=4)
+    keys = [cache.key_for(np.full(3, i, np.float32)) for i in range(8)]
+    for _ in range(5):
+        cache.get(keys[0])                    # key 0 is hot
+    cache.offer(keys[0], "r0")
+    for i in range(1, 4):
+        cache.get(keys[i])
+        cache.offer(keys[i], f"r{i}")
+    cache.get(keys[7])                        # cold one-off
+    assert not cache.offer(keys[7], "r7"), "cold key must not evict"
+    assert cache.get(keys[0]) == "r0"
+    st = cache.stats()
+    assert st["rejected"] == 1 and st["size"] == 4
+
+
+def test_cache_generation_guard_drops_stale_offers():
+    cache = FrequencyAdmissionCache(capacity=8)
+    q = np.arange(4, dtype=np.float32)
+    key = cache.key_for(q)
+    cache.get(key)
+    gen = cache.generation
+    cache.invalidate_all()                    # index mutated mid-flight
+    assert not cache.offer(key, "stale", generation=gen)
+    assert cache.get(key) is None
+    assert cache.offer(key, "fresh", generation=cache.generation)
+    assert cache.get(key) == "fresh"
+
+
+def test_cache_key_distinguishes_dtype_and_shape():
+    cache = FrequencyAdmissionCache()
+    a = np.zeros(4, np.float32)
+    assert cache.key_for(a) != cache.key_for(a.astype(np.float64))
+    assert cache.key_for(a) != cache.key_for(a.reshape(2, 2))
+    assert cache.key_for(a) == cache.key_for(np.zeros(4, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_engine_search_timeout_raises():
+    def slow_fn(qs):
+        time.sleep(0.5)
+        b = qs.shape[0]
+        return np.zeros((b, 1), np.float32), np.zeros((b, 1), np.int32)
+
+    eng = ServingEngine(slow_fn, max_wait_ms=0.1)
+    try:
+        with pytest.raises(TimeoutError, match="timed out"):
+            eng.search(np.zeros(4, np.float32), timeout=0.05)
+        # and a sane timeout still gets the answer
+        d, i = eng.search(np.zeros(4, np.float32), timeout=5.0)
+        assert i.shape == (1,)
+    finally:
+        eng.close()
+
+
+class _VersionedBackend:
+    """Returns ids stamped with the current index 'version'."""
+
+    def __init__(self):
+        self.version = 0
+
+    def __call__(self, qs):
+        b = qs.shape[0]
+        return (np.zeros((b, 1), np.float32),
+                np.full((b, 1), self.version, np.int32))
+
+    def apply_updates(self, target, **kw):
+        self.version = target
+
+
+def test_engine_apply_updates_invalidates_cache():
+    """Stale-result regression: after apply_updates the cache must never
+    serve results computed against the old index."""
+    backend = _VersionedBackend()
+    cache = FrequencyAdmissionCache(capacity=32)
+    eng = ServingEngine(backend, cache=cache, max_wait_ms=0.1)
+    try:
+        q = np.arange(6, dtype=np.float32)
+        _, i0 = eng.search(q, timeout=5.0)
+        assert i0[0] == 0
+        _, i1 = eng.search(q, timeout=5.0)    # cache hit, same version
+        assert i1[0] == 0 and eng.stats().cache_hits == 1
+        eng.apply_updates(7)                  # index mutated
+        _, i2 = eng.search(q, timeout=5.0)
+        assert i2[0] == 7, "cache served a stale pre-update result"
+    finally:
+        eng.close()
+
+
+def test_engine_estimator_sees_hits_and_misses():
+    backend = _VersionedBackend()
+    backend.version = 3
+    est = OnlineLikelihoodEstimator(16, width=None)
+    cache = FrequencyAdmissionCache(capacity=8)
+    eng = ServingEngine(backend, cache=cache, estimator=est,
+                        max_wait_ms=0.1)
+    try:
+        q = np.arange(5, dtype=np.float32)
+        eng.search(q, timeout=5.0)            # miss -> engine observes
+        for _ in range(3):
+            eng.search(q, timeout=5.0)        # hits -> observed too
+        deadline = time.time() + 5
+        while est.n_total < 4 and time.time() < deadline:
+            time.sleep(0.01)                  # worker observe is async
+        assert est.n_total == 4, est.n_total
+        assert eng.stats().cache_hits == 3
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+class _StubEstimator:
+    def __init__(self):
+        self.tv = 0.0
+        self.mass = 1e9
+        self.n_total = 10_000
+        self.reference = None
+
+    def drift(self):
+        return {"tv": self.tv, "kl": 0.0, "n_observed": self.mass}
+
+    def likelihood(self):
+        return np.full(8, 1 / 8)
+
+    def set_reference(self, p):
+        self.reference = p
+        self.tv = 0.0
+
+
+class _StubIndex:
+    def __init__(self):
+        self.calls = []
+        self.two_level = object()      # make rebalance="auto" chain it
+
+    def reboost(self, p):
+        self.calls.append("reboost")
+        return {"n_reboosted": 1}
+
+    def rebalance(self):
+        self.calls.append("rebalance")
+        return {"n_drifted": 0}
+
+
+class _StubEngine:
+    def __init__(self):
+        self.published = []
+
+    def apply_updates(self, target):
+        self.published.append(target)
+
+
+def test_scheduler_trigger_chain_and_cooldown():
+    est, idx, eng = _StubEstimator(), _StubIndex(), _StubEngine()
+    sched = MaintenanceScheduler(est, idx, engine=eng, interval_s=None,
+                                 drift_threshold=0.3,
+                                 min_observations=100,
+                                 cooldown_observations=500)
+    assert sched.check_now() is None          # no drift
+    est.tv = 0.9
+    ev = sched.check_now()
+    assert ev is not None and idx.calls == ["reboost", "rebalance"]
+    assert eng.published == [idx]             # republished through engine
+    assert est.reference is not None          # re-anchored
+    est.tv = 0.9
+    assert sched.check_now() is None, "cooldown must debounce"
+    est.n_total += 600                        # fresh traffic arrives
+    assert sched.check_now() is not None
+    assert sched.n_reboosts == 2
+
+
+def test_scheduler_gates_on_observation_mass():
+    est, idx = _StubEstimator(), _StubIndex()
+    est.tv, est.mass = 0.9, 10.0
+    sched = MaintenanceScheduler(est, idx, interval_s=None,
+                                 min_observations=100)
+    assert sched.check_now() is None and idx.calls == []
+
+
+def test_scheduler_background_thread_fires_and_survives_errors():
+    est, idx = _StubEstimator(), _StubIndex()
+    cache = FrequencyAdmissionCache(capacity=4)
+    est.tv = 0.9
+    boom = {"n": 0}
+
+    def on_event(ev):
+        boom["n"] += 1
+        if boom["n"] == 1:
+            raise RuntimeError("observer exploded")
+
+    sched = MaintenanceScheduler(est, idx, cache=cache, interval_s=0.02,
+                                 min_observations=100,
+                                 cooldown_observations=0,
+                                 on_event=on_event)
+    try:
+        deadline = time.time() + 5
+        while boom["n"] < 2 and time.time() < deadline:
+            est.tv = 0.9                      # re-arm after reset
+            time.sleep(0.02)
+        assert boom["n"] >= 2, "thread died after the first error"
+        assert isinstance(sched.last_error, RuntimeError)
+        assert cache.generation >= 1          # engine-less invalidation
+    finally:
+        sched.close()
+    assert not sched._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# reboost acceptance (fig6 at test scale)
+# ---------------------------------------------------------------------------
+
+
+def _drift_corpus(seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(N // 8, D)).astype(np.float32)
+    db = (c[:, None, :] + 0.8 * rng.normal(size=(N // 8, 8, D)))
+    db = db.reshape(-1, D)[:N].astype(np.float32)
+    z = zipf_likelihood(N, 1.1)
+    p0 = np.empty(N)
+    p0[rng.permutation(N)] = z
+    p1 = np.empty(N)
+    p1[rng.permutation(N)] = z
+    return rng, db, p0, p1
+
+
+def test_reboost_recovers_half_the_work_gap_and_is_cheaper():
+    import jax.numpy as jnp
+
+    from repro.core.likelihood import sample_queries
+    from repro.core.metrics import recall_at_k
+    from repro.core.tree import build_qlbt, tree_search
+
+    rng, db, p0, p1 = _drift_corpus(0)
+    stale = build_qlbt(db, p0, seed=1, n_candidates=16, lam=0.2)
+    oracle = build_qlbt(db, p1, seed=1, n_candidates=16, lam=0.2)
+
+    # the adaptive path: estimator observes traffic under p1, reboost
+    # fires from its estimate (not from the true p1)
+    est = OnlineLikelihoodEstimator(N, reference=p0, halflife=1024)
+    for _ in range(8):
+        est.observe(rng.choice(N, 256, p=p1))
+    assert est.drift()["tv"] > 0.3
+    reb = stale.reboost(db, est.likelihood(), seed=2, n_candidates=8,
+                        lam=0.2)
+
+    # entity set preserved exactly, ids unique
+    for t in (stale, reb):
+        flat = t.leaf_entities[t.leaf_entities >= 0]
+        assert flat.size == np.unique(flat).size
+    assert np.array_equal(
+        np.sort(stale.leaf_entities[stale.leaf_entities >= 0]),
+        np.sort(reb.leaf_entities[reb.leaf_entities >= 0]))
+
+    q, gt = sample_queries(rng, db, p1, 1024, noise_scale=0.05)
+    dbj, qj = jnp.asarray(db), jnp.asarray(q)
+
+    def measure(tree):
+        res = tree_search(tree.device_arrays(), dbj, qj, beam_width=4,
+                          k=10, max_steps=tree.max_depth + 4)
+        work = np.asarray(res.internal_visits) + np.asarray(res.candidates)
+        return float(work.mean()), recall_at_k(np.asarray(res.ids), gt)
+
+    w_stale, r_stale = measure(stale)
+    w_reb, r_reb = measure(reb)
+    w_oracle, _ = measure(oracle)
+    gap = w_stale - w_oracle
+    assert gap > 0, f"no stale->oracle gap to recover ({w_stale} vs " \
+                    f"{w_oracle}); workload regression"
+    recovered = (w_stale - w_reb) / gap
+    assert recovered >= 0.5, (
+        f"adaptive recovered {recovered:.2f} of the work gap "
+        f"(stale={w_stale:.1f} reb={w_reb:.1f} oracle={w_oracle:.1f})")
+    assert r_reb >= r_stale - 0.02, (r_reb, r_stale)
+
+
+@pytest.mark.slow
+def test_reboost_measurably_cheaper_than_rebuild_at_scale():
+    """Cost acceptance: reboost rebuilds only the ~log2(M) top levels, so
+    it must beat a from-scratch QLBT build — a scaling property, asserted
+    at a corpus size where per-level entity work dominates the fixed
+    bookkeeping (at toy sizes the build's shallow recursion is too cheap
+    to lose)."""
+    from repro.core.likelihood import zipf_likelihood as _z
+    from repro.core.tree import build_qlbt
+
+    rng = np.random.default_rng(0)
+    n, d = 16384, 64
+    c = rng.normal(size=(n // 8, d)).astype(np.float32)
+    db = (c[:, None, :] + 0.8 * rng.normal(size=(n // 8, 8, d)))
+    db = db.reshape(-1, d)[:n].astype(np.float32)
+    p0 = np.empty(n)
+    p0[rng.permutation(n)] = _z(n, 1.1)
+    p1 = np.empty(n)
+    p1[rng.permutation(n)] = _z(n, 1.1)
+    t0 = time.perf_counter()
+    stale = build_qlbt(db, p0, seed=1, n_candidates=16, lam=0.2)
+    t_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stale.reboost(db, p1, seed=2, n_candidates=8, lam=0.2)
+    t_reboost = time.perf_counter() - t0
+    assert t_reboost < t_build, (
+        f"reboost ({t_reboost:.2f}s) not cheaper than build "
+        f"({t_build:.2f}s)")
+
+
+def test_reboost_never_returns_deleted_and_base_survives_mutation():
+    """Conformance of the reboosted + mutated two-level path: deletes stay
+    invisible through repeated reboosts (the reboost base must track
+    tombstones), adds become findable, bucket invariants hold."""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+
+    rng = np.random.default_rng(4)
+    n0, d, K = 1200, 16, 20
+    c = rng.normal(size=(10, d)) * 4
+
+    def mk(m):
+        return (c[rng.integers(0, 10, m)]
+                + rng.normal(size=(m, d))).astype(np.float32)
+
+    db = mk(n0)
+    p = rng.dirichlet(np.full(n0, 0.5))
+    cfg = TwoLevelConfig(n_clusters=K, top="brute", bottom="qlbt",
+                         kmeans_iters=4, kmeans_minibatch=None, tree_leaf=8)
+    idx = build_two_level(db, cfg, p=p)
+    idx.reboost(rng.dirichlet(np.full(idx.n, 0.5)))   # base_trees created
+    # delete whole buckets' membership (keeps other buckets clean so the
+    # second reboost exercises BOTH paths: fresh rebuild of the dirty
+    # buckets and top-level re-split of the untouched ones)
+    dele = np.nonzero(np.isin(idx.entity_bucket, [0, 1]))[0][:150]
+    idx.delete_entities(dele)                          # after first reboost
+    new_ids = idx.add_entities(mk(40), refresh=False)
+    stats = idx.reboost(rng.dirichlet(np.full(idx.n, 0.5)))
+    assert stats["n_refreshed"] > 0, stats
+    assert stats["n_reboosted"] > 0, stats
+    q = mk(64)
+    _, ids, _ = idx.search(q, 10, nprobe=K, beam_width=16)
+    assert not np.isin(ids, dele).any(), "reboost resurrected deleted ids"
+    le = np.asarray(idx.forest.arrays["leaf_entities"])
+    live = np.nonzero(idx.alive)[0]
+    assert np.array_equal(np.sort(le[le >= 0]), live)
+    _, got, _ = idx.search(idx.db[new_ids][:32], 1, nprobe=K, beam_width=16)
+    assert (np.asarray(got)[:, 0] >= n0).mean() > 0.85
+
+
+def test_search_index_repeated_reboost_from_base_no_erosion():
+    from repro.core.index import build_index
+    from repro.core.protocol import IndexSpec
+
+    rng, db, p0, p1 = _drift_corpus(5)
+    si = build_index(IndexSpec(kind="qlbt"), db, p=p0)
+    probe = si.db[100:164]
+    _, got0, _ = si.search(probe, 1, beam_width=8)
+    acc0 = (np.asarray(got0)[:, 0] == np.arange(100, 164)).mean()
+    for r in range(5):                         # repeated drift cycles
+        pr = np.empty(N)
+        pr[rng.permutation(N)] = zipf_likelihood(N, 1.1)
+        si.reboost(pr, seed=r)
+    assert si.base_tree is not None
+    _, got, _ = si.search(probe, 1, beam_width=8)
+    acc = (np.asarray(got)[:, 0] == np.arange(100, 164)).mean()
+    assert acc >= acc0 - 0.05, (
+        f"repeated reboosts eroded recall {acc0:.3f} -> {acc:.3f}")

@@ -111,3 +111,68 @@ def _conformance_property(case, top, bottom):
         assert abs(r0 - rp) < 0.25, (
             f"{top}/{bottom}: permutation moved recall "
             f"{r0:.3f} -> {rp:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# adaptive paths: the same contract must hold after a reboost and through
+# the serving cache (PR-4 acceptance: results after any reboost or cache
+# invalidation never contain deleted or stale entries)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top", TOP_ALGOS)
+def test_conformance_reboosted(top):
+    """(a)/(b) from the main contract, re-checked on a mutated-then-
+    reboosted qlbt index: unique ids, no deleted ids at partial and full
+    probe, recall still monotone in nprobe."""
+    rng = np.random.default_rng(100 + TOP_ALGOS.index(top))
+    db = _corpus(rng, N)
+    p = rng.dirichlet(np.full(N, 0.5))
+    idx = _build(db, top, "qlbt", p)
+    dele = rng.choice(N, 60, replace=False)
+    idx.delete_entities(dele)
+    idx.reboost(rng.dirichlet(np.full(N, 0.5)))
+    q = _corpus(rng, NQ)
+    live = np.setdiff1d(np.arange(N), dele)
+    _, i_true = brute_search(q, db[live], TOPK)
+    recalls = []
+    for nprobe in (1, 4, K):
+        _, ids = _search_ids(idx, q, nprobe)
+        assert not np.isin(ids, dele).any(), (
+            f"{top}/qlbt reboosted: deleted id returned")
+        for b in range(NQ):
+            real = ids[b][ids[b] >= 0]
+            assert len(set(real.tolist())) == len(real), (
+                f"{top}/qlbt reboosted: duplicate ids")
+        recalls.append(recall_at_k(ids, live[i_true]))
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:])), (
+        f"{top}/qlbt reboosted: recall not monotone: {recalls}")
+
+
+def test_conformance_cached_serving_never_stale():
+    """The cached serving path must track mutations: a result cached
+    before delete+reboost+apply_updates can never resurface."""
+    from repro.adaptive import FrequencyAdmissionCache, HostIndexBackend
+    from repro.serve.engine import ServingEngine
+
+    rng = np.random.default_rng(200)
+    db = _corpus(rng, N)
+    p = rng.dirichlet(np.full(N, 0.5))
+    idx = _build(db, "brute", "qlbt", p)
+    backend = HostIndexBackend(idx, k=5, nprobe=K, beam_width=16)
+    cache = FrequencyAdmissionCache(capacity=64)
+    eng = ServingEngine(backend, cache=cache, max_wait_ms=0.5)
+    try:
+        target = int(rng.integers(0, N))
+        q = db[target].copy()
+        _, ids0 = eng.search(q, timeout=30.0)
+        assert target in ids0
+        _, ids1 = eng.search(q, timeout=30.0)          # served from cache
+        assert eng.stats().cache_hits >= 1
+        idx.delete_entities(np.asarray([target]))
+        idx.reboost(rng.dirichlet(np.full(N, 0.5)))
+        eng.apply_updates(idx)                          # invalidates cache
+        _, ids2 = eng.search(q, timeout=30.0)
+        assert target not in ids2, "cache served a deleted entity"
+    finally:
+        eng.close()
