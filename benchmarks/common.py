@@ -64,21 +64,30 @@ def timed(fn, *args, warmup=1, iters=3, **kw):
     return out, float(np.median(ts))
 
 
-def lat_summary(samples_s) -> dict:
+def lat_summary(samples_s, stats=None) -> dict:
     """p50 AND p99 (plus mean) of a latency sample list, in ms.
 
     Benchmark summaries report the pair so tail effects — e.g. a
     maintenance pass stealing cycles from the serving loop — show up
     next to the median instead of hiding behind it.
+
+    ``stats`` (an ``EngineStats``) additionally merges the republish
+    counters — ``republished_bytes`` and ``delta_fraction`` — so the
+    fig6/fig7 rows and ``docs/tuning.md`` quote the *same* gauges the
+    engine exposes instead of re-deriving them.
     """
     a = np.asarray(list(samples_s), dtype=np.float64) * 1e3
-    if a.size == 0:
-        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
-    return {
-        "p50_ms": float(np.percentile(a, 50)),
-        "p99_ms": float(np.percentile(a, 99)),
-        "mean_ms": float(a.mean()),
-    }
+    out = ({"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+           if a.size == 0 else
+           {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean())})
+    if stats is not None:
+        out["republished_bytes"] = int(
+            getattr(stats, "republished_bytes", 0))
+        out["delta_fraction"] = round(
+            float(getattr(stats, "delta_fraction", 0.0)), 4)
+    return out
 
 
 def csv_row(name: str, us_per_call: float, derived: str):

@@ -235,8 +235,8 @@ def _cache_segment(rng, db, tree, p, n, batch):
                 t0 = time.perf_counter()
                 eng.search(db[qid], timeout=30.0)
                 ts.append(time.perf_counter() - t0)
-            s = lat_summary(ts)
             st = eng.stats()
+            s = lat_summary(ts, stats=st)   # republish gauges ride along
             hit_rate = (st.cache_hits / max(st.cache_hits
                                             + st.cache_misses, 1))
             out[label] = {**s, "hit_rate": round(hit_rate, 3)}

@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-scale corpora (1M SIFT / 10M DEEP)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,table1,fig2d,fig3,sharded,"
-                         "updates,adaptive,roofline")
+                         "updates,adaptive,delta,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -56,6 +56,10 @@ def main() -> None:
         from benchmarks import fig6_adaptive
 
         fig6_adaptive.run(n=20_000 if args.full else 8192)
+    if want("delta"):
+        from benchmarks import fig7_delta
+
+        fig7_delta.run(n=100_000 if args.full else 20_000)
     if want("roofline"):
         from benchmarks import roofline
 

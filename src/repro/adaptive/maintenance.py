@@ -8,8 +8,10 @@ maintenance chain *off* the serving path:
     p_new = estimator.likelihood()
     index.reboost(p_new)          # top-level re-split, subtrees reused
     index.rebalance()             # PR-3 drifted-bucket Lloyd step
-    engine.apply_updates(target)  # republish under the backend's lock
-                                  # (also invalidates the result cache)
+    engine.apply_updates(target)  # republish under the backend's lock:
+                                  # pops the index's delta manifest so
+                                  # only dirty buckets ship (also
+                                  # invalidates the result cache)
     estimator.set_reference(p_new)
 
 The serving loop is never blocked: ``reboost`` builds off to the side
@@ -44,14 +46,26 @@ class HostIndexBackend:
         self.index = index
         self.k = k
         self.search_kw = search_kw
+        self.last_delta = None
 
     def __call__(self, queries):
         idx = self.index           # snapshot: apply_updates swaps the ref
         d, i, _ = idx.search(np.asarray(queries), self.k, **self.search_kw)
         return np.asarray(d), np.asarray(i)
 
-    def apply_updates(self, index, **kw) -> None:
+    def apply_updates(self, index, delta=None, **kw) -> dict:
+        """Swap the served index reference.
+
+        A host-resident index republishes by reference, so a delta
+        manifest costs nothing to "apply" — it is accepted (and recorded
+        as ``last_delta``) so the engine/scheduler delta path works
+        identically against host and sharded backends, and returns the
+        same stats shape (zero bytes: nothing crossed a device boundary).
+        """
         self.index = index
+        self.last_delta = delta
+        return {"mode": "swap", "bytes": 0, "full_bytes": 0,
+                "reason": None}
 
 
 class MaintenanceScheduler:
@@ -158,8 +172,15 @@ class MaintenanceScheduler:
         rebalance_stats = None
         if self.rebalance and hasattr(self.index, "rebalance"):
             rebalance_stats = self.index.rebalance()
+        republish = None
         if self.engine is not None:
-            self.engine.apply_updates(self.publish_target(self.index))
+            # the engine pops the target's delta manifest (delta="auto")
+            # and the backend ships only the dirty slices — a reboost
+            # that re-split every bucket degenerates to a full re-place
+            # via the backend's size threshold, a localized rebalance
+            # ships a handful of bucket slabs
+            republish = self.engine.apply_updates(
+                self.publish_target(self.index))
         elif self.cache is not None:
             self.cache.invalidate_all()
         # re-anchor on the RAW estimate (what drift() compares against);
@@ -173,6 +194,7 @@ class MaintenanceScheduler:
             "drift": drift,
             "reboost": reboost_stats,
             "rebalance": rebalance_stats,
+            "republish": republish,
             "duration_s": time.perf_counter() - t0,
             "t": time.time(),
         }

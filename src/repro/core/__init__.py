@@ -1,6 +1,7 @@
 # The paper's primary contribution: QLBT (tree.py), two-level approximate
 # search (two_level.py), the §5.3 configuration protocol (protocol.py), and
 # the mesh-sharded datacenter extension (distributed.py).
+from repro.core.delta import DeltaManifest
 from repro.core.index import SearchIndex, auto_build_index, build_index
 from repro.core.likelihood import (
     beta_for_unbalance,
@@ -12,6 +13,7 @@ from repro.core.tree import build_kd_tree, build_qlbt, build_rp_tree, tree_searc
 from repro.core.two_level import TwoLevelConfig, TwoLevelIndex, build_two_level
 
 __all__ = [
+    "DeltaManifest",
     "SearchIndex", "auto_build_index", "build_index",
     "beta_for_unbalance", "simulate_beta_likelihood", "unbalance_score",
     "IndexSpec", "select_index_spec",

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tree as tree_mod
+from repro.core.delta import DeltaLog, DeltaManifest
 from repro.core.protocol import IndexSpec, select_index_spec
 from repro.core.tree import FlatTree, build_qlbt, build_rp_tree
 from repro.core.two_level import TwoLevelIndex, build_two_level
@@ -31,6 +32,10 @@ class SearchIndex:
     # previous reboost — chained incremental re-splits compound the float
     # relocations until recall erodes
     base_tree: Optional[FlatTree] = None
+    # ---- delta shipping (single-tree path; two-level delegates) ----
+    mutation_version: int = 0
+    delta_log: Optional[DeltaLog] = dataclasses.field(
+        default=None, repr=False)
 
     def search(
         self,
@@ -91,6 +96,27 @@ class SearchIndex:
     def _ensure_alive(self) -> None:
         if self.alive is None:
             self.alive = np.ones(self.db.shape[0], dtype=bool)
+        if self.delta_log is None:
+            self.delta_log = DeltaLog(
+                base_version=self.mutation_version,
+                base_n=int(self.db.shape[0]))
+
+    def pop_delta(self) -> DeltaManifest:
+        """Emit (and reset) the mutation record since the last pop.
+
+        Two-level indexes delegate to
+        :meth:`repro.core.two_level.TwoLevelIndex.pop_delta` (bucket-
+        granular).  A single tree has no bucket structure to slice, so
+        only tombstone-deletes are expressible as a delta (masked leaf
+        rows + liveness flips); any structural change — add (whole-tree
+        rebuild at this scale), rebalance, reboost — marks the manifest
+        ``full``.
+        """
+        if self.two_level is not None:
+            return self.two_level.pop_delta()
+        self._ensure_alive()
+        return self.delta_log.pop(self.mutation_version,
+                                  int(self.db.shape[0]))
 
     def add_entities(self, new_vecs: np.ndarray, **kw) -> np.ndarray:
         """Insert new entities; returns their global ids.
@@ -117,6 +143,8 @@ class SearchIndex:
                 p_new = np.full(ids.size, float(np.mean(self.p)))
             self.p = np.concatenate([self.p, np.asarray(p_new)])
         self._tree_rebuild()
+        self.delta_log.mark_full()      # whole-tree rebuild, no delta
+        self.mutation_version += 1
         return ids
 
     def delete_entities(self, ids: np.ndarray) -> None:
@@ -128,7 +156,10 @@ class SearchIndex:
         self._ensure_alive()
         ids = np.asarray(ids)
         self.alive[ids] = False
-        self.tree.drop_entities(ids)
+        rows = self.tree.drop_entities(ids)
+        self.delta_log.mark_leaf_rows(rows)
+        self.delta_log.mark_tombstones(ids)
+        self.mutation_version += 1
         if self.base_tree is not None and self.base_tree is not self.tree:
             # keep the reboost base in sync — a later reboost from a base
             # still holding the id would resurrect a deleted entity
@@ -141,6 +172,8 @@ class SearchIndex:
             return self.two_level.rebalance(**kw)
         self._ensure_alive()
         self._tree_rebuild()
+        self.delta_log.mark_full()
+        self.mutation_version += 1
         return {"n_rebuilt_buckets": 1, "n_moved": 0,
                 "n_drifted": 0, "max_drift": 0.0}
 
@@ -169,6 +202,8 @@ class SearchIndex:
         if self.base_tree is None:
             self.base_tree = self.tree
         self.tree = self.base_tree.reboost(self.db, p_eff, **kw)
+        self.delta_log.mark_full()      # node table re-split wholesale
+        self.mutation_version += 1
         return {"n_reboosted": 1, "n_refreshed": 0}
 
     def rebuild_with_likelihood(self, p: np.ndarray, *, seed: int = 0):
@@ -179,8 +214,11 @@ class SearchIndex:
         two-level indexes (their buckets don't depend on p)."""
         if self.spec.kind not in ("qlbt", "tree"):
             return self
+        self._ensure_alive()
         self.tree = build_qlbt(self.db, p, seed=seed)
         self.base_tree = None          # fresh build is the new reboost base
+        self.delta_log.mark_full()
+        self.mutation_version += 1
         self.spec = dataclasses.replace(self.spec, kind="qlbt")
         return self
 

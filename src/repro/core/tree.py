@@ -531,7 +531,7 @@ class FlatTree:
             entity_depth=entity_depth,
         )
 
-    def drop_entities(self, ids: np.ndarray) -> int:
+    def drop_entities(self, ids: np.ndarray) -> np.ndarray:
         """Tombstone-delete: blank the leaf slots holding ``ids`` in place.
 
         The split structure is untouched (it becomes stale, not wrong): a
@@ -539,14 +539,17 @@ class FlatTree:
         but the dropped ids can never be returned.  This is the cheap half
         of the mutation model — rebuild (``build_qlbt``/``build_rp_tree``)
         when enough mass has been dropped that depth quality matters.
-        Returns the number of slots blanked.
+        Returns the leaf-table rows that were masked, recorded into
+        ``repro.core.delta.DeltaManifest.leaf_rows`` (manifest metadata;
+        host-resident serving republishes by reference, so no consumer
+        ships these rows yet).
         """
         ids = np.asarray(ids)
         if ids.size == 0 or self.leaf_entities.size == 0:
-            return 0
+            return np.zeros(0, dtype=np.int64)
         mask = np.isin(self.leaf_entities, ids) & (self.leaf_entities >= 0)
         self.leaf_entities[mask] = -1
-        return int(mask.sum())
+        return np.unique(np.nonzero(mask)[0]).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------

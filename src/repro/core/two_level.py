@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import tree as tree_mod
 from repro.core.brute import batched_l2sq, l2_topk_exact, pairwise_l2sq
+from repro.core.delta import DeltaLog, DeltaManifest
 from repro.core.kmeans import kmeans_fit
 from repro.core.lsh import LSHIndex, hamming_scores, lsh_build, pack_bits
 from repro.core.pq import ProductQuantizer, adc_lut, adc_scores, pq_train
@@ -112,6 +113,10 @@ class TwoLevelIndex:
     # never from a previous reboost (chained incremental re-splits compound
     # float relocations until recall erodes).  None until the first reboost.
     base_trees: Optional[list] = None
+    # ---- delta shipping (see repro.core.delta) ----
+    mutation_version: int = 0                   # bumped per mutation batch
+    delta_log: Optional[DeltaLog] = dataclasses.field(
+        default=None, repr=False)
 
     # ---------------- construction helpers ----------------
     @property
@@ -142,6 +147,26 @@ class TwoLevelIndex:
             rr, cc = np.nonzero(self.bucket_ids >= 0)
             eb[self.bucket_ids[rr, cc]] = rr
             self.entity_bucket = eb
+        if self.delta_log is None:
+            # created BEFORE the first mutation touches any state, so
+            # base_n/base_version name the last published snapshot
+            self.delta_log = DeltaLog(
+                base_version=self.mutation_version, base_n=self.n)
+
+    def pop_delta(self) -> DeltaManifest:
+        """Emit (and reset) the record of everything mutated since the
+        last pop — the input to
+        ``ShardedSearchBackend.apply_updates(target, delta=...)``.
+
+        The manifest is metadata only; payload bytes are sliced from the
+        index's *current* state at apply time, which is what makes
+        applying a stale-but-superset manifest safe (see
+        :mod:`repro.core.delta`).  ``ServingEngine.apply_updates`` pops
+        once per republish and feeds the same manifest to the primary and
+        the hedge replica so both track the same version chain.
+        """
+        self._ensure_mutable()
+        return self.delta_log.pop(self.mutation_version, self.n)
 
     def _place(self, feat_rows: np.ndarray, gids: np.ndarray) -> None:
         """Route rows into buckets: nearest centroid with a free slot,
@@ -169,6 +194,7 @@ class TwoLevelIndex:
             counts[b] += 1
             self.entity_bucket[gids[j]] = b
             self.dirty[b] = True
+            self.delta_log.mark_buckets(b)
         self.bucket_counts = counts.astype(np.int32)
 
     def add_entities(
@@ -239,6 +265,8 @@ class TwoLevelIndex:
             bits = (new_vecs @ self.bottom_lsh.proj > 0).astype(np.uint8)
             self.bottom_lsh.codes = np.concatenate(
                 [self.bottom_lsh.codes, pack_bits(bits)], axis=0)
+            self.delta_log.lsh_rows += m
+        self.mutation_version += 1
         if self.forest is not None and refresh:
             self.refresh_forest()
         return ids
@@ -264,9 +292,12 @@ class TwoLevelIndex:
             row[last] = -1
             self.bucket_counts[b] = last
             self.dirty[b] = True
+            self.delta_log.mark_buckets(b)
         self.alive[ids] = False
         self.entity_bucket[ids] = -1
+        self.delta_log.mark_tombstones(ids)
         self.n_deletes += ids.size
+        self.mutation_version += 1
         if self.forest is not None:
             # mask in the live device arrays AND the per-bucket segments so
             # a later partial refresh can't resurrect a deleted id
@@ -300,7 +331,9 @@ class TwoLevelIndex:
                 self.db, ids.astype(np.int64), self.config, self.p, int(b))
             if self.base_trees is not None:
                 self.base_trees[b] = self.forest.trees[b]
+            self.delta_log.mark_buckets(b)
             rebuilt += 1
+        self.mutation_version += 1
         self.dirty[:] = False
         # publish with a single reference swap (like reboost): a reader
         # snapshotting self.forest must never see new roots with old
@@ -365,6 +398,7 @@ class TwoLevelIndex:
                 self.bucket_counts[b] = 0
                 self.entity_bucket[ids] = -1
                 self.dirty[b] = True
+                self.delta_log.mark_buckets(b)
             moved = np.concatenate(moved_ids) if moved_ids else \
                 np.zeros(0, np.int64)
             if moved.size:
@@ -379,6 +413,7 @@ class TwoLevelIndex:
         n_rebuilt = self.refresh_forest()
         self.n_adds = 0
         self.n_deletes = 0
+        self.mutation_version += 1
         return {
             "n_drifted": len(drifted),
             "n_moved": int(sum(x.size for x in moved_ids)),
@@ -417,6 +452,7 @@ class TwoLevelIndex:
                 f"p has {p.shape[0]} entries for {self.n} entities")
         self.p = p
         if self.forest is None or self.forest.trees is None:
+            self.mutation_version += 1
             return {"n_reboosted": 0, "n_refreshed": 0}
         cfg = self.config
         p_eff = np.where(self.alive, p, 0.0)
@@ -429,6 +465,10 @@ class TwoLevelIndex:
             ids = ids[ids >= 0]
             self.base_trees[b] = _bucket_tree(
                 self.db, ids.astype(np.int64), cfg, self.p, int(b))
+            # self.dirty may predate the last pop_delta (deferred
+            # refresh): the rebuilt tree must re-enter the CURRENT log
+            # or the next delta ships a stale slab for this bucket
+            self.delta_log.mark_buckets(b)
             refreshed.add(int(b))
             n_ref += 1
         n_re = 0
@@ -446,9 +486,11 @@ class TwoLevelIndex:
                 lam=cfg.qlbt_lambda,
                 max_move=max_move,
                 seed=cfg.seed + b)
+            self.delta_log.mark_buckets(b)
             n_re += 1
         self.forest = _concat_forest(trees)   # atomic swap for readers
         self.dirty[:] = False
+        self.mutation_version += 1
         return {"n_reboosted": n_re, "n_refreshed": n_ref}
 
     def footprint_bytes(self, include_db: bool = True) -> int:

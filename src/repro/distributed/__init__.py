@@ -24,6 +24,8 @@ from repro.distributed.sharding import (
     sharded_brute_search,
     sharded_forest_search,
     sharded_ivf_search,
+    slice_forest_delta,
+    slice_ivf_delta,
 )
 
 __all__ = [
@@ -31,5 +33,6 @@ __all__ = [
     "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
     "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
     "shard_forest", "forest_shard_shapes", "ForestShardShapes",
+    "slice_forest_delta", "slice_ivf_delta",
     "ShardedSearchBackend",
 ]

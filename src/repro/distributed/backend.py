@@ -21,12 +21,33 @@ backend (a cold, re-jitting path — the thing this class exists to avoid
 on the common path).  Placement is serialized against in-flight searches
 with a lock, so the engine worker thread never sees a half-swapped
 argument tuple.
+
+Delta shipping: ``apply_updates(target, delta=manifest)`` (manifest from
+``target.pop_delta()``, see :mod:`repro.core.delta`) re-places only what
+the manifest names — appended corpus rows for the brute kind, dirty
+bucket rows for IVF, dirty bucket *slabs* for the forest kind (whose
+device layout reserves a fixed node/leaf slab per bucket when
+``delta_updates=True``).  The update is applied **in place on device** by
+a jitted fixed-shape scatter (`.at[rows].set(..., mode="drop")`, i.e.
+``dynamic_update_slice`` under the hood; buffers are donated off-CPU), so
+a maintenance pass that touched a handful of buckets ships a handful of
+slabs instead of the corpus.  The backend falls back to a full re-place
+— never an error — when the manifest can't prove coverage
+(``base_version`` ahead of the backend's placed version), marks itself
+``full``, or when the payload exceeds ``delta_max_fraction`` of the full
+re-place bytes (past that point one bulk transfer beats many scatters).
+Every apply returns a stats dict (``mode``/``bytes``/``full_bytes``/
+``reason``) and feeds the cumulative ``republished_bytes`` counters that
+``ServingEngine.stats()`` surfaces.
 """
 from __future__ import annotations
 
 import threading
+from functools import partial
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -42,9 +63,29 @@ from repro.distributed.sharding import (
     make_sharded_brute_fn,
     make_sharded_forest_fn,
     make_sharded_ivf_fn,
+    slice_forest_delta,
+    slice_ivf_delta,
 )
 
 __all__ = ["ShardedSearchBackend"]
+
+# device-array order of the forest argument tuple (matches the jitted
+# search signature minus the trailing queries)
+_FOREST_ARGS = ("cents", "valid", "roots", "bucket_ids", "bvecs",
+                "proj", "dims", "tau", "children", "leaf_row",
+                "leaf_entities")
+
+
+def _pow2(n: int) -> int:
+    return max(1, 1 << (max(n, 1) - 1).bit_length())
+
+
+def _pad_rows(a: np.ndarray, u: int, fill=0) -> np.ndarray:
+    """Pad the leading dim of ``a`` to ``u`` with ``fill``."""
+    if a.shape[0] == u:
+        return a
+    pad = np.full((u - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad], axis=0)
 
 
 class ShardedSearchBackend:
@@ -53,19 +94,38 @@ class ShardedSearchBackend:
     ``target`` is either a raw ``(N, d)`` corpus (exact sharded scan) or a
     built ``TwoLevelIndex`` (IVF for a brute bottom, forest descent for a
     tree/qlbt bottom).  ``kind="auto"`` picks accordingly.
+
+    ``delta_updates`` (forest kind) lays the forest out in per-bucket
+    slabs so dirty buckets can be delta-shipped; it pads every bucket to
+    the largest per-bucket tree, trading device memory for republish
+    bandwidth.  ``delta_max_fraction`` is the payload-size cutoff past
+    which a delta falls back to one bulk re-place.
     """
 
     def __init__(self, mesh, target, *, kind: str = "auto", k: int = 10,
                  axes=("data", "model"), query_axes=(),
                  nprobe_local: int = 2, beam_width: int = 8,
-                 headroom: float = 1.0, alive=None):
+                 headroom: float = 1.0, alive=None,
+                 delta_updates: bool = True,
+                 delta_max_fraction: float = 0.5):
         self.mesh = mesh
         self.k = k
         self.axes = tuple(axes)
         self.query_axes = tuple(query_axes)
         self.headroom = headroom
         self.n_dev = _axes_size(mesh, self.axes)
+        self.delta_updates = delta_updates
+        self.delta_max_fraction = delta_max_fraction
         self._lock = threading.Lock()
+        self._delta_fn = None
+        self._version: Optional[int] = None
+        self._n = 0                      # real corpus rows last placed
+        self._full_bytes = 0             # host bytes of a full re-place
+        self.republished_bytes = 0       # cumulative bytes shipped by applies
+        self.republish_full_bytes = 0    # what full re-places would have cost
+        self.n_delta_applies = 0
+        self.n_full_applies = 0
+        self.last_republish: Optional[dict] = None
 
         if kind == "auto":
             if isinstance(target, np.ndarray) or not hasattr(
@@ -86,11 +146,14 @@ class ShardedSearchBackend:
             self._K = int(target.bucket_ids.shape[0])
             self._cap = int(np.ceil(target.bucket_ids.shape[1] * headroom))
             Kp = -(-self._K // self.n_dev) * self.n_dev
+            self._Kp = Kp
             self._fn = jax.jit(make_sharded_ivf_fn(
                 mesh, self.axes, k, nprobe_local, Kp // self.n_dev,
                 self._K, self.query_axes))
         elif kind == "forest":
-            self._shapes = forest_shard_shapes(target, self.n_dev, headroom)
+            self._shapes = forest_shard_shapes(
+                target, self.n_dev, headroom,
+                layout="slab" if delta_updates else "packed")
             self._fn = jax.jit(make_sharded_forest_fn(
                 mesh, self.axes, k, nprobe_local, beam_width,
                 self._shapes.leaf_sz, self._shapes.max_depth,
@@ -100,14 +163,21 @@ class ShardedSearchBackend:
         self._place(target, alive=alive)
 
     # ------------------------------------------------------------------
+    def _corpus_spec(self, ndim: int) -> NamedSharding:
+        return NamedSharding(
+            self.mesh, P(self.axes, *([None] * (ndim - 1))))
+
     def _place(self, target, alive=None) -> None:
         """Pad/shard/device_put ``target`` into the recorded shapes."""
         put = lambda x, spec: jax.device_put(
             x, NamedSharding(self.mesh, spec))
         if self.kind == "brute":
-            dbp, valid, _, _ = _brute_device_arrays(
+            dbp, valid, _, n = _brute_device_arrays(
                 np.asarray(target, np.float32), self.n_dev,
                 rows=self._rows, alive=alive)
+            self._full_bytes = int(np.asarray(dbp).nbytes
+                                   + np.asarray(valid).nbytes)
+            self._n = n
             self._args = (put(dbp, P(self.axes, None)),
                           put(valid, P(self.axes)))
         elif self.kind == "ivf":
@@ -117,6 +187,9 @@ class ShardedSearchBackend:
                     f"!= {self._K}); rebuild the backend")
             cents, bids, bvecs, _ = _ivf_device_arrays(
                 target, self.n_dev, cap=self._cap)
+            self._full_bytes = sum(int(np.asarray(a).nbytes)
+                                   for a in (cents, bids, bvecs))
+            self._n = int(target.db.shape[0])
             self._args = (
                 put(cents, P(self.axes, None)),
                 put(bids, P(self.axes, None)),
@@ -126,24 +199,245 @@ class ShardedSearchBackend:
             dev, _ = _forest_device_arrays(
                 self.mesh, target, self.axes, self.n_dev,
                 shapes=self._shapes)
-            self._args = (dev["cents"], dev["valid"], dev["roots"],
-                          dev["bucket_ids"], dev["bvecs"],
-                          dev["proj"], dev["dims"], dev["tau"],
-                          dev["children"], dev["leaf_row"],
-                          dev["leaf_entities"])
+            self._full_bytes = sum(int(dev[n].nbytes) for n in _FOREST_ARGS)
+            self._n = int(target.db.shape[0])
+            self._args = tuple(dev[name] for name in _FOREST_ARGS)
+        self._version = getattr(target, "mutation_version", None)
 
-    def apply_updates(self, target, alive=None) -> None:
+    # ------------------------------------------------------------------
+    # delta apply: jitted fixed-shape in-place scatters
+    # ------------------------------------------------------------------
+    def _make_delta_fn(self):
+        """Build the jitted in-place scatter for this backend's kind.
+
+        Fixed shapes: the payload's leading (update-count) dim is padded
+        to a power of two with out-of-bounds indices, which
+        ``mode="drop"`` discards — so the kernel compiles once per pow2
+        bucket, never per mutation.  Buffers are donated off-CPU so the
+        update really is in place; the CPU backend doesn't support
+        donation, so there we let XLA copy.
+        """
+        donate_ok = jax.default_backend() != "cpu"
+        if self.kind == "brute":
+            spec = self._corpus_spec(2)
+
+            @partial(jax.jit, donate_argnums=(0,) if donate_ok else (),
+                     out_shardings=spec)
+            def fn(db, rows, vals):
+                return db.at[rows].set(vals, mode="drop")
+
+            return fn
+        if self.kind == "ivf":
+            specs = tuple(self._corpus_spec(nd) for nd in (2, 2, 3))
+
+            @partial(jax.jit,
+                     donate_argnums=(0, 1, 2) if donate_ok else (),
+                     out_shardings=specs)
+            def fn(cents, bids, bvecs, rows, uc, ub, uv):
+                cents = cents.at[rows].set(uc, mode="drop")
+                bids = bids.at[rows].set(ub, mode="drop")
+                bvecs = bvecs.at[rows].set(uv, mode="drop")
+                return cents, bids, bvecs
+
+            return fn
+        # forest: scatter whole per-bucket slabs into the 11 tables
+        ns, ls = self._shapes.node_slab, self._shapes.leaf_slab
+        ndims = (3, 2, 2, 3, 4, 3, 2, 2, 3, 2, 3)   # _FOREST_ARGS dims
+        specs = tuple(self._corpus_spec(nd) for nd in ndims)
+
+        @partial(jax.jit,
+                 donate_argnums=tuple(range(11)) if donate_ok else (),
+                 out_shardings=specs)
+        def fn(cents, valid, roots, bids, bvecs, proj, dims, tau,
+               children, leaf_row, leaf_ents, shard, slot,
+               u_cents, u_valid, u_roots, u_bids, u_bvecs, u_proj,
+               u_dims, u_tau, u_children, u_leaf_row, u_leaf_ents):
+            sh1 = shard[:, None]
+            nrow = slot[:, None] * ns + jnp.arange(ns)[None, :]
+            lrow = slot[:, None] * ls + jnp.arange(ls)[None, :]
+            cents = cents.at[shard, slot].set(u_cents, mode="drop")
+            valid = valid.at[shard, slot].set(u_valid, mode="drop")
+            roots = roots.at[shard, slot].set(u_roots, mode="drop")
+            bids = bids.at[shard, slot].set(u_bids, mode="drop")
+            bvecs = bvecs.at[shard, slot].set(u_bvecs, mode="drop")
+            proj = proj.at[sh1, nrow].set(u_proj, mode="drop")
+            dims = dims.at[sh1, nrow].set(u_dims, mode="drop")
+            tau = tau.at[sh1, nrow].set(u_tau, mode="drop")
+            children = children.at[sh1, nrow].set(u_children, mode="drop")
+            leaf_row = leaf_row.at[sh1, nrow].set(u_leaf_row, mode="drop")
+            leaf_ents = leaf_ents.at[sh1, lrow].set(u_leaf_ents,
+                                                    mode="drop")
+            return (cents, valid, roots, bids, bvecs, proj, dims, tau,
+                    children, leaf_row, leaf_ents)
+
+        return fn
+
+    def _bucket_payload_bytes(self) -> int:
+        """Exact per-dirty-bucket payload size — computable up front
+        because every slab/row shape is fixed, so an over-threshold
+        manifest is rejected *before* paying the host-side slicing."""
+        if self.kind == "ivf":
+            d = int(np.asarray(self._args[0]).shape[1])
+            return 4 * (d + self._cap + self._cap * d + 1)
+        sh = self._shapes
+        d = int(np.asarray(self._args[0]).shape[2])
+        ns, ls = sh.node_slab, sh.leaf_slab
+        return (4 * (ns * d + ns + ns + ns * 2 + ns      # node tables
+                     + ls * sh.leaf_sz                   # leaf slab
+                     + 1 + d + sh.cap + sh.cap * d       # bucket row
+                     + 2)                                # shard/slot
+                + 1)                                     # valid flag
+
+    def _delta_payload(self, target, alive, delta):
+        """Host-side payload for the manifest, or (None, reason) when the
+        delta path can't cover this update."""
+        if self.kind == "brute":
+            if delta.dirty_buckets.size:
+                return None, "bucket-delta-on-flat-corpus"
+            if delta.base_n > self._n:
+                return None, "version"
+            if (self._version is not None
+                    and delta.base_version > self._version):
+                # a raw-corpus backend has no index version at
+                # construction, but once a manifest chain starts a gap
+                # in it means missed tombstones — full re-place
+                return None, "version"
+            db = np.asarray(target, np.float32)
+            n = db.shape[0]
+            if n > self._rows * self.n_dev:
+                return None, "outgrew"        # full place raises loudly
+            rows_tot = self._rows * self.n_dev
+            new = np.arange(delta.base_n, n, dtype=np.int32)
+            vals = db[delta.base_n:n]
+            if alive is not None:
+                # caller supplied the complete liveness truth
+                valid = np.arange(rows_tot) < n
+                valid[:n] &= np.asarray(alive, bool)
+            else:
+                # cumulative liveness: start from the mask on device so
+                # tombstones from EARLIER delta windows survive this
+                # one; rows appended in this window start alive
+                valid = np.asarray(jax.device_get(self._args[1])).copy()
+                valid[delta.base_n:n] = True
+            if delta.tombstones.size:
+                # this window's flips apply either way — a tombstoned
+                # row must never be resurrected by a delta republish
+                valid[delta.tombstones] = False
+            u = _pow2(new.size)
+            return {
+                "rows": _pad_rows(new, u, fill=rows_tot),
+                "vals": _pad_rows(vals, u),
+                "valid": valid,
+                "n": n,
+                "bytes": int(vals.nbytes + new.nbytes + valid.nbytes),
+            }, None
+        if self._version is None or delta.base_version > self._version:
+            return None, "version"
+        if self.kind == "ivf":
+            if int(target.bucket_ids.shape[0]) != self._K:
+                return None, "outgrew"
+            pay = slice_ivf_delta(target, self._cap, delta.dirty_buckets)
+            pay["bytes"] = sum(int(v.nbytes) for v in pay.values())
+            pay["n"] = int(target.db.shape[0])
+            u = _pow2(pay["rows"].shape[0])
+            pay["rows"] = _pad_rows(pay["rows"], u, fill=self._Kp)
+            for name in ("cents", "bucket_ids", "bvecs"):
+                pay[name] = _pad_rows(pay[name], u)
+            return pay, None
+        # forest
+        if not self.delta_updates:
+            return None, "packed-layout"
+        pay = slice_forest_delta(target, self._shapes, delta.dirty_buckets)
+        pay["bytes"] = sum(int(np.asarray(v).nbytes) for v in pay.values())
+        pay["n"] = int(target.db.shape[0])
+        u = _pow2(pay["shard"].shape[0])
+        pay["shard"] = _pad_rows(pay["shard"], u, fill=self.n_dev)  # OOB
+        pay["slot"] = _pad_rows(pay["slot"], u)
+        for name in _FOREST_ARGS:
+            pay[name] = _pad_rows(np.asarray(pay[name]), u)
+        return pay, None
+
+    def _apply_delta(self, pay) -> None:
+        if self._delta_fn is None:
+            self._delta_fn = self._make_delta_fn()
+        if self.kind == "brute":
+            db = self._delta_fn(self._args[0], pay["rows"], pay["vals"])
+            valid = jax.device_put(
+                pay["valid"], NamedSharding(self.mesh, P(self.axes)))
+            self._args = (db, valid)
+        elif self.kind == "ivf":
+            self._args = self._delta_fn(
+                *self._args, pay["rows"], pay["cents"],
+                pay["bucket_ids"], pay["bvecs"])
+        else:
+            self._args = self._delta_fn(
+                *self._args, pay["shard"], pay["slot"],
+                *(pay[name] for name in _FOREST_ARGS))
+        self._n = pay["n"]
+
+    # ------------------------------------------------------------------
+    def apply_updates(self, target, alive=None, delta=None) -> dict:
         """Serve a mutated corpus/index through the already-jitted search.
 
-        Re-pads and re-places the device arrays into the shapes recorded
-        at construction; raises ``ValueError`` when the mutation outgrew
-        the reservation (rebuild the backend with more ``headroom``).
-        The jitted callable is untouched, so queries issued after this
-        call hit the existing compile cache — no re-jit, no cold batch.
+        With ``delta`` (a :class:`repro.core.delta.DeltaManifest`, e.g.
+        from ``target.pop_delta()``): scatter only the manifest's dirty
+        slices into the live device arrays — no full corpus transfer, no
+        re-jit — falling back to a full re-place whenever the manifest
+        cannot prove coverage or the payload is no cheaper than bulk.
+        Without ``delta``: re-pad and re-place everything into the shapes
+        recorded at construction.  Either way, raises ``ValueError`` when
+        the mutation outgrew the reservation (rebuild the backend with
+        more ``headroom``), the jitted search callable is untouched, and
+        queries issued after this call hit the existing compile cache.
         ``alive`` (brute kind only) marks tombstoned corpus rows.
+
+        Returns ``{"mode", "bytes", "full_bytes", "reason"}`` — ``mode``
+        is ``"delta"``, ``"full"``, or ``"noop"``; ``bytes`` is what was
+        actually shipped; ``full_bytes`` is what a full re-place ships.
         """
         with self._lock:
-            self._place(target, alive=alive)
+            stats = self._apply_locked(target, alive, delta)
+        self.last_republish = stats
+        self.republished_bytes += stats["bytes"]
+        self.republish_full_bytes += stats["full_bytes"]
+        if stats["mode"] == "delta":
+            self.n_delta_applies += 1
+        elif stats["mode"] == "full":
+            self.n_full_applies += 1
+        return stats
+
+    def _apply_locked(self, target, alive, delta) -> dict:
+        reason = None
+        if delta is None:
+            reason = "no-manifest"
+        elif delta.full:
+            reason = "manifest-full"
+        else:
+            covered = (self._version is not None
+                       and delta.base_version <= self._version)
+            if delta.empty and (covered or self.kind == "brute"):
+                self._version = delta.version
+                return {"mode": "noop", "bytes": 0,
+                        "full_bytes": self._full_bytes, "reason": None}
+            if (self.kind in ("ivf", "forest") and self.delta_updates
+                    and delta.dirty_buckets.size * self._bucket_payload_bytes()
+                    > self.delta_max_fraction * self._full_bytes):
+                # fixed shapes make the payload size exact up front —
+                # don't pay the slicing for a delta that can't win
+                reason = "threshold"
+            else:
+                pay, reason = self._delta_payload(target, alive, delta)
+            if reason is None:
+                if pay["bytes"] > self.delta_max_fraction * self._full_bytes:
+                    reason = "threshold"
+                else:
+                    self._apply_delta(pay)
+                    self._version = delta.version
+                    return {"mode": "delta", "bytes": pay["bytes"],
+                            "full_bytes": self._full_bytes, "reason": None}
+        self._place(target, alive=alive)
+        return {"mode": "full", "bytes": self._full_bytes,
+                "full_bytes": self._full_bytes, "reason": reason}
 
     def jit_cache_size(self) -> int:
         """Compiled-variant count of the underlying search (test hook)."""

@@ -64,6 +64,7 @@ __all__ = [
     "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
     "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
     "shard_forest", "forest_shard_shapes", "ForestShardShapes",
+    "slice_forest_delta", "slice_ivf_delta",
 ]
 
 
@@ -393,6 +394,18 @@ class ForestShardShapes:
     re-applied by :meth:`ShardedSearchBackend.apply_updates`: a mutated
     index re-slices into the *same* shapes, so the jitted shard_map search
     keeps its compile cache across the whole index lifecycle.
+
+    Two layouts share this record:
+
+    * **packed** (``node_slab == 0``): each shard's buckets are packed
+      back-to-back, minimal padding — the host entry points' layout.
+    * **slab** (``node_slab > 0``): every bucket owns a fixed
+      ``node_slab``-row node window and ``leaf_slab``-row leaf window at
+      ``slot * slab``, so one bucket's rebuilt tree overwrites only its
+      own slabs.  This is what makes *delta shipping* possible — a dirty
+      bucket is a fixed-shape payload scattered in place on device — at
+      the cost of padding every bucket to the largest tree
+      (``nodes == kloc * node_slab``).
     """
     n_dev: int
     kloc: int       # buckets per shard
@@ -401,6 +414,8 @@ class ForestShardShapes:
     leaves: int     # leaf-table rows per shard
     leaf_sz: int    # leaf width (entities per leaf row)
     max_depth: int  # bound on descent steps
+    node_slab: int = 0   # slab layout: node rows reserved per bucket
+    leaf_slab: int = 0   # slab layout: leaf rows reserved per bucket
 
 
 def _forest_slices(index, n_dev: int):
@@ -433,19 +448,66 @@ def _forest_slices(index, n_dev: int):
     return slices, Kloc
 
 
-def forest_shard_shapes(index, n_dev: int,
-                        headroom: float = 1.0) -> ForestShardShapes:
+def _bucket_windows(index):
+    """Per-bucket (N0, N1, L0, L1) node/leaf windows in the concatenated
+    forest (bucket ``b`` owns nodes ``[roots[b], roots[b+1])`` and the
+    contiguous leaf rows its own tree contributed)."""
+    f = index.forest
+    if f is None:
+        raise ValueError("index has no forest (bottom must be tree/qlbt)")
+    K = index.bucket_ids.shape[0]
+    leaf_row = np.asarray(f.arrays["leaf_row"])
+    roots = np.asarray(f.roots, dtype=np.int64)
+    bounds = np.concatenate([roots, [leaf_row.shape[0]]])
+    windows = []
+    for b in range(K):
+        N0, N1 = int(bounds[b]), int(bounds[b + 1])
+        lr = leaf_row[N0:N1]
+        rows = lr[lr >= 0]
+        L0 = int(rows.min()) if rows.size else 0
+        L1 = int(rows.max()) + 1 if rows.size else 0
+        if rows.size not in (0, L1 - L0):
+            raise ValueError(
+                f"bucket {b}: leaf rows not contiguous; "
+                "_build_forest concatenation order changed?")
+        windows.append((N0, N1, L0, L1))
+    return windows
+
+
+def forest_shard_shapes(index, n_dev: int, headroom: float = 1.0,
+                        layout: str = "packed") -> ForestShardShapes:
     """Measure the natural per-shard shapes; ``headroom`` > 1 reserves
     room for post-mutation growth (bigger buckets after adds, deeper or
-    wider trees after dirty-bucket rebuilds)."""
-    slices, Kloc = _forest_slices(index, n_dev)
+    wider trees after dirty-bucket rebuilds).
+
+    ``layout="slab"`` reserves a fixed node/leaf slab *per bucket*
+    (``headroom`` scales the slab against the current largest bucket
+    tree) — the delta-shipping layout; see :class:`ForestShardShapes`.
+    """
     f = index.forest
-    maxN = max(max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0), 1)
-    maxL = max(max((L1 - L0 for *_, L0, L1 in slices), default=0), 1)
     cap = index.bucket_ids.shape[1]
-    leaf_sz = np.asarray(f.arrays["leaf_entities"]).shape[1]
+    leaf_sz = np.asarray(f.arrays["leaf_entities"]).shape[1] if f else 0
     grow = lambda x: int(np.ceil(x * headroom))
     extra_depth = 8 if headroom > 1.0 else 0
+    if layout == "slab":
+        windows = _bucket_windows(index)
+        K = index.bucket_ids.shape[0]
+        Kloc = -(-K // n_dev)
+        node_slab = grow(max(max((N1 - N0 for N0, N1, _, _ in windows),
+                                 default=0), 1))
+        leaf_slab = grow(max(max((L1 - L0 for *_, L0, L1 in windows),
+                                 default=0), 1))
+        return ForestShardShapes(
+            n_dev=n_dev, kloc=Kloc, cap=grow(cap),
+            nodes=Kloc * node_slab, leaves=Kloc * leaf_slab,
+            leaf_sz=leaf_sz, max_depth=f.max_depth + extra_depth,
+            node_slab=node_slab, leaf_slab=leaf_slab,
+        )
+    if layout != "packed":
+        raise ValueError(f"layout must be 'packed' or 'slab', got {layout!r}")
+    slices, Kloc = _forest_slices(index, n_dev)
+    maxN = max(max((N1 - N0 for _, _, N0, N1, _, _ in slices), default=0), 1)
+    maxL = max(max((L1 - L0 for *_, L0, L1 in slices), default=0), 1)
     return ForestShardShapes(
         n_dev=n_dev, kloc=Kloc, cap=grow(cap), nodes=grow(maxN),
         leaves=grow(maxL), leaf_sz=leaf_sz,
@@ -472,7 +534,14 @@ def shard_forest(index, n_dev: int, *,
     of identical shape — the no-re-jit update path.  Deleted entities are
     naturally dropped: they are absent from ``bucket_ids``, so their leaf
     slots remap to -1.
+
+    A ``shapes`` with ``node_slab > 0`` switches to the *slab* layout
+    (every bucket at a fixed per-slot window — the delta-shipping
+    layout); the two layouts produce identical search results, they only
+    differ in padding placement.
     """
+    if shapes is not None and shapes.node_slab > 0:
+        return _shard_forest_slab(index, shapes)
     slices, Kloc = _forest_slices(index, n_dev)
     f = index.forest
     K, cap_now = index.bucket_ids.shape
@@ -559,6 +628,211 @@ def shard_forest(index, n_dev: int, *,
         out["leaf_entities"][s, :nl] = le
     out["max_depth"] = shapes.max_depth
     return out
+
+
+def _slab_slot_of(index, Kloc: int, cap: int) -> np.ndarray:
+    """Global entity id -> slab bucket-slot id (``(b % Kloc) * cap + col``)
+    for every placed entity; -1 for deleted/absent.  One vectorized pass,
+    shared by the full slab slicer and the delta slicer."""
+    rr, cc = np.nonzero(index.bucket_ids >= 0)
+    keep = cc < cap          # per-bucket overflow is diagnosed later
+    rr, cc = rr[keep], cc[keep]
+    slot_of = np.full(index.db.shape[0], -1, np.int64)
+    slot_of[index.bucket_ids[rr, cc]] = (rr % Kloc) * cap + cc
+    return slot_of
+
+
+def _bucket_slab_payload(index, shapes: ForestShardShapes, b: int, j: int,
+                         arrays: dict, roots: np.ndarray,
+                         windows, slot_of: np.ndarray) -> dict:
+    """One bucket's fixed-shape slab: every per-bucket array padded to the
+    reserved slab sizes, node/leaf offsets rebased to slot ``j``'s
+    windows, leaf entity ids remapped to the shard's bucket-slot ids
+    (via the precomputed ``slot_of``).  Raises when the bucket outgrew a
+    reservation (the same loud contract as the packed slicer)."""
+    N0, N1, L0, L1 = windows[b]
+    nb, nl = N1 - N0, L1 - L0
+    cap, node_slab, leaf_slab = shapes.cap, shapes.node_slab, shapes.leaf_slab
+    d = index.db.shape[1]
+    over = []
+    if nb > node_slab:
+        over.append(f"nodes {nb} > slab {node_slab}")
+    if nl > leaf_slab:
+        over.append(f"leaves {nl} > slab {leaf_slab}")
+    bl_full = index.bucket_ids[b]
+    count = int((bl_full >= 0).sum())
+    if count > cap:
+        over.append(f"bucket count {count} > cap {cap}")
+    le_w = arrays["leaf_entities"].shape[1]
+    if le_w > shapes.leaf_sz:
+        over.append(f"leaf_sz {le_w} > {shapes.leaf_sz}")
+    if over:
+        raise ValueError(
+            f"bucket {b} outgrew the reserved slab shapes ("
+            + ", ".join(over) + "); rebuild the backend (or raise headroom)")
+
+    proj = np.zeros((node_slab, d), np.float32)
+    dims = np.zeros((node_slab,), arrays["dims"].dtype)
+    tau = np.zeros((node_slab,), np.float32)
+    children = np.full((node_slab, 2), -1, np.int32)
+    leaf_row = np.full((node_slab,), -1, np.int32)
+    leaf_ents = np.full((leaf_slab, shapes.leaf_sz), -1, np.int32)
+    proj[:nb] = arrays["proj"][N0:N1]
+    dims[:nb] = arrays["dims"][N0:N1]
+    tau[:nb] = arrays["tau"][N0:N1]
+    ch = arrays["children"][N0:N1].astype(np.int32, copy=True)
+    ch[ch >= 0] += j * node_slab - N0
+    children[:nb] = ch
+    lr = arrays["leaf_row"][N0:N1].astype(np.int32, copy=True)
+    lr[lr >= 0] += j * leaf_slab - L0
+    leaf_row[:nb] = lr
+
+    # global entity id -> this shard's bucket-slot id (deleted entities
+    # are absent from bucket_ids -> slot -1 via the shared slot_of map)
+    bids = np.full((cap,), -1, np.int32)
+    w = min(cap, bl_full.shape[0])
+    bids[:w] = bl_full[:w]
+    le = arrays["leaf_entities"][L0:L1]
+    le = np.pad(le, ((0, 0), (0, shapes.leaf_sz - le.shape[1])),
+                constant_values=-1).astype(np.int32, copy=True)
+    m = le >= 0
+    le[m] = slot_of[le[m]]
+    leaf_ents[:nl] = le
+
+    bv = index.db[np.maximum(bids, 0)].astype(np.float32)
+    bv = np.where((bids >= 0)[:, None], bv, 0.0)
+    return {
+        "proj": proj, "dims": dims, "tau": tau, "children": children,
+        "leaf_row": leaf_row, "leaf_entities": leaf_ents,
+        "roots": np.int32(j * node_slab + int(roots[b] - N0)),
+        "valid": True,
+        "cents": index.centroids[b].astype(np.float32),
+        "bucket_ids": bids, "bvecs": bv,
+    }
+
+
+def _shard_forest_slab(index, shapes: ForestShardShapes) -> dict:
+    """Slab-layout slicer: same output contract as the packed
+    ``shard_forest`` (stacked host arrays + ``max_depth``), but bucket
+    ``b`` always lands at slot ``b % kloc`` of shard ``b // kloc`` with
+    fixed node/leaf windows — so a mutated bucket later re-ships as a
+    standalone slab (:func:`slice_forest_delta`)."""
+    f = index.forest
+    K = index.bucket_ids.shape[0]
+    n_dev, Kloc = shapes.n_dev, shapes.kloc
+    if -(-K // n_dev) > Kloc:
+        raise ValueError(
+            f"forest outgrew the reserved shard shapes (kloc "
+            f"{-(-K // n_dev)} > {Kloc}); rebuild the backend")
+    if f.max_depth > shapes.max_depth:
+        raise ValueError(
+            f"forest outgrew the reserved shard shapes (max_depth "
+            f"{f.max_depth} > {shapes.max_depth}); rebuild the backend "
+            "(or raise headroom)")
+    arrays = {name: np.asarray(v) for name, v in f.arrays.items()}
+    roots = np.asarray(f.roots, dtype=np.int64)
+    windows = _bucket_windows(index)
+    d = index.db.shape[1]
+    padN, padL, cap = shapes.nodes, shapes.leaves, shapes.cap
+    dead = padN                               # per-shard dead-leaf node id
+    out = {
+        "proj": np.zeros((n_dev, padN + 1, d), np.float32),
+        "dims": np.zeros((n_dev, padN + 1), arrays["dims"].dtype),
+        "tau": np.zeros((n_dev, padN + 1), np.float32),
+        "children": np.full((n_dev, padN + 1, 2), -1, np.int32),
+        "leaf_row": np.full((n_dev, padN + 1), -1, np.int32),
+        "leaf_entities": np.full((n_dev, padL, shapes.leaf_sz), -1,
+                                 np.int32),
+        "roots": np.full((n_dev, Kloc), dead, np.int32),
+        "valid": np.zeros((n_dev, Kloc), bool),
+        "cents": np.zeros((n_dev, Kloc, d), np.float32),
+        "bucket_ids": np.full((n_dev, Kloc, cap), -1, np.int32),
+        "bvecs": np.zeros((n_dev, Kloc, cap, d), np.float32),
+    }
+    ns, ls = shapes.node_slab, shapes.leaf_slab
+    slot_of = _slab_slot_of(index, Kloc, cap)
+    for b in range(K):
+        s, j = b // Kloc, b % Kloc
+        p = _bucket_slab_payload(index, shapes, b, j, arrays, roots,
+                                 windows, slot_of)
+        out["proj"][s, j * ns:(j + 1) * ns] = p["proj"]
+        out["dims"][s, j * ns:(j + 1) * ns] = p["dims"]
+        out["tau"][s, j * ns:(j + 1) * ns] = p["tau"]
+        out["children"][s, j * ns:(j + 1) * ns] = p["children"]
+        out["leaf_row"][s, j * ns:(j + 1) * ns] = p["leaf_row"]
+        out["leaf_entities"][s, j * ls:(j + 1) * ls] = p["leaf_entities"]
+        out["roots"][s, j] = p["roots"]
+        out["valid"][s, j] = True
+        out["cents"][s, j] = p["cents"]
+        out["bucket_ids"][s, j] = p["bucket_ids"]
+        out["bvecs"][s, j] = p["bvecs"]
+    out["max_depth"] = shapes.max_depth
+    return out
+
+
+def slice_forest_delta(index, shapes: ForestShardShapes,
+                       dirty_buckets) -> dict:
+    """Slice only the dirty buckets into stacked fixed-shape slab
+    payloads (slab layout required: ``shapes.node_slab > 0``).
+
+    Returns host arrays keyed like the device tables plus ``shard`` /
+    ``slot`` index vectors — the operand set of the backend's jitted
+    in-place scatter.  Payload bytes are what a delta republish actually
+    ships; compare against the full re-place bytes for the fallback
+    decision.
+    """
+    if shapes.node_slab <= 0:
+        raise ValueError("delta slicing requires the slab layout "
+                         "(forest_shard_shapes(..., layout='slab'))")
+    K = index.bucket_ids.shape[0]
+    dirty = np.unique(np.asarray(dirty_buckets, dtype=np.int64))
+    if dirty.size and (dirty.min() < 0 or dirty.max() >= K):
+        raise ValueError(f"dirty bucket id out of range [0, {K})")
+    f = index.forest
+    if f.max_depth > shapes.max_depth:
+        raise ValueError(
+            f"forest outgrew the reserved shard shapes (max_depth "
+            f"{f.max_depth} > {shapes.max_depth}); rebuild the backend "
+            "(or raise headroom)")
+    arrays = {name: np.asarray(v) for name, v in f.arrays.items()}
+    roots = np.asarray(f.roots, dtype=np.int64)
+    windows = _bucket_windows(index)
+    Kloc = shapes.kloc
+    slot_of = _slab_slot_of(index, Kloc, shapes.cap)
+    rows = [_bucket_slab_payload(index, shapes, int(b), int(b % Kloc),
+                                 arrays, roots, windows, slot_of)
+            for b in dirty]
+    out = {"shard": (dirty // Kloc).astype(np.int32),
+           "slot": (dirty % Kloc).astype(np.int32)}
+    for name in ("proj", "dims", "tau", "children", "leaf_row",
+                 "leaf_entities", "roots", "valid", "cents",
+                 "bucket_ids", "bvecs"):
+        out[name] = np.stack([p[name] for p in rows]) if rows else \
+            np.zeros((0,), np.int32)
+    return out
+
+
+def slice_ivf_delta(index, cap: int, dirty_buckets) -> dict:
+    """Dirty-bucket rows of the IVF device tables (centroid, padded slot
+    row, gathered bucket-vector tile), ready to scatter at ``rows``."""
+    K, cap_now = index.bucket_ids.shape
+    if cap < cap_now:
+        raise ValueError(
+            f"bucket cap grew to {cap_now} > reserved {cap}; rebuild the "
+            f"backend (or raise headroom)")
+    dirty = np.unique(np.asarray(dirty_buckets, dtype=np.int64))
+    if dirty.size and (dirty.min() < 0 or dirty.max() >= K):
+        raise ValueError(f"dirty bucket id out of range [0, {K})")
+    bids = np.full((dirty.size, cap), -1, np.int32)
+    bids[:, :cap_now] = index.bucket_ids[dirty]
+    bvecs = index.db[np.maximum(bids, 0)].astype(np.float32)
+    bvecs = np.where((bids >= 0)[..., None], bvecs, 0.0)
+    return {
+        "rows": dirty.astype(np.int32),
+        "cents": index.centroids[dirty].astype(np.float32),
+        "bucket_ids": bids,
+        "bvecs": bvecs,
+    }
 
 
 def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,

@@ -52,6 +52,12 @@ class EngineStats:
     cache_hits: int = 0
     cache_misses: int = 0
     drift: float = 0.0
+    # republish gauges (apply_updates): bytes actually shipped to the
+    # backend(s), and shipped / what-full-re-places-would-have-shipped —
+    # 1.0 means every republish was a full re-place, 0.0 means none
+    # happened yet.  fig6/fig7 and docs/tuning.md quote these counters.
+    republished_bytes: int = 0
+    delta_fraction: float = 0.0
 
 
 def _bucket(n: int) -> int:
@@ -94,6 +100,8 @@ class ServingEngine:
         self.queue_waits: list[float] = []
         self.batch_sizes: list[int] = []
         self.hedges = 0
+        self.republished_bytes = 0
+        self.republish_full_bytes = 0
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -120,7 +128,7 @@ class ServingEngine:
             headroom=headroom)
         return cls(fn, **engine_kw)
 
-    def apply_updates(self, target, **kw) -> None:
+    def apply_updates(self, target, *, delta="auto", **kw):
         """Swap in a mutated corpus/index without stopping the engine.
 
         Delegates to the backend's ``apply_updates`` (e.g.
@@ -132,6 +140,18 @@ class ServingEngine:
         a stale replica would keep serving deleted entities on every
         hedged request, so a hedge_fn without ``apply_updates`` is an
         error rather than a silent staleness hole.
+
+        ``delta="auto"`` pops the target's accumulated
+        :class:`repro.core.delta.DeltaManifest` (``pop_delta()``) **once**
+        and hands the same manifest to the primary and the hedge replica,
+        so both walk the same version chain and a dirty-bucket
+        maintenance pass ships only its dirty slices (the backend decides
+        delta vs full per manifest).  Pass ``delta=None`` to force a full
+        re-place, or an explicit manifest to manage popping yourself.
+        Returns the primary backend's republish stats dict when it
+        provides one (``mode``/``bytes``/``full_bytes``), which also
+        feeds :class:`EngineStats`' ``republished_bytes`` /
+        ``delta_fraction`` gauges.
         """
         for name, fn in (("search_fn", self.search_fn),
                          ("hedge_fn", self.hedge_fn)):
@@ -141,14 +161,29 @@ class ServingEngine:
                 raise TypeError(
                     f"{name} {type(fn).__name__} has no apply_updates; "
                     "only pre-placed backends support online mutation")
-        self.search_fn.apply_updates(target, **kw)
+        if delta == "auto":
+            delta = (target.pop_delta()
+                     if hasattr(target, "pop_delta") else None)
+        # legacy backends without a delta kwarg keep working: only pass
+        # the manifest when there is one
+        dkw = {} if delta is None else {"delta": delta}
+        stats = self.search_fn.apply_updates(target, **dkw, **kw)
+        hstats = None
         if self.hedge_fn is not None:
-            self.hedge_fn.apply_updates(target, **kw)
+            hstats = self.hedge_fn.apply_updates(target, **dkw, **kw)
+        # the gauges count bytes shipped to EVERY backend — a hedge
+        # replica that fell back to a full re-place must show up even
+        # when the primary took the delta path
+        for st in (stats, hstats):
+            if isinstance(st, dict):
+                self.republished_bytes += int(st.get("bytes", 0))
+                self.republish_full_bytes += int(st.get("full_bytes", 0))
         if self.cache is not None:
             # invalidate AFTER the swap: the generation token handed out
             # at miss time stops in-flight pre-swap results from being
             # re-inserted (see FrequencyAdmissionCache.offer)
             self.cache.invalidate_all()
+        return stats if isinstance(stats, dict) else None
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray) -> "queue.Queue":
@@ -270,9 +305,13 @@ class ServingEngine:
             ch, cm = self.cache.hits, self.cache.misses
         if self.estimator is not None:
             drift = float(self.estimator.drift()["tv"])
+        frac = (self.republished_bytes / self.republish_full_bytes
+                if self.republish_full_bytes else 0.0)
         if a.size == 0:
             return EngineStats(0, 0, 0, 0, 0, 0, [], self.hedges,
-                               cache_hits=ch, cache_misses=cm, drift=drift)
+                               cache_hits=ch, cache_misses=cm, drift=drift,
+                               republished_bytes=self.republished_bytes,
+                               delta_fraction=frac)
         return EngineStats(
             n=a.size,
             p50_ms=float(np.percentile(a, 50)),
@@ -285,4 +324,6 @@ class ServingEngine:
             cache_hits=ch,
             cache_misses=cm,
             drift=drift,
+            republished_bytes=self.republished_bytes,
+            delta_fraction=frac,
         )

@@ -162,6 +162,107 @@ def test_shard_forest_shapes_stable_across_mutation():
         shard_forest(idx, n_dev, shapes=small)
 
 
+def test_shard_forest_slab_layout_conserves_entities():
+    """The slab layout (delta-shipping layout: fixed per-bucket node/leaf
+    windows) must hold exactly the same entities as the packed layout —
+    same contract as the packed slicer test, plus every bucket's nodes
+    land inside its own slab."""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed import forest_shard_shapes, shard_forest
+
+    rng = np.random.default_rng(7)
+    db = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=16, top="brute", bottom="tree", kmeans_iters=3,
+        tree_leaf=4))
+    n_dev = 4
+    shapes = forest_shard_shapes(idx, n_dev, headroom=1.0, layout="slab")
+    assert shapes.node_slab > 0
+    assert shapes.nodes == shapes.kloc * shapes.node_slab
+    sh = shard_forest(idx, n_dev, shapes=shapes)
+    seen = []
+    for s in range(n_dev):
+        le = sh["leaf_entities"][s]
+        slots = le[le >= 0]
+        gids = sh["bucket_ids"][s].reshape(-1)[slots]
+        assert (gids >= 0).all()
+        seen.append(gids)
+        # every real root sits at its slot's slab start
+        val = sh["valid"][s]
+        for j in np.nonzero(val)[0]:
+            assert sh["roots"][s, j] == j * shapes.node_slab
+    seen = np.concatenate(seen)
+    assert np.array_equal(np.sort(seen), np.arange(db.shape[0]))
+
+
+def test_shard_forest_slab_shapes_stable_across_mutation():
+    """Slab re-slicing of a mutated forest keeps identical shapes (the
+    no-re-jit contract), and a bucket outgrowing its slab raises."""
+    import dataclasses
+
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed import forest_shard_shapes, shard_forest
+
+    rng = np.random.default_rng(8)
+    db = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=16, top="brute", bottom="tree", kmeans_iters=3,
+        tree_leaf=4))
+    n_dev = 4
+    shapes = forest_shard_shapes(idx, n_dev, headroom=1.5, layout="slab")
+    sh0 = shard_forest(idx, n_dev, shapes=shapes)
+    idx.delete_entities(rng.choice(600, 150, replace=False))
+    idx.add_entities(rng.normal(size=(180, 8)).astype(np.float32))
+    idx.rebalance()
+    sh1 = shard_forest(idx, n_dev, shapes=shapes)
+    for name in sh0:
+        if name == "max_depth":
+            continue
+        assert sh0[name].shape == sh1[name].shape, name
+    small = dataclasses.replace(shapes, node_slab=1)
+    with pytest.raises(ValueError, match="outgrew"):
+        shard_forest(idx, n_dev, shapes=small)
+
+
+def test_slice_forest_delta_matches_full_slab_slice():
+    """A dirty bucket's delta slab must be byte-identical to the same
+    bucket's window in a full slab re-slice — the invariant that makes
+    the device scatter equivalent to a full re-place."""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed import (
+        forest_shard_shapes,
+        shard_forest,
+        slice_forest_delta,
+    )
+
+    rng = np.random.default_rng(9)
+    db = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=16, top="brute", bottom="tree", kmeans_iters=3,
+        tree_leaf=4))
+    n_dev = 4
+    shapes = forest_shard_shapes(idx, n_dev, headroom=1.5, layout="slab")
+    b = int(np.argmax(idx.bucket_counts))
+    idx.delete_entities(idx.bucket_ids[b][:4].copy())
+    man = idx.pop_delta()
+    pay = slice_forest_delta(idx, shapes, man.dirty_buckets)
+    full = shard_forest(idx, n_dev, shapes=shapes)
+    ns, ls = shapes.node_slab, shapes.leaf_slab
+    for u in range(pay["shard"].size):
+        s, j = int(pay["shard"][u]), int(pay["slot"][u])
+        np.testing.assert_array_equal(
+            pay["proj"][u], full["proj"][s, j * ns:(j + 1) * ns])
+        np.testing.assert_array_equal(
+            pay["children"][u], full["children"][s, j * ns:(j + 1) * ns])
+        np.testing.assert_array_equal(
+            pay["leaf_entities"][u],
+            full["leaf_entities"][s, j * ls:(j + 1) * ls])
+        np.testing.assert_array_equal(
+            pay["bucket_ids"][u], full["bucket_ids"][s, j])
+        np.testing.assert_array_equal(pay["bvecs"][u], full["bvecs"][s, j])
+        assert pay["roots"][u] == full["roots"][s, j]
+
+
 # ---------------------------------------------------------------------------
 # slow, subprocess: real 8-device semantics
 # ---------------------------------------------------------------------------
@@ -349,6 +450,55 @@ def test_serving_engine_sharded_survives_mutation_without_rejit():
     c0 = int(parts[parts.index("CACHE") + 1])
     c1 = int(parts[parts.index("CACHE") + 2])
     assert "CLEAN True" in out
+    assert c1 == c0, f"search kernel re-jitted: {c0} -> {c1}"
+
+
+@slow
+def test_sharded_delta_apply_identical_to_full_8dev():
+    """Real 8-device mesh: a delta apply must leave the backend bitwise
+    identical to a full re-place of the same mutated index, ship a small
+    fraction of the full bytes for a localized mutation, and never touch
+    the search kernel's compile cache."""
+    out = _run("""
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed.backend import ShardedSearchBackend
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(6)
+    c = rng.normal(size=(32, 16)) * 4
+    def mk(n):
+        return (c[rng.integers(0, 32, n)] + rng.normal(size=(n, 16))).astype(np.float32)
+    db = mk(3000)
+    idx = build_two_level(db, TwoLevelConfig(n_clusters=64, top="brute",
+                          bottom="tree", kmeans_iters=4, tree_leaf=8))
+    kw = dict(kind="forest", k=10, nprobe_local=4, beam_width=8, headroom=1.5)
+    beA = ShardedSearchBackend(mesh, idx, **kw)
+    beB = ShardedSearchBackend(mesh, idx, **kw)
+    q = mk(32)
+    dA0, _ = beA(q)
+    cache0 = beA.jit_cache_size()
+    b = int(np.argmax(idx.bucket_counts))
+    dele = idx.bucket_ids[b][:10].copy()
+    idx.delete_entities(dele)
+    idx.add_entities(mk(12))
+    man = idx.pop_delta()
+    st = beA.apply_updates(idx, delta=man)
+    beB.apply_updates(idx)
+    same = all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(beA._args, beB._args))
+    dA, iA = beA(q)
+    dB, iB = beB(q)
+    print("MODE", st["mode"], "FRAC", round(st["bytes"] / st["full_bytes"], 3),
+          "SAME", bool(same and np.array_equal(dA, dB)
+                       and np.array_equal(iA, iB)),
+          "CACHE", cache0, beA.jit_cache_size(),
+          "CLEAN", bool(not np.isin(iA, dele).any()))
+    """)
+    parts = out.split()
+    assert "MODE delta" in out
+    assert float(parts[parts.index("FRAC") + 1]) < 0.5
+    assert "SAME True" in out and "CLEAN True" in out
+    c0 = int(parts[parts.index("CACHE") + 1])
+    c1 = int(parts[parts.index("CACHE") + 2])
     assert c1 == c0, f"search kernel re-jitted: {c0} -> {c1}"
 
 

@@ -124,3 +124,18 @@ def test_adafactor_factored_spec_shapes():
     assert spec == {"vr": P("data"), "vc": P("model")}
     spec = opt.state_spec_fn(P(None), (64,))
     assert spec == {"v": P(None)}
+
+
+def test_doc_links_resolve():
+    """Every intra-repo markdown link must resolve (the CI docs job runs
+    the same checker; this keeps it enforced in the tier-1 suite too)."""
+    import subprocess
+    import sys
+
+    from conftest import REPO
+
+    r = subprocess.run(
+        [sys.executable, "tools/check_doc_links.py"],
+        capture_output=True, text=True, cwd=REPO, timeout=60,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

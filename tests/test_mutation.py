@@ -7,6 +7,8 @@ bottom at full probe (both are exact scans over the survivors), and
 recall-bounded for the approximate bottoms (qlbt forest / LSH), whose
 structures legitimately differ between an incremental and a fresh build.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -303,6 +305,263 @@ def test_engine_apply_updates_reaches_hedge_replica():
             eng.apply_updates("snapshot-2")
         assert primary.seen == ["snapshot-1"]   # nothing half-applied
     finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# delta shipping (PR-5): manifest lifecycle, fallback boundaries, counters
+# ---------------------------------------------------------------------------
+
+
+def test_delta_manifest_accumulates_and_pops():
+    """Mutations accumulate into one manifest; pop resets the log and
+    chains versions; an untouched index pops an empty manifest."""
+    rng, mk = _gen(20)
+    db = mk(600)
+    idx = build_two_level(db, _cfg("tree", tree_leaf=4))
+    man0 = idx.pop_delta()
+    assert man0.empty and man0.base_version == man0.version
+
+    b = int(np.argmax(idx.bucket_counts))
+    dele = idx.bucket_ids[b][:3].copy()
+    idx.delete_entities(dele)
+    ids = idx.add_entities(mk(4))
+    man = idx.pop_delta()
+    assert not man.empty and not man.full
+    assert man.base_version == man0.version and man.version > man.base_version
+    assert man.base_n == 600 and man.n == 604
+    assert set(dele.tolist()) == set(man.tombstones.tolist())
+    assert b in man.dirty_buckets.tolist()
+    # every receiving bucket of the adds is named dirty
+    for e in ids:
+        assert int(idx.entity_bucket[e]) in man.dirty_buckets.tolist()
+    # the pop cleared the log: next manifest is empty and chains on
+    man2 = idx.pop_delta()
+    assert man2.empty and man2.base_version == man.version
+
+    # SearchIndex single-tree path: deletes are a delta, adds are full
+    si = build_index(IndexSpec(kind="tree"), mk(300))
+    si.delete_entities(np.arange(5))
+    m = si.pop_delta()
+    assert not m.full and m.leaf_rows.size > 0 and m.tombstones.size == 5
+    si.add_entities(mk(10))
+    assert si.pop_delta().full        # whole-tree rebuild -> no delta
+
+
+def _mesh1():
+    import jax
+
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_delta_threshold_boundary_falls_back_to_full():
+    """The payload-vs-full size cutoff: the same manifest ships as a
+    delta under a permissive threshold and falls back to a full re-place
+    (reason="threshold") under a tight one — with identical results
+    either way.  The localized mutation itself must cost <= 25% of a
+    full re-place (the fig7 acceptance bound at <=10% mutation)."""
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng, mk = _gen(21)
+    db = mk(N)
+    idx = build_two_level(db, _cfg("tree"))
+    mesh = _mesh1()
+    kw = dict(k=10, axes=("data",), nprobe_local=K, beam_width=8,
+              headroom=1.5)
+    be = ShardedSearchBackend(mesh, idx, **kw)
+
+    b = int(np.argmax(idx.bucket_counts))
+    dele = idx.bucket_ids[b][:6].copy()
+    idx.delete_entities(dele)
+    man = idx.pop_delta()
+    be.delta_max_fraction = 0.0                 # tighter than any payload
+    st = be.apply_updates(idx, delta=man)
+    assert st["mode"] == "full" and st["reason"] == "threshold"
+
+    dele2 = idx.bucket_ids[b][:4].copy()
+    idx.delete_entities(dele2)
+    man2 = idx.pop_delta()
+    be.delta_max_fraction = 1.0
+    st2 = be.apply_updates(idx, delta=man2)
+    assert st2["mode"] == "delta"
+    assert st2["bytes"] <= 0.25 * st2["full_bytes"], (
+        f"localized delta shipped {st2['bytes']} of "
+        f"{st2['full_bytes']} bytes")
+    q = mk(32)
+    _, i1 = be(q)
+    assert not np.isin(i1, np.concatenate([dele, dele2])).any()
+
+
+def test_delta_version_mismatch_falls_back_to_full():
+    """A manifest whose base version is AHEAD of what the backend last
+    placed under-covers the backend's staleness (a pop went missing) —
+    it must fall back to a full re-place, never apply partially."""
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng, mk = _gen(22)
+    db = mk(N)
+    idx = build_two_level(db, _cfg("tree"))
+    mesh = _mesh1()
+    be = ShardedSearchBackend(mesh, idx, k=10, axes=("data",),
+                              nprobe_local=K, beam_width=8, headroom=1.5)
+    b = int(np.argmax(idx.bucket_counts))
+    d1 = idx.bucket_ids[b][:3].copy()
+    idx.delete_entities(d1)
+    idx.pop_delta()                       # popped but never applied
+    d2 = idx.bucket_ids[b][:3].copy()
+    idx.delete_entities(d2)
+    man = idx.pop_delta()                 # base is ahead of the backend
+    st = be.apply_updates(idx, delta=man)
+    assert st["mode"] == "full" and st["reason"] == "version"
+    q = mk(32)
+    _, ids = be(q)
+    assert not np.isin(ids, np.concatenate([d1, d2])).any()
+
+
+def test_delta_full_manifest_and_missing_manifest_fall_back():
+    """A ``full`` manifest (single-tree rebuild semantics) and a plain
+    ``apply_updates`` without a manifest both take the bulk path."""
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng, mk = _gen(23)
+    idx = build_two_level(mk(N), _cfg("brute"))
+    mesh = _mesh1()
+    be = ShardedSearchBackend(mesh, idx, k=10, axes=("data",),
+                              nprobe_local=K, headroom=1.3)
+    idx.add_entities(mk(8))
+    st = be.apply_updates(idx)
+    assert st["mode"] == "full" and st["reason"] == "no-manifest"
+    idx.delete_entities(np.asarray([0]))
+    man = idx.pop_delta()
+    man = dataclasses.replace(man, full=True)
+    st2 = be.apply_updates(idx, delta=man)
+    assert st2["mode"] == "full" and st2["reason"] == "manifest-full"
+
+
+def test_engine_delta_counters_and_cache_invalidation():
+    """ServingEngine.apply_updates pops the manifest itself, ships the
+    delta, surfaces republished_bytes / delta_fraction in EngineStats,
+    and still invalidates the result cache (no stale hit can survive a
+    delta republish any more than a full one)."""
+    from repro.adaptive import FrequencyAdmissionCache
+    from repro.distributed.backend import ShardedSearchBackend
+    from repro.serve.engine import ServingEngine
+
+    rng, mk = _gen(24)
+    idx = build_two_level(mk(N), _cfg("tree"))
+    mesh = _mesh1()
+    be = ShardedSearchBackend(mesh, idx, k=5, axes=("data",),
+                              nprobe_local=K, beam_width=16, headroom=1.5)
+    cache = FrequencyAdmissionCache(capacity=64)
+    eng = ServingEngine(be, cache=cache, max_wait_ms=0.5)
+    try:
+        b = int(np.argmax(idx.bucket_counts))
+        target = int(idx.bucket_ids[b][0])
+        q = idx.db[target].copy()
+        _, ids0 = eng.search(q, timeout=30.0)
+        assert target in ids0
+        _, _ = eng.search(q, timeout=30.0)
+        assert eng.stats().cache_hits >= 1
+        idx.delete_entities(np.asarray([target]))
+        st = eng.apply_updates(idx)       # pops + ships the delta
+        assert st["mode"] == "delta"
+        stats = eng.stats()
+        assert stats.republished_bytes == st["bytes"] > 0
+        assert 0.0 < stats.delta_fraction <= 0.25
+        _, ids2 = eng.search(q, timeout=30.0)
+        assert target not in ids2, "stale cached result after delta ship"
+    finally:
+        eng.close()
+
+
+def test_reboost_refresh_of_stale_dirty_bucket_reenters_delta_log():
+    """Regression: a bucket dirtied before a pop (deferred refresh) and
+    rebuilt by a later reboost() must re-enter the CURRENT delta log —
+    omitting it would delta-ship a stale slab and silently diverge from
+    a full re-place."""
+    rng, mk = _gen(26)
+    db = mk(600)
+    p = rng.dirichlet(np.full(600, 0.5))
+    idx = build_two_level(db, _cfg("qlbt", tree_leaf=4), p=p)
+    ids = idx.add_entities(mk(8), refresh=False)   # dirty, tree stale
+    idx.pop_delta()                                # log reset, dirty stays
+    b = {int(idx.entity_bucket[e]) for e in ids}
+    assert idx.dirty.any()
+    idx.reboost(rng.dirichlet(np.full(idx.n, 0.5)))  # rebuilds dirty trees
+    man = idx.pop_delta()
+    assert b <= set(man.dirty_buckets.tolist()), (
+        "reboost-refreshed bucket missing from the delta manifest")
+
+
+def test_brute_delta_applies_manifest_tombstones_without_alive():
+    """The brute delta path must flip liveness for the manifest's
+    tombstones even when the caller forgets the ``alive`` kwarg — a
+    delta republish may never resurrect a tombstoned row."""
+    from repro.core.delta import DeltaManifest
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng, mk = _gen(27)
+    db = mk(400)
+    mesh = _mesh1()
+    be = ShardedSearchBackend(mesh, db, k=5, axes=("data",), headroom=1.5)
+    man = DeltaManifest(base_version=0, version=1, base_n=400, n=400,
+                        tombstones=np.asarray([7, 11]))
+    st = be.apply_updates(db, delta=man)           # no alive kwarg
+    assert st["mode"] == "delta"
+    q = db[[7, 11]]
+    _, ids = be(q)
+    assert not np.isin(ids, [7, 11]).any(), "tombstoned row resurrected"
+    # a LATER append-only window must not forget the earlier flips
+    # (liveness is cumulative on the backend, not rebuilt per manifest)
+    grown = np.concatenate([db, mk(20)])
+    man2 = DeltaManifest(base_version=1, version=2, base_n=400, n=420)
+    st2 = be.apply_updates(grown, delta=man2)
+    assert st2["mode"] == "delta"
+    _, ids = be(q)
+    assert not np.isin(ids, [7, 11]).any(), (
+        "earlier window's tombstones resurrected by a later delta")
+    # and a manifest that skips a window in the chain falls back to full
+    man4 = DeltaManifest(base_version=3, version=4, base_n=420, n=420,
+                         tombstones=np.asarray([20]))
+    st3 = be.apply_updates(grown, delta=man4)
+    assert st3["mode"] == "full" and st3["reason"] == "version"
+
+
+def test_scheduler_event_records_republish_stats():
+    """A drift-triggered maintenance pass reports what its republish
+    shipped (the host backend republishes by reference: zero bytes)."""
+    from repro.adaptive import HostIndexBackend, MaintenanceScheduler
+    from repro.serve.engine import ServingEngine
+
+    rng, mk = _gen(25)
+    db = mk(600)
+    p = rng.dirichlet(np.full(600, 0.5))
+    idx = build_two_level(db, _cfg("qlbt"), p=p)
+
+    class _Est:                        # minimal estimator stub
+        n_total = 1e6
+
+        def drift(self):
+            return {"tv": 1.0, "kl": 1.0, "n_observed": 1e6}
+
+        def likelihood(self):
+            return rng.dirichlet(np.full(600, 0.5))
+
+        def set_reference(self, p):
+            pass
+
+    backend = HostIndexBackend(idx, k=5, nprobe=K)
+    eng = ServingEngine(backend, max_wait_ms=0.5)
+    sched = MaintenanceScheduler(_Est(), idx, engine=eng, interval_s=None,
+                                 drift_threshold=0.5, min_observations=1)
+    try:
+        ev = sched.check_now()
+        assert ev is not None
+        assert ev["republish"]["mode"] == "swap"
+        assert ev["republish"]["bytes"] == 0
+        assert backend.last_delta is not None     # manifest reached it
+    finally:
+        sched.close()
         eng.close()
 
 

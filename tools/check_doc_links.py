@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the repo's markdown docs.
+
+Scans every tracked ``*.md`` (skipping caches and third-party dirs) for
+``[text](target)`` links and verifies that each *relative* target —
+after stripping any ``#anchor`` — resolves to an existing file or
+directory relative to the markdown file.  External links (``http(s)``,
+``mailto:``) and pure in-page anchors are ignored; anchors into other
+files are checked for file existence only (heading slugs are not
+validated).
+
+Used by the CI ``docs`` job; run locally with
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", ".venv"}
+# [text](target) — target up to the first unescaped ')' (no nesting in
+# our docs); tolerate an optional "title" suffix
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def iter_md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if any(part in SKIP_DIRS for part in p.relative_to(REPO).parts):
+            continue
+        yield p
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    # fenced code blocks routinely contain notation like [b0, b1) —
+    # strip them before scanning for links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):          # in-page anchor
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append((md.relative_to(REPO), target))
+    return broken
+
+
+def main() -> int:
+    broken = []
+    n_files = 0
+    for md in iter_md_files():
+        n_files += 1
+        broken.extend(check_file(md))
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s):")
+        for src, target in broken:
+            print(f"  {src}: ({target})")
+        return 1
+    print(f"doc links OK ({n_files} markdown files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
