@@ -1,13 +1,65 @@
-"""Shared benchmark utilities: corpora caching, recall/latency sweeps."""
+"""Shared benchmark utilities: corpora caching, recall/latency sweeps,
+and machine-readable result persistence.
+
+Every row printed through :func:`csv_row` between :func:`begin_figure`
+and :func:`finish_figure` is also recorded and written to
+``benchmarks/results/BENCH_<figure>.json`` — numbers + run config + git
+sha — so successive runs leave a perf trajectory instead of scrollback.
+"""
 from __future__ import annotations
 
+import json
 import os
+import subprocess
 import time
 
 import numpy as np
 
 CACHE = os.path.join(os.path.dirname(__file__), "results", "cache")
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+_RECORDING: "dict | None" = None
+
+
+def git_sha() -> str:
+    """Commit the numbers were measured at (dirty trees get a suffix)."""
+    try:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def begin_figure(name: str) -> None:
+    """Start recording csv_row output for ``BENCH_<name>.json``."""
+    global _RECORDING
+    _RECORDING = {"figure": name, "rows": []}
+
+
+def finish_figure(config: "dict | None" = None) -> "str | None":
+    """Write the recorded rows (plus ``config`` and git sha) and return
+    the written path, or None when nothing was recorded."""
+    global _RECORDING
+    rec, _RECORDING = _RECORDING, None
+    if rec is None:
+        return None
+    rec["config"] = config or {}
+    rec["git_sha"] = git_sha()
+    rec["unix_time"] = int(time.time())
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{rec['figure']}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def cached_corpus(name: str, scale: float, seed: int = 0):
@@ -92,3 +144,9 @@ def lat_summary(samples_s, stats=None) -> dict:
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _RECORDING is not None:
+        _RECORDING["rows"].append({
+            "name": name,
+            "us_per_call": round(float(us_per_call), 2),
+            "derived": derived,
+        })

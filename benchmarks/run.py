@@ -4,13 +4,31 @@
   python -m benchmarks.run --full      # paper-scale corpora (slow)
   python -m benchmarks.run --only fig1,roofline
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.csv_row).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.csv_row)
+and writes each figure's rows to ``benchmarks/results/BENCH_<fig>.json``
+(numbers + run config + git sha) so a perf trajectory accumulates across
+commits.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+from benchmarks import common
+
+
+def _figure(name: str, config: dict, fn) -> None:
+    """Run one figure with BENCH_<name>.json recording around it."""
+    common.begin_figure(name)
+    try:
+        fn()
+    except BaseException:
+        common.finish_figure(config=dict(config, aborted=True))
+        raise
+    path = common.finish_figure(config=config)
+    if path:
+        print(f"wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -30,41 +48,54 @@ def main() -> None:
     if want("fig1"):
         from benchmarks import fig1_qlbt
 
-        fig1_qlbt.run()
+        _figure("fig1", {"full": args.full}, fig1_qlbt.run)
     if want("table1"):
         from benchmarks import table1_twolevel
 
-        table1_twolevel.run(scale=1.0 if args.full else 0.2)
+        scale = 1.0 if args.full else 0.2
+        _figure("table1", {"full": args.full, "scale": scale},
+                lambda: table1_twolevel.run(scale=scale))
     if want("fig2d"):
         from benchmarks import fig2d_deep
 
-        fig2d_deep.run(scale=1.0 if args.full else 0.1)
+        scale = 1.0 if args.full else 0.1
+        _figure("fig2d", {"full": args.full, "scale": scale},
+                lambda: fig2d_deep.run(scale=scale))
     if want("fig3"):
         from benchmarks import fig3_protocol
 
-        fig3_protocol.run()
+        _figure("fig3", {"full": args.full}, fig3_protocol.run)
     if want("sharded"):
         from benchmarks import fig4_sharded
 
-        fig4_sharded.run(shards=(1, 2, 4, 8) if args.full else (1, 2, 4),
-                         n=100_000 if args.full else 20_000)
+        shards = (1, 2, 4, 8) if args.full else (1, 2, 4)
+        n = 100_000 if args.full else 20_000
+        _figure("fig4_sharded", {"full": args.full, "shards": shards,
+                                 "n": n},
+                lambda: fig4_sharded.run(shards=shards, n=n))
     if want("updates"):
         from benchmarks import fig5_updates
 
-        fig5_updates.run(n=100_000 if args.full else 20_000)
+        n = 100_000 if args.full else 20_000
+        _figure("fig5_updates", {"full": args.full, "n": n},
+                lambda: fig5_updates.run(n=n))
     if want("adaptive"):
         from benchmarks import fig6_adaptive
 
-        fig6_adaptive.run(n=20_000 if args.full else 8192)
+        n = 20_000 if args.full else 8192
+        _figure("fig6_adaptive", {"full": args.full, "n": n},
+                lambda: fig6_adaptive.run(n=n))
     if want("delta"):
         from benchmarks import fig7_delta
 
-        fig7_delta.run(n=100_000 if args.full else 20_000)
+        n = 100_000 if args.full else 20_000
+        _figure("fig7_delta", {"full": args.full, "n": n},
+                lambda: fig7_delta.run(n=n))
     if want("roofline"):
         from benchmarks import roofline
 
         try:
-            roofline.run()
+            _figure("roofline", {"full": args.full}, roofline.run)
         except FileNotFoundError:
             print("roofline: no dryrun.json yet — run "
                   "python -m repro.launch.dryrun --all first",

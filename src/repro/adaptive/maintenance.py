@@ -29,6 +29,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.analysis.annotations import guarded_by
+
 __all__ = ["HostIndexBackend", "MaintenanceScheduler"]
 
 
@@ -135,6 +137,9 @@ class MaintenanceScheduler:
         self.events: list[dict] = []
         self.n_reboosts = 0
         self.last_error: Optional[BaseException] = None
+        # serializes triggers: the daemon loop and direct check_now()
+        # callers race on the cooldown watermark and the event log
+        self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         if interval_s is not None:
@@ -144,18 +149,22 @@ class MaintenanceScheduler:
     # ------------------------------------------------------------------
     def check_now(self) -> Optional[dict]:
         """One synchronous drift check; returns the event dict if it
-        triggered maintenance, else None."""
-        d = self.estimator.drift()
-        if d["n_observed"] < self.min_observations:
-            return None
-        n_total = getattr(self.estimator, "n_total", 0)
-        if n_total - self._last_trigger_n < self.cooldown_observations:
-            return None
-        if d[self.metric] <= self.drift_threshold:
-            return None
-        self._last_trigger_n = n_total
-        return self._trigger(d)
+        triggered maintenance, else None.  Serialized under the
+        scheduler lock — a manual call racing the daemon loop must not
+        double-trigger inside one cooldown window."""
+        with self._lock:
+            d = self.estimator.drift()
+            if d["n_observed"] < self.min_observations:
+                return None
+            n_total = getattr(self.estimator, "n_total", 0)
+            if n_total - self._last_trigger_n < self.cooldown_observations:
+                return None
+            if d[self.metric] <= self.drift_threshold:
+                return None
+            self._last_trigger_n = n_total
+            return self._trigger(d)
 
+    @guarded_by("_lock")
     def _trigger(self, drift: dict) -> dict:
         t0 = time.perf_counter()
         # the corpus may have grown since the estimator was sized
@@ -209,7 +218,8 @@ class MaintenanceScheduler:
             try:
                 self.check_now()
             except Exception as e:       # keep the daemon alive; surface
-                self.last_error = e      # the error through stats/tests
+                with self._lock:         # the error through stats/tests
+                    self.last_error = e
 
     def close(self, timeout: float = 5.0) -> None:
         self._stop.set()

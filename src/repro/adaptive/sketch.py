@@ -42,8 +42,10 @@ def _update(table, a, b, hh_ids, ids, w, decay):
     valid = ids >= 0
     h = _hash(jnp.where(valid, ids, 0), a, b, width)
     w = jnp.where(valid, w, 0.0)
-    rows = jnp.broadcast_to(jnp.arange(depth)[:, None], h.shape)
+    rows = jnp.broadcast_to(
+        jnp.arange(depth, dtype=jnp.int32)[:, None], h.shape)
     table = table * decay
+    # repro: allow(scatter-not-donated): tiny (depth, width) table, and donation is a no-op on the CPU backend this runs on
     table = table.at[rows, h].add(jnp.broadcast_to(w[None, :], h.shape))
 
     # heavy hitters: re-rank current top-k union the batch ids by their
@@ -67,7 +69,8 @@ def _update(table, a, b, hh_ids, ids, w, decay):
 def _query(table, a, b, ids):
     depth, width = table.shape
     h = _hash(jnp.where(ids >= 0, ids, 0), a, b, width)
-    rows = jnp.broadcast_to(jnp.arange(depth)[:, None], h.shape)
+    rows = jnp.broadcast_to(
+        jnp.arange(depth, dtype=jnp.int32)[:, None], h.shape)
     est = table[rows, h].min(axis=0)
     return jnp.where(ids >= 0, est, 0.0)
 

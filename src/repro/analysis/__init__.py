@@ -1,0 +1,29 @@
+"""Compile-path & concurrency lint for the repro stack.
+
+Three rule families enforce the invariants the serving-latency claims
+rest on (see docs/analysis.md):
+
+* :mod:`repro.analysis.jaxlint` — no host syncs / traced branches /
+  implicit dtypes / undonated scatters / unbucketed pads in jitted code;
+* :mod:`repro.analysis.locks` — every write to a shared attribute is
+  dominated by the class's designated lock (``@guarded_by`` declares
+  methods that require it);
+* :mod:`repro.analysis.recompile` — registered jitted entry points keep
+  a fixed compile-signature set across mutation-perturbed shapes.
+
+CLI: ``python -m repro.analysis src/repro --strict`` (the CI lint gate).
+Suppress a finding inline with ``# repro: allow(<rule>): <why>``.
+"""
+from repro.analysis.annotations import guarded_by
+from repro.analysis.core import (
+    STATIC_RULES,
+    Finding,
+    Suppression,
+    collect_suppressions,
+    run_static_analysis,
+)
+
+__all__ = [
+    "Finding", "Suppression", "collect_suppressions",
+    "run_static_analysis", "STATIC_RULES", "guarded_by",
+]

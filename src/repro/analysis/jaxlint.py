@@ -1,0 +1,502 @@
+"""JAX compile-path lint: AST rules over jit-traced function bodies.
+
+The serving stack's latency claims assume the hot path never leaves the
+device and never recompiles.  This pass finds the code patterns that
+break those assumptions *statically*, before a trace ever runs:
+
+``host-sync``
+    Host synchronization on a traced value inside jitted code —
+    ``.item()`` / ``.tolist()`` / ``.block_until_ready()``,
+    ``float()/int()/bool()`` on a tracer, ``np.asarray``/``np.array`` of
+    a tracer, ``jax.device_get``.  Each of these blocks the caller on
+    device work and breaks the paper's latency model.
+``traced-branch``
+    Python ``if``/``while``/``assert`` on a traced *value* — the branch
+    either fails at trace time or silently bakes one side into the
+    compiled program.  Use ``jnp.where`` / ``lax.cond``.
+``missing-static-argnames``
+    The same branch pattern, but the traced value is a bare parameter of
+    the jitted callee — the fix is declaring it in ``static_argnames``
+    (and accepting a compile per distinct value) rather than rewriting
+    the branch.
+``implicit-dtype``
+    ``jnp`` array creation without an explicit dtype inside jitted code.
+    Implicit dtypes are how x64 promotion and weak-type widening sneak
+    into a cached compile signature.
+``scatter-not-donated``
+    A jit-wrapped function scatters into one of its own array parameters
+    (``p.at[...].set(...)``) and returns the result, but the ``jax.jit``
+    wrapper declares no ``donate_argnums`` — on accelerators the update
+    silently becomes a copy, doubling republish bandwidth.
+``non-pow2-pad``
+    A function that invokes a jitted callable pads an array's leading
+    dim to a size not derived from a recognized shape-bucketing helper
+    (``_pow2`` / ``_bucket`` / ``bit_length`` / ceil-to-multiple) — each
+    distinct pad target becomes a fresh compile-cache entry.
+
+Taint model (deliberately simple, intra-function): parameters of a
+jitted function are traced unless named static; ``jnp``/``jax`` call
+results are traced; ``.shape``/``.ndim``/``.dtype``/``.size`` and
+``len()`` of anything are static.  Nested ``def``s inside a jitted
+function (scan bodies, branches) are traced contexts too.  Helpers that
+are only *called* from jitted code are out of scope — annotate them by
+wrapping in ``jax.jit`` or accept the blind spot (documented in
+docs/analysis.md).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.core import STATIC_RULES, Finding
+
+__all__ = ["check_module"]
+
+STATIC_RULES.update({
+    "host-sync": "host synchronization on a traced value in jitted code",
+    "traced-branch": "Python branch on a traced value in jitted code",
+    "missing-static-argnames":
+        "branch on a jitted parameter that should be static_argnames",
+    "implicit-dtype": "jnp array creation without explicit dtype in jit",
+    "scatter-not-donated":
+        "jitted in-place scatter into a parameter without donate_argnums",
+    "non-pow2-pad":
+        "pad at a jit boundary not derived from a shape-bucketing helper",
+})
+
+_UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type"}
+_UNTAINT_CALLS = {"len", "isinstance", "type", "range", "enumerate",
+                  "zip", "getattr", "hasattr"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_CAST_FUNCS = {"float", "int", "bool", "complex"}
+_MUTATOR_NONE = frozenset()
+_CREATION_MIN_POS = {  # positional index at which dtype appears
+    "zeros": 1, "ones": 1, "empty": 1, "asarray": 1, "array": 1,
+    "full": 2, "arange": 3, "linspace": 5,
+}
+_BUCKET_HELPERS = {"_pow2", "_bucket", "next_pow2", "pow2", "next_power_of_2"}
+_PAD_FUNCS = {"pad"}
+_PAD_HELPERS = {"_pad_rows"}
+
+
+def _attr_path(node: ast.AST) -> Optional[str]:
+    """Dotted name of an attribute/name chain, or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jnp_path(path: Optional[str]) -> bool:
+    return bool(path) and path.split(".")[0] in ("jnp", "jax", "lax")
+
+
+def _is_np_path(path: Optional[str]) -> bool:
+    return bool(path) and path.split(".")[0] in ("np", "numpy", "onp")
+
+
+def _const_names(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class _JitMarker:
+    """How a function got jitted: static/donate info from the wrapper."""
+
+    def __init__(self, static_names=(), static_nums=(), donated=False,
+                 via_shard_map=False):
+        self.static_names = set(static_names)
+        self.static_nums = tuple(static_nums)
+        self.donated = donated
+        self.via_shard_map = via_shard_map
+
+
+def _jit_call_info(call: ast.Call) -> Optional[_JitMarker]:
+    """``jax.jit(...)`` / ``partial(jax.jit, ...)`` -> marker, else None."""
+    path = _attr_path(call.func)
+    if path in ("jax.jit", "jit"):
+        return _marker_from_kwargs(call.keywords)
+    if path in ("partial", "functools.partial") and call.args:
+        inner = _attr_path(call.args[0])
+        if inner in ("jax.jit", "jit"):
+            return _marker_from_kwargs(call.keywords)
+    return None
+
+
+def _marker_from_kwargs(keywords) -> _JitMarker:
+    static_names: list = []
+    static_nums: list = []
+    donated = False
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            static_names.extend(
+                c.value for c in ast.walk(kw.value)
+                if isinstance(c, ast.Constant) and isinstance(c.value, str))
+        elif kw.arg == "static_argnums":
+            static_nums.extend(
+                c.value for c in ast.walk(kw.value)
+                if isinstance(c, ast.Constant) and isinstance(c.value, int))
+        elif kw.arg in ("donate_argnums", "donate_argnames"):
+            donated = True
+    return _JitMarker(static_names, static_nums, donated)
+
+
+def _collect_jitted(tree: ast.Module) -> dict:
+    """name -> (_JitMarker) for every function the module jits.
+
+    Three idioms are recognized: decorators (``@jax.jit``,
+    ``@partial(jax.jit, ...)``), wrap sites (``jax.jit(fn, ...)``), and
+    ``shard_map(fn, ...)`` (a shard-mapped body is traced the same way
+    once the caller jits it — every sharded search fn here is).
+    """
+    marked: dict[str, _JitMarker] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                info = None
+                if isinstance(dec, ast.Call):
+                    info = _jit_call_info(dec)
+                elif _attr_path(dec) in ("jax.jit", "jit"):
+                    info = _JitMarker()
+                if info is not None:
+                    marked[node.name] = info
+        elif isinstance(node, ast.Call):
+            path = _attr_path(node.func)
+            info = _jit_call_info(node)
+            if info is not None and node.args and isinstance(
+                    node.args[0], ast.Name):
+                marked.setdefault(node.args[0].id, info)
+            elif path is not None and path.split(".")[-1] == "shard_map" \
+                    and node.args and isinstance(node.args[0], ast.Name):
+                marked.setdefault(node.args[0].id,
+                                  _JitMarker(via_shard_map=True))
+    return marked
+
+
+class _TaintChecker:
+    """Walks one jitted function body, tracking which local names hold
+    traced values, and emits host-sync / traced-branch / implicit-dtype
+    findings."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef, marker: _JitMarker,
+                 findings: list):
+        self.path = path
+        self.fn = fn
+        self.findings = findings
+        args = fn.args
+        names = [a.arg for a in
+                 args.posonlyargs + args.args + args.kwonlyargs]
+        static = set(marker.static_names)
+        static.update(names[i] for i in marker.static_nums
+                      if 0 <= i < len(names))
+        self.params = set(names)
+        self.tainted = self.params - static
+
+    # -- taint ---------------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _UNTAINT_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fpath = _attr_path(node.func)
+            if fpath in _UNTAINT_CALLS:
+                return False
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "bit_length":
+                return False
+            args_tainted = any(self.is_tainted(a) for a in node.args) or \
+                any(self.is_tainted(kw.value) for kw in node.keywords)
+            if isinstance(node.func, ast.Attribute) and \
+                    self.is_tainted(node.func.value):
+                return True                      # traced.method(...)
+            return args_tainted
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.is_tainted(node.left) or \
+                any(self.is_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return any(self.is_tainted(n)
+                       for n in (node.test, node.body, node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        return False
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    # -- rules ---------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            rule, self.path, node.lineno, node.col_offset + 1, msg))
+
+    def _check_call(self, node: ast.Call) -> None:
+        fpath = _attr_path(node.func)
+        # host syncs
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _SYNC_METHODS and \
+                self.is_tainted(node.func.value):
+            self._emit("host-sync", node,
+                       f".{node.func.attr}() on a traced value inside "
+                       f"jitted '{self.fn.name}' blocks on device work — "
+                       "keep the value on device or hoist it out of jit")
+        elif fpath in _CAST_FUNCS and node.args and \
+                self.is_tainted(node.args[0]):
+            self._emit("host-sync", node,
+                       f"{fpath}() on a traced value inside jitted "
+                       f"'{self.fn.name}' forces a host sync — use "
+                       "jnp.astype / keep it traced")
+        elif _is_np_path(fpath) and fpath.split(".")[-1] in (
+                "asarray", "array") and node.args and \
+                self.is_tainted(node.args[0]):
+            self._emit("host-sync", node,
+                       f"{fpath}() materializes a traced value on host "
+                       f"inside jitted '{self.fn.name}' — use jnp.asarray")
+        elif fpath in ("jax.device_get",):
+            self._emit("host-sync", node,
+                       f"jax.device_get inside jitted '{self.fn.name}' "
+                       "is a host round-trip")
+        # implicit dtype on jnp creations
+        if fpath and _is_jnp_path(fpath):
+            base = fpath.split(".")[-1]
+            if base in _CREATION_MIN_POS:
+                has_dtype = any(kw.arg == "dtype" for kw in node.keywords) \
+                    or len(node.args) > _CREATION_MIN_POS[base]
+                if not has_dtype:
+                    self._emit(
+                        "implicit-dtype", node,
+                        f"jnp.{base}(...) without an explicit dtype inside "
+                        f"jitted '{self.fn.name}' — implicit dtypes let "
+                        "promotion drift into the compile signature")
+
+    def _branch_rule(self, node, test: ast.AST, kind: str) -> None:
+        if not self.is_tainted(test):
+            return
+        names = _const_names(test)
+        tainted_names = names & self.tainted
+        if tainted_names and tainted_names <= self.params:
+            self._emit(
+                "missing-static-argnames", node,
+                f"Python {kind} on traced parameter(s) "
+                f"{sorted(tainted_names)} of jitted '{self.fn.name}' — "
+                "declare them in static_argnames or rewrite with "
+                "jnp.where/lax.cond")
+        else:
+            self._emit(
+                "traced-branch", node,
+                f"Python {kind} on a traced value inside jitted "
+                f"'{self.fn.name}' — the branch is baked in at trace "
+                "time; use jnp.where/lax.cond")
+
+    def run(self) -> None:
+        self._walk(self.fn.body)
+
+    def _walk(self, body) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _exprs_in(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._check_call(sub)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs (scan bodies, cond branches) are traced too:
+            # their array params come in as tracers
+            _TaintChecker(self.path, stmt, _JitMarker(),
+                          self.findings).run()
+            return
+        if isinstance(stmt, ast.Assign):
+            self._exprs_in(stmt.value)
+            t = self.is_tainted(stmt.value)
+            for target in stmt.targets:
+                self._bind(target, t)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._exprs_in(stmt.value)
+            if self.is_tainted(stmt.value):
+                self._bind(stmt.target, True)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._exprs_in(stmt.value)
+            self._bind(stmt.target, self.is_tainted(stmt.value))
+            return
+        if isinstance(stmt, ast.If):
+            self._exprs_in(stmt.test)
+            self._branch_rule(stmt, stmt.test, "if")
+            self._walk(stmt.body)
+            self._walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self._exprs_in(stmt.test)
+            self._branch_rule(stmt, stmt.test, "while")
+            self._walk(stmt.body)
+            self._walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Assert):
+            self._exprs_in(stmt.test)
+            self._branch_rule(stmt, stmt.test, "assert")
+            return
+        if isinstance(stmt, ast.For):
+            self._exprs_in(stmt.iter)
+            if self.is_tainted(stmt.iter):
+                self._emit(
+                    "traced-branch", stmt,
+                    f"Python for-loop over a traced value inside jitted "
+                    f"'{self.fn.name}' — unrolls (or fails) at trace "
+                    "time; use lax.scan/fori_loop")
+                self._bind(stmt.target, True)
+            self._walk(stmt.body)
+            self._walk(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.With,)):
+            for item in stmt.items:
+                self._exprs_in(item.context_expr)
+            self._walk(stmt.body)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            self._walk(stmt.body)
+            for h in stmt.handlers:
+                self._walk(h.body)
+            self._walk(stmt.orelse)
+            self._walk(stmt.finalbody)
+            return
+        # Return / Expr / Raise / Pass / etc: just scan calls
+        self._exprs_in(stmt)
+
+
+def _check_scatter_donation(path: str, fn: ast.FunctionDef,
+                            marker: _JitMarker, findings: list) -> None:
+    """``scatter-not-donated``: a directly-jitted fn that updates one of
+    its own parameters in place must donate it."""
+    if marker.donated or marker.via_shard_map:
+        return
+    params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+              + fn.args.kwonlyargs}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "at" and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id in params:
+            findings.append(Finding(
+                "scatter-not-donated", path, node.lineno,
+                node.col_offset + 1,
+                f"jitted '{fn.name}' scatters into parameter "
+                f"'{node.value.id}' but the jax.jit wrapper declares no "
+                "donate_argnums — on accelerators the in-place update "
+                "becomes a copy"))
+            return
+
+
+# ---------------------------------------------------------------------------
+# non-pow2-pad: pads feeding jitted callables must come from a bucketer
+# ---------------------------------------------------------------------------
+
+
+def _is_bucketed_expr(node: ast.AST, bucketed: set) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fpath = _attr_path(sub.func)
+            if fpath and fpath.split(".")[-1] in _BUCKET_HELPERS:
+                return True
+            if isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "bit_length":
+                return True
+        if isinstance(sub, ast.Name) and sub.id in bucketed:
+            return True
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mult):
+            # ceil-to-multiple: -(-a // b) * b
+            for side in (sub.left, sub.right):
+                if any(isinstance(x, ast.BinOp)
+                       and isinstance(x.op, ast.FloorDiv)
+                       for x in ast.walk(side)):
+                    return True
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+            if sub.value > 0 and (sub.value & (sub.value - 1)) == 0:
+                return True
+    return False
+
+
+def _check_pads(path: str, fn: ast.FunctionDef, jitted_names: set,
+                findings: list) -> None:
+    calls_jit = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            fpath = _attr_path(node.func)
+            if fpath is None:
+                continue
+            leaf = fpath.split(".")[-1]
+            if leaf in ("_fn", "_delta_fn") or leaf in jitted_names:
+                calls_jit = True
+    if not calls_jit:
+        return
+    bucketed: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and \
+                _is_bucketed_expr(node.value, bucketed):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    bucketed.add(t.id)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        fpath = _attr_path(node.func)
+        if fpath is None:
+            continue
+        leaf = fpath.split(".")[-1]
+        size_expr = None
+        if leaf in _PAD_HELPERS and len(node.args) >= 2:
+            size_expr = node.args[1]
+        elif leaf in _PAD_FUNCS and len(node.args) >= 2:
+            size_expr = node.args[1]
+        if size_expr is None:
+            continue
+        names = _const_names(size_expr)
+        if not names:
+            continue                      # constant pad: shape is fixed
+        if _is_bucketed_expr(size_expr, bucketed):
+            continue
+        findings.append(Finding(
+            "non-pow2-pad", path, node.lineno, node.col_offset + 1,
+            f"'{fn.name}' pads an operand of a jitted callable to a size "
+            "not derived from a shape-bucketing helper (_pow2/_bucket/"
+            "ceil-to-multiple) — every distinct size is a fresh compile"))
+
+
+def check_module(path: str, tree: ast.Module) -> list:
+    findings: list = []
+    marked = _collect_jitted(tree)
+    fns = [n for n in ast.walk(tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    jitted_names = set(marked)
+    for fn in fns:
+        marker = marked.get(fn.name)
+        if marker is not None:
+            _TaintChecker(path, fn, marker, findings).run()
+            _check_scatter_donation(path, fn, marker, findings)
+        else:
+            _check_pads(path, fn, jitted_names, findings)
+    return findings

@@ -1,0 +1,101 @@
+"""Recompile-stability gate: registered jitted entry points must keep a
+fixed compile-signature set across mutation-perturbed shapes.
+
+``test_mutation.py`` spot-checks "no re-jit through mutations" for a few
+hand-picked flows; this gate makes the claim exhaustive per entry point.
+Each entry in :mod:`repro.analysis.registry` builds a real backend on a
+1-device mesh and returns a :class:`Plan` — an ordered list of
+``(label, thunk)`` steps (searches, mutations, delta applies, reboosts)
+plus a ``cache_size`` probe for the jitted callable under test.  The
+runner executes the steps in order, snapshots the compiled-variant count
+after the first (warm-up) step, and reports a ``recompile`` finding for
+every later step that changes it — with the step label, so the diff
+names the mutation that introduced the new compile trigger.
+
+Findings carry the source location of the entry point's builder in
+``registry.py`` so they participate in the same suppression mechanism
+as the static rules.  A builder or step that *raises* is reported as
+``entry-point-error`` — a gate that silently skips a broken entry point
+would report stability it never measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Iterable, Optional
+
+from repro.analysis.core import Finding
+
+__all__ = ["Plan", "run_entry_point", "run_recompile_gate"]
+
+
+@dataclasses.dataclass
+class Plan:
+    """One entry point's executable stability plan.
+
+    steps      : ordered ``(label, thunk)`` pairs; the first
+                 ``warmup_steps`` are warm-ups (their compiles are
+                 expected — one per distinct pow2 shape bucket the entry
+                 point legitimately serves)
+    cache_size : zero-arg probe returning the compiled-variant count of
+                 the jitted callable under test (< 0 = not measurable on
+                 this jax version; the plan is skipped)
+    """
+
+    steps: list
+    cache_size: Callable[[], int]
+    warmup_steps: int = 1
+
+
+def _loc(builder) -> tuple:
+    code = builder.__code__
+    path = code.co_filename
+    rel = os.path.relpath(path)
+    return (rel if not rel.startswith("..") else path,
+            code.co_firstlineno)
+
+
+def run_entry_point(name: str, builder: Callable[[], Plan]) -> list:
+    path, line = _loc(builder)
+    try:
+        plan = builder()
+    except Exception as e:
+        return [Finding(
+            "entry-point-error", path, line, 1,
+            f"{name}: builder failed: {e!r}")]
+    findings: list = []
+    baseline: Optional[int] = None
+    for step_i, (label, thunk) in enumerate(plan.steps):
+        try:
+            thunk()
+        except Exception as e:
+            findings.append(Finding(
+                "entry-point-error", path, line, 1,
+                f"{name}: step '{label}' failed: {e!r}"))
+            return findings
+        size = plan.cache_size()
+        if size < 0:
+            return findings          # no cache introspection: skip
+        if step_i < plan.warmup_steps or baseline is None:
+            baseline = size          # warm-up compiles are expected
+        elif size != baseline:
+            findings.append(Finding(
+                "recompile", path, line, 1,
+                f"{name}: step '{label}' changed the compile-signature "
+                f"set ({baseline} -> {size} cached variants) — a "
+                "mutation-perturbed shape reached the jitted entry "
+                "point"))
+            baseline = size          # report each new trigger once
+    return findings
+
+
+def run_recompile_gate(entry_points: Optional[Iterable[str]] = None) -> list:
+    """Run every registered entry point (or the named subset)."""
+    from repro.analysis.registry import ENTRY_POINTS
+
+    names = sorted(ENTRY_POINTS) if entry_points is None \
+        else list(entry_points)
+    findings: list = []
+    for name in names:
+        findings.extend(run_entry_point(name, ENTRY_POINTS[name]))
+    return findings

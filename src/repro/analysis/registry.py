@@ -1,0 +1,220 @@
+"""Registered jitted entry points for the recompile-stability gate.
+
+Each entry point builds the real serving object on a 1-device mesh and
+returns a :class:`repro.analysis.recompile.Plan` whose steps walk the
+index through its online lifecycle — mutations, delta applies, reboosts
+— while the jitted callable's compile cache is watched.  The invariant
+under test is the stack's core claim: **the search (and scatter) jitted
+at construction survives every mutation without a new compile**.
+
+Registering a new entry point (see docs/analysis.md):
+
+    from repro.analysis.recompile import Plan
+    from repro.analysis.registry import register_entry_point
+
+    @register_entry_point("my-kernel")
+    def _my_kernel():
+        thing = build_it()                     # compile happens here or
+        steps = [("warmup", lambda: thing(x)), # in the warm-up step
+                 ("mutate", lambda: mutate_and_call(thing))]
+        return Plan(steps=steps, cache_size=thing.jit_cache_size)
+
+Builders import jax lazily so the static passes never pay for it.
+Corpora are small (the gate checks *signatures*, not quality) and every
+shape-feeding size is kept inside the backend's headroom reservation —
+an outgrown reservation is a loud rebuild, not a silent recompile, and
+has its own test coverage.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.analysis.recompile import Plan
+
+__all__ = ["ENTRY_POINTS", "register_entry_point"]
+
+ENTRY_POINTS: Dict[str, Callable[[], Plan]] = {}
+
+_N, _D, _K = 96, 8, 4
+
+
+def register_entry_point(name: str):
+    """Register a Plan builder under ``name`` (last registration wins,
+    so tests can shadow real entry points with seeded ones)."""
+
+    def deco(builder: Callable[[], Plan]):
+        ENTRY_POINTS[name] = builder
+        return builder
+
+    return deco
+
+
+def _mesh1():
+    import jax
+
+    return jax.make_mesh((1,), ("data",))
+
+
+def _corpus(rng, n):
+    import numpy as np
+
+    c = rng.normal(size=(8, _D)) * 4
+    return (c[rng.integers(0, 8, n)]
+            + rng.normal(size=(n, _D))).astype(np.float32)
+
+
+def _index(rng, bottom: str):
+    import numpy as np
+
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+
+    db = _corpus(rng, _N)
+    cfg = TwoLevelConfig(
+        n_clusters=_K, top="brute", bottom=bottom, kmeans_iters=2,
+        kmeans_minibatch=None, bucket_cap=64, tree_leaf=4,
+        lsh_bits=16, pq_m=4)
+    p = (rng.dirichlet(np.full(_N, 0.5)).astype(np.float64)
+         if bottom == "qlbt" else None)
+    return db, build_two_level(db, cfg, p=p)
+
+
+def _localized_mutation(rng, idx):
+    """Delete a few rows of the fullest bucket, add mass near another
+    centroid — the canonical dirty-handful-of-buckets maintenance pass."""
+    import numpy as np
+
+    b = int(np.argmax(idx.bucket_counts))
+    dele = np.asarray(idx.bucket_ids[b][:3]).copy()
+    idx.delete_entities(dele)
+    new = (np.asarray(idx.centroids[1])[None, :]
+           + 0.1 * rng.normal(size=(3, _D))).astype(np.float32)
+    idx.add_entities(new)
+
+
+@register_entry_point("sharded-brute-search")
+def _sharded_brute_search() -> Plan:
+    import numpy as np
+
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(0)
+    db = _corpus(rng, _N)
+    be = ShardedSearchBackend(
+        _mesh1(), db, kind="brute", k=5, axes=("data",), headroom=2.0)
+    q = _corpus(rng, 4)
+    grown = np.concatenate([db, _corpus(rng, 16)])
+    alive = np.ones(grown.shape[0], bool)
+    alive[:5] = False
+
+    def grow():
+        be.apply_updates(grown)
+        be(q)
+
+    def tombstone():
+        be.apply_updates(grown, alive=alive)
+        be(q)
+
+    return Plan(
+        steps=[("warmup-search", lambda: be(q)),
+               ("full-republish-grown-corpus", grow),
+               ("full-republish-tombstones", tombstone)],
+        cache_size=be.jit_cache_size)
+
+
+@register_entry_point("brute-delta-scatter")
+def _brute_delta_scatter() -> Plan:
+    import numpy as np
+
+    from repro.core.delta import DeltaLog
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(1)
+    db = _corpus(rng, 64)
+    be = ShardedSearchBackend(
+        _mesh1(), db, kind="brute", k=5, axes=("data",), headroom=2.0)
+    log = DeltaLog(base_version=0, base_n=64)
+    state = {"db": db, "version": 0}
+
+    def apply_delta(n_append, n_tomb):
+        def step():
+            cur = state["db"]
+            if n_append:
+                state["db"] = np.concatenate(
+                    [cur, _corpus(rng, n_append)])
+            if n_tomb:
+                log.mark_tombstones(
+                    rng.choice(cur.shape[0], n_tomb, replace=False))
+            state["version"] += 1
+            man = log.pop(state["version"], state["db"].shape[0])
+            st = be.apply_updates(state["db"], delta=man)
+            assert st["mode"] == "delta", st
+
+        return step
+
+    # two warm-up shape buckets — append windows (rows pad to 4) and
+    # tombstone-only windows (rows pad to 1) — then re-drive both:
+    # same pow2 buckets, so the scatter must not compile again
+    return Plan(
+        steps=[("warmup-append-3-tombstone-2", apply_delta(3, 2)),
+               ("warmup-tombstone-only-2", apply_delta(0, 2)),
+               ("delta-append-4-tombstone-2", apply_delta(4, 2)),
+               ("delta-tombstone-only-2", apply_delta(0, 2))],
+        cache_size=lambda: (be._delta_fn._cache_size()
+                            if be._delta_fn is not None else -1),
+        warmup_steps=2)
+
+
+@register_entry_point("sharded-ivf-search")
+def _sharded_ivf_search() -> Plan:
+    import numpy as np
+
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(2)
+    _, idx = _index(rng, "brute")          # bucketed flat bottom -> IVF
+    be = ShardedSearchBackend(
+        _mesh1(), idx, k=5, axes=("data",), nprobe_local=_K,
+        headroom=2.0)
+    q = _corpus(rng, 4)
+
+    def mutate_and_apply():
+        _localized_mutation(rng, idx)
+        be.apply_updates(idx, delta=idx.pop_delta())
+        be(q)
+
+    return Plan(
+        steps=[("warmup-search", lambda: be(q)),
+               ("delta-republish-1", mutate_and_apply),
+               ("delta-republish-2", mutate_and_apply)],
+        cache_size=be.jit_cache_size)
+
+
+@register_entry_point("sharded-forest-search")
+def _sharded_forest_search() -> Plan:
+    import numpy as np
+
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(3)
+    _, idx = _index(rng, "qlbt")           # per-bucket trees -> forest
+    be = ShardedSearchBackend(
+        _mesh1(), idx, k=5, axes=("data",), nprobe_local=_K,
+        beam_width=8, headroom=1.5)
+    q = _corpus(rng, 4)
+
+    def mutate_and_apply():
+        _localized_mutation(rng, idx)
+        be.apply_updates(idx, delta=idx.pop_delta())
+        be(q)
+
+    def reboost_and_apply():
+        n_now = int(idx.db.shape[0])
+        idx.reboost(rng.dirichlet(np.full(n_now, 0.5)))
+        be.apply_updates(idx, delta=idx.pop_delta())
+        be(q)
+
+    return Plan(
+        steps=[("warmup-search", lambda: be(q)),
+               ("delta-republish", mutate_and_apply),
+               ("reboost-republish", reboost_and_apply)],
+        cache_size=be.jit_cache_size)

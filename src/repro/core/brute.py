@@ -73,7 +73,8 @@ def l2_topk_exact(
         jnp.full((B, k), jnp.inf, jnp.float32),
         jnp.full((B, k), -1, jnp.int32),
     )
-    (d, i), _ = jax.lax.scan(step, best0, jnp.arange(n_chunks))
+    (d, i), _ = jax.lax.scan(step, best0,
+                        jnp.arange(n_chunks, dtype=jnp.int32))
     return d, i
 
 

@@ -5,7 +5,7 @@ The online lifecycle (``add_entities`` / ``delete_entities`` /
 traffic, but republishing it to a serving backend used to ship the whole
 corpus even when a maintenance pass touched a handful of buckets.  A
 :class:`DeltaManifest` closes that gap: every mutation records which
-buckets (and, for single trees, which leaf rows) it dirtied, and
+buckets it dirtied (and which entities it tombstoned), and
 ``pop_delta()`` emits the accumulated record so
 ``ShardedSearchBackend.apply_updates(target, delta=...)`` can re-place
 only the dirty slices (see ``repro/distributed/backend.py``).
@@ -52,13 +52,9 @@ class DeltaManifest:
                    vectors, or per-bucket tree changed
     tombstones   : entity ids deleted in the window (already absent from
                    ``bucket_ids``; named so flat/valid-mask consumers can
-                   flip their liveness bits)
-    leaf_rows    : single-tree indexes only — leaf-table rows masked in
-                   place by deletes (forest indexes express the same
-                   information through ``dirty_buckets``).  Recorded for
-                   manifest completeness; no device republish path
-                   consumes it yet (single-tree serving republishes by
-                   reference via ``HostIndexBackend``)
+                   flip their liveness bits — single-tree deletes are
+                   fully described by these plus the in-place leaf
+                   masking they already performed)
     lsh_rows_appended : packed LSH code rows appended under the shared
                    projections (code tables are append-only between
                    rebuilds)
@@ -72,7 +68,6 @@ class DeltaManifest:
     n: int
     dirty_buckets: np.ndarray = _EMPTY
     tombstones: np.ndarray = _EMPTY
-    leaf_rows: np.ndarray = _EMPTY
     lsh_rows_appended: int = 0
     full: bool = False
 
@@ -82,7 +77,6 @@ class DeltaManifest:
         return (not self.full
                 and self.dirty_buckets.size == 0
                 and self.tombstones.size == 0
-                and self.leaf_rows.size == 0
                 and self.lsh_rows_appended == 0
                 and self.n == self.base_n)
 
@@ -112,7 +106,6 @@ class DeltaLog:
     base_n: int
     dirty: set = dataclasses.field(default_factory=set)
     tombstones: list = dataclasses.field(default_factory=list)
-    leaf_rows: set = dataclasses.field(default_factory=set)
     lsh_rows: int = 0
     full: bool = False
 
@@ -121,9 +114,6 @@ class DeltaLog:
 
     def mark_tombstones(self, ids) -> None:
         self.tombstones.extend(int(e) for e in np.atleast_1d(ids))
-
-    def mark_leaf_rows(self, rows) -> None:
-        self.leaf_rows.update(int(r) for r in np.atleast_1d(rows))
 
     def mark_full(self) -> None:
         self.full = True
@@ -141,10 +131,6 @@ class DeltaLog:
                 np.fromiter(self.tombstones, dtype=np.int64,
                             count=len(self.tombstones))
             ),
-            leaf_rows=np.sort(
-                np.fromiter(self.leaf_rows, dtype=np.int64,
-                            count=len(self.leaf_rows))
-            ),
             lsh_rows_appended=self.lsh_rows,
             full=self.full,
         )
@@ -152,7 +138,6 @@ class DeltaLog:
         self.base_n = n
         self.dirty = set()
         self.tombstones = []
-        self.leaf_rows = set()
         self.lsh_rows = 0
         self.full = False
         return man

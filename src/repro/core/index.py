@@ -156,8 +156,7 @@ class SearchIndex:
         self._ensure_alive()
         ids = np.asarray(ids)
         self.alive[ids] = False
-        rows = self.tree.drop_entities(ids)
-        self.delta_log.mark_leaf_rows(rows)
+        self.tree.drop_entities(ids)
         self.delta_log.mark_tombstones(ids)
         self.mutation_version += 1
         if self.base_tree is not None and self.base_tree is not self.tree:

@@ -539,10 +539,9 @@ class FlatTree:
         but the dropped ids can never be returned.  This is the cheap half
         of the mutation model — rebuild (``build_qlbt``/``build_rp_tree``)
         when enough mass has been dropped that depth quality matters.
-        Returns the leaf-table rows that were masked, recorded into
-        ``repro.core.delta.DeltaManifest.leaf_rows`` (manifest metadata;
-        host-resident serving republishes by reference, so no consumer
-        ships these rows yet).
+        Returns the leaf-table rows that were masked.  The delta manifest
+        does not record them — the tombstoned *entity ids* fully describe
+        the change, and host-resident serving republishes by reference.
         """
         ids = np.asarray(ids)
         if ids.size == 0 or self.leaf_entities.size == 0:

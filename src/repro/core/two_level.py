@@ -711,7 +711,7 @@ def _rerank(db, q, cand, k):
         axis=1,
     )
     dup = jnp.zeros(cand.shape, bool) \
-        .at[jnp.arange(B)[:, None], order].set(dup_sorted)
+        .at[jnp.arange(B, dtype=jnp.int32)[:, None], order].set(dup_sorted)
     d2 = jnp.where(dup, jnp.inf, d2)
     k = min(k, cand.shape[1])
     neg, sel = jax.lax.top_k(-d2, k)

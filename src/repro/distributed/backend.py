@@ -52,6 +52,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.annotations import guarded_by
 from repro.distributed.sharding import (
     _axes_size,
     _brute_device_arrays,
@@ -118,6 +119,7 @@ class ShardedSearchBackend:
         self.delta_max_fraction = delta_max_fraction
         self._lock = threading.Lock()
         self._delta_fn = None
+        self._delta_fn_masked = None     # brute explicit-alive path
         self._version: Optional[int] = None
         self._n = 0                      # real corpus rows last placed
         self._full_bytes = 0             # host bytes of a full re-place
@@ -167,6 +169,7 @@ class ShardedSearchBackend:
         return NamedSharding(
             self.mesh, P(self.axes, *([None] * (ndim - 1))))
 
+    @guarded_by("_lock")
     def _place(self, target, alive=None) -> None:
         """Pad/shard/device_put ``target`` into the recorded shapes."""
         put = lambda x, spec: jax.device_put(
@@ -219,12 +222,19 @@ class ShardedSearchBackend:
         """
         donate_ok = jax.default_backend() != "cpu"
         if self.kind == "brute":
-            spec = self._corpus_spec(2)
+            specs = (self._corpus_spec(2), self._corpus_spec(1))
 
-            @partial(jax.jit, donate_argnums=(0,) if donate_ok else (),
-                     out_shardings=spec)
-            def fn(db, rows, vals):
-                return db.at[rows].set(vals, mode="drop")
+            @partial(jax.jit, donate_argnums=(0, 1) if donate_ok else (),
+                     out_shardings=specs)
+            def fn(db, valid, rows, vals, tomb):
+                # liveness is cumulative ON DEVICE: appended rows flip
+                # alive, tombstones flip dead, everything else keeps the
+                # bits earlier windows left — a tombstone-only manifest
+                # ships two index vectors, not the whole mask
+                db = db.at[rows].set(vals, mode="drop")
+                valid = valid.at[rows].set(True, mode="drop")
+                valid = valid.at[tomb].set(False, mode="drop")
+                return db, valid
 
             return fn
         if self.kind == "ivf":
@@ -253,8 +263,8 @@ class ShardedSearchBackend:
                u_cents, u_valid, u_roots, u_bids, u_bvecs, u_proj,
                u_dims, u_tau, u_children, u_leaf_row, u_leaf_ents):
             sh1 = shard[:, None]
-            nrow = slot[:, None] * ns + jnp.arange(ns)[None, :]
-            lrow = slot[:, None] * ls + jnp.arange(ls)[None, :]
+            nrow = slot[:, None] * ns + jnp.arange(ns, dtype=jnp.int32)[None, :]
+            lrow = slot[:, None] * ls + jnp.arange(ls, dtype=jnp.int32)[None, :]
             cents = cents.at[shard, slot].set(u_cents, mode="drop")
             valid = valid.at[shard, slot].set(u_valid, mode="drop")
             roots = roots.at[shard, slot].set(u_roots, mode="drop")
@@ -269,6 +279,19 @@ class ShardedSearchBackend:
                                                     mode="drop")
             return (cents, valid, roots, bids, bvecs, proj, dims, tau,
                     children, leaf_row, leaf_ents)
+
+        return fn
+
+    def _make_masked_delta_fn(self):
+        """Brute-kind scatter for the explicit-``alive`` path: the caller
+        ships the complete liveness truth as a mask, so only the corpus
+        rows are scattered and the mask is re-placed wholesale."""
+        donate_ok = jax.default_backend() != "cpu"
+
+        @partial(jax.jit, donate_argnums=(0,) if donate_ok else (),
+                 out_shardings=self._corpus_spec(2))
+        def fn(db, rows, vals):
+            return db.at[rows].set(vals, mode="drop")
 
         return fn
 
@@ -309,28 +332,31 @@ class ShardedSearchBackend:
             rows_tot = self._rows * self.n_dev
             new = np.arange(delta.base_n, n, dtype=np.int32)
             vals = db[delta.base_n:n]
-            if alive is not None:
-                # caller supplied the complete liveness truth
-                valid = np.arange(rows_tot) < n
-                valid[:n] &= np.asarray(alive, bool)
-            else:
-                # cumulative liveness: start from the mask on device so
-                # tombstones from EARLIER delta windows survive this
-                # one; rows appended in this window start alive
-                valid = np.asarray(jax.device_get(self._args[1])).copy()
-                valid[delta.base_n:n] = True
-            if delta.tombstones.size:
-                # this window's flips apply either way — a tombstoned
-                # row must never be resurrected by a delta republish
-                valid[delta.tombstones] = False
             u = _pow2(new.size)
-            return {
+            pay = {
                 "rows": _pad_rows(new, u, fill=rows_tot),
                 "vals": _pad_rows(vals, u),
-                "valid": valid,
                 "n": n,
-                "bytes": int(vals.nbytes + new.nbytes + valid.nbytes),
-            }, None
+            }
+            if alive is not None:
+                # caller supplied the complete liveness truth: ship the
+                # whole mask (it IS the payload — nothing to delta)
+                valid = np.arange(rows_tot) < n
+                valid[:n] &= np.asarray(alive, bool)
+                if delta.tombstones.size:
+                    valid[delta.tombstones] = False
+                pay["valid"] = valid
+                pay["bytes"] = int(vals.nbytes + new.nbytes + valid.nbytes)
+            else:
+                # tombstone-only (and append) windows ship two index
+                # vectors; the device mask keeps the bits from earlier
+                # windows, so liveness stays cumulative without ever
+                # pulling the mask back to host
+                tomb = np.asarray(delta.tombstones, np.int32)
+                pay["tomb"] = _pad_rows(tomb, _pow2(tomb.size),
+                                        fill=rows_tot)
+                pay["bytes"] = int(vals.nbytes + new.nbytes + tomb.nbytes)
+            return pay, None
         if self._version is None or delta.base_version > self._version:
             return None, "version"
         if self.kind == "ivf":
@@ -357,14 +383,24 @@ class ShardedSearchBackend:
             pay[name] = _pad_rows(np.asarray(pay[name]), u)
         return pay, None
 
+    @guarded_by("_lock")
     def _apply_delta(self, pay) -> None:
-        if self._delta_fn is None:
-            self._delta_fn = self._make_delta_fn()
-        if self.kind == "brute":
-            db = self._delta_fn(self._args[0], pay["rows"], pay["vals"])
+        if self.kind == "brute" and "valid" in pay:
+            if self._delta_fn_masked is None:
+                self._delta_fn_masked = self._make_masked_delta_fn()
+            db = self._delta_fn_masked(
+                self._args[0], pay["rows"], pay["vals"])
             valid = jax.device_put(
                 pay["valid"], NamedSharding(self.mesh, P(self.axes)))
             self._args = (db, valid)
+            self._n = pay["n"]
+            return
+        if self._delta_fn is None:
+            self._delta_fn = self._make_delta_fn()
+        if self.kind == "brute":
+            self._args = self._delta_fn(
+                self._args[0], self._args[1], pay["rows"], pay["vals"],
+                pay["tomb"])
         elif self.kind == "ivf":
             self._args = self._delta_fn(
                 *self._args, pay["rows"], pay["cents"],
@@ -397,15 +433,18 @@ class ShardedSearchBackend:
         """
         with self._lock:
             stats = self._apply_locked(target, alive, delta)
-        self.last_republish = stats
-        self.republished_bytes += stats["bytes"]
-        self.republish_full_bytes += stats["full_bytes"]
-        if stats["mode"] == "delta":
-            self.n_delta_applies += 1
-        elif stats["mode"] == "full":
-            self.n_full_applies += 1
+            # counters stay under the lock: two maintenance passes
+            # applying concurrently would lose increments otherwise
+            self.last_republish = stats
+            self.republished_bytes += stats["bytes"]
+            self.republish_full_bytes += stats["full_bytes"]
+            if stats["mode"] == "delta":
+                self.n_delta_applies += 1
+            elif stats["mode"] == "full":
+                self.n_full_applies += 1
         return stats
 
+    @guarded_by("_lock")
     def _apply_locked(self, target, alive, delta) -> dict:
         reason = None
         if delta is None:

@@ -318,7 +318,7 @@ def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
         init = (jnp.full((B, k), jnp.inf, jnp.float32),
                 jnp.full((B, k), -1, jnp.int32))
         (ld, li), _ = jax.lax.scan(scan_probe, init,
-                                   jnp.arange(nprobe_local))
+                                   jnp.arange(nprobe_local, dtype=jnp.int32))
         gd = jax.lax.all_gather(ld, axes, tiled=False)
         gi = jax.lax.all_gather(li, axes, tiled=False)
         return _merge_gathered(gd, gi, k)

@@ -102,6 +102,10 @@ class ServingEngine:
         self.hedges = 0
         self.republished_bytes = 0
         self.republish_full_bytes = 0
+        # one lock for every telemetry counter: the batch worker, hedge
+        # path, callers of search()/apply_updates(), and stats() readers
+        # all touch these from different threads
+        self._stats_lock = threading.Lock()
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -174,10 +178,12 @@ class ServingEngine:
         # the gauges count bytes shipped to EVERY backend — a hedge
         # replica that fell back to a full re-place must show up even
         # when the primary took the delta path
-        for st in (stats, hstats):
-            if isinstance(st, dict):
-                self.republished_bytes += int(st.get("bytes", 0))
-                self.republish_full_bytes += int(st.get("full_bytes", 0))
+        with self._stats_lock:
+            for st in (stats, hstats):
+                if isinstance(st, dict):
+                    self.republished_bytes += int(st.get("bytes", 0))
+                    self.republish_full_bytes += int(
+                        st.get("full_bytes", 0))
         if self.cache is not None:
             # invalidate AFTER the swap: the generation token handed out
             # at miss time stops in-flight pre-swap results from being
@@ -214,7 +220,8 @@ class ServingEngine:
                     try:
                         self.estimator.observe(np.asarray(hit[1])[:1])
                     except Exception:
-                        self.estimator_errors += 1
+                        with self._stats_lock:
+                            self.estimator_errors += 1
                 return hit
         try:
             out = self.submit(query).get(timeout=timeout)
@@ -264,15 +271,18 @@ class ServingEngine:
             d, i = result
             for j, r in enumerate(batch):
                 r.future.put((np.asarray(d[j]), np.asarray(i[j])))
-                self.latencies.append(t1 - r.t_enqueue)
-                self.queue_waits.append(t0 - r.t_enqueue)
-            self.batch_sizes.append(b)
+            with self._stats_lock:
+                for r in batch:
+                    self.latencies.append(t1 - r.t_enqueue)
+                    self.queue_waits.append(t0 - r.t_enqueue)
+                self.batch_sizes.append(b)
             if self.estimator is not None:
                 try:
                     top = np.asarray(i)[:b, 0]
                     self.estimator.observe(top)
                 except Exception:       # telemetry must never kill serving
-                    self.estimator_errors += 1
+                    with self._stats_lock:
+                        self.estimator_errors += 1
 
     def _dispatch(self, qs):
         if self.hedge_fn is None:
@@ -288,7 +298,8 @@ class ServingEngine:
         t = threading.Thread(target=primary, daemon=True)
         t.start()
         if not done.wait(self.hedge_ms / 1e3):
-            self.hedges += 1
+            with self._stats_lock:
+                self.hedges += 1
             out = self.hedge_fn(qs)      # replica answers the hedge
             holder.setdefault("out", out)
             done.set()
@@ -297,20 +308,26 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> EngineStats:
-        a = np.asarray(self.latencies) * 1e3
-        qw = np.asarray(self.queue_waits) * 1e3
+        with self._stats_lock:
+            # snapshot under the lock so a stats() racing the batch
+            # worker never sees a latency without its queue_wait twin
+            a = np.asarray(self.latencies) * 1e3
+            qw = np.asarray(self.queue_waits) * 1e3
+            batch_sizes = self.batch_sizes[-100:]
+            hedges = self.hedges
+            rb = self.republished_bytes
+            rfb = self.republish_full_bytes
         ch = cm = 0
         drift = 0.0
         if self.cache is not None:
             ch, cm = self.cache.hits, self.cache.misses
         if self.estimator is not None:
             drift = float(self.estimator.drift()["tv"])
-        frac = (self.republished_bytes / self.republish_full_bytes
-                if self.republish_full_bytes else 0.0)
+        frac = rb / rfb if rfb else 0.0
         if a.size == 0:
-            return EngineStats(0, 0, 0, 0, 0, 0, [], self.hedges,
+            return EngineStats(0, 0, 0, 0, 0, 0, [], hedges,
                                cache_hits=ch, cache_misses=cm, drift=drift,
-                               republished_bytes=self.republished_bytes,
+                               republished_bytes=rb,
                                delta_fraction=frac)
         return EngineStats(
             n=a.size,
@@ -319,11 +336,11 @@ class ServingEngine:
             p99_ms=float(np.percentile(a, 99)),
             mean_ms=float(a.mean()),
             queue_ms=float(qw.mean()),
-            batch_sizes=self.batch_sizes[-100:],
-            hedges=self.hedges,
+            batch_sizes=batch_sizes,
+            hedges=hedges,
             cache_hits=ch,
             cache_misses=cm,
             drift=drift,
-            republished_bytes=self.republished_bytes,
+            republished_bytes=rb,
             delta_fraction=frac,
         )

@@ -1,0 +1,562 @@
+"""Self-test for repro.analysis: each rule family must catch its seeded
+violations and stay quiet on the equivalent clean code.
+
+Static rules are exercised through ``run_static_analysis`` on temp files
+so the suppression reconciliation is part of the loop; the recompile
+gate is exercised through ``run_entry_point`` on synthetic jitted entry
+points seeded with the three classic triggers (varying shape, dtype
+change, varying non-static arg).  The last test runs the whole static
+pass over ``src/repro`` — the tree must be clean, which is exactly what
+the CI lint job enforces.
+"""
+import os
+import textwrap
+
+import pytest
+
+from conftest import REPO
+from repro.analysis import run_static_analysis
+from repro.analysis.recompile import Plan, run_entry_point
+from repro.analysis.registry import ENTRY_POINTS, register_entry_point
+
+
+def lint(tmp_path, source, name="mod.py", **kw):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    active, suppressed = run_static_analysis([str(p)], **kw)
+    return active, suppressed
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# rule family 1: JAX compile-path lint
+# ---------------------------------------------------------------------------
+
+
+class TestJaxLint:
+    def test_host_sync_three_ways(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax, numpy as np
+
+            @jax.jit
+            def f(x, y, z):
+                a = x.item()
+                b = float(y.sum())
+                c = np.asarray(z)
+                return a + b + c.sum()
+        """)
+        assert rules_of(active) == ["host-sync"] * 3
+
+    def test_host_sync_quiet_on_clean(self, tmp_path):
+        # shape/dtype reads are static; jnp.asarray stays on device;
+        # .item() outside jit is ordinary host code
+        active, _ = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                n = x.shape[0]
+                y = jnp.asarray(x, dtype=x.dtype)
+                return y * n
+
+            def host_side(x):
+                return x.item()
+        """)
+        assert active == []
+
+    def test_traced_branch_if_while_for(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                s = x.sum()
+                if s > 0:
+                    x = x + 1
+                while s > 0:
+                    s = s - 1
+                for row in x:
+                    s = s + row.sum()
+                return s
+        """)
+        assert rules_of(active) == ["traced-branch"] * 3
+
+    def test_branch_on_shape_is_clean(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 2:
+                    return x[:2]
+                return x
+        """)
+        assert active == []
+
+    def test_missing_static_argnames_and_fix(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x, k):
+                if k > 3:
+                    return x[:3]
+                return x[:k]
+        """)
+        assert rules_of(active) == ["missing-static-argnames"]
+        active, _ = lint(tmp_path, """
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, static_argnames=("k",))
+            def f(x, k):
+                if k > 3:
+                    return x[:3]
+                return x[:k]
+        """, name="fixed.py")
+        assert active == []
+
+    def test_implicit_dtype_three_creations(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                a = jnp.zeros(4)
+                b = jnp.arange(x.shape[0])
+                c = jnp.full((2, 2), 7)
+                return a.sum() + b.sum() + c.sum() + x.sum()
+        """)
+        assert rules_of(active) == ["implicit-dtype"] * 3
+
+    def test_explicit_dtype_is_clean(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                a = jnp.zeros(4, dtype=jnp.float32)
+                b = jnp.arange(x.shape[0], dtype=jnp.int32)
+                return a.sum() + b.sum() + x.sum()
+        """)
+        assert active == []
+
+    def test_scatter_not_donated_and_donated(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def scatter(db, rows, vals):
+                return db.at[rows].set(vals)
+        """)
+        assert rules_of(active) == ["scatter-not-donated"]
+        active, _ = lint(tmp_path, """
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def scatter(db, rows, vals):
+                return db.at[rows].set(vals)
+        """, name="donated.py")
+        assert active == []
+
+    def test_scatter_in_wrap_site_jit(self, tmp_path):
+        # jit applied at a wrap site, not as a decorator
+        active, _ = lint(tmp_path, """
+            import jax
+
+            def scatter(db, rows, vals):
+                return db.at[rows].set(vals)
+
+            scatter_j = jax.jit(scatter)
+        """)
+        assert rules_of(active) == ["scatter-not-donated"]
+
+    def test_non_pow2_pad_vs_bucketed(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def kernel(q):
+                return q * 2
+
+            def _pow2(n):
+                return 1 << max(0, int(n - 1).bit_length())
+
+            def serve_bad(q):
+                n = q.shape[0] + 3
+                q = np.pad(q, n)
+                return kernel(q)
+
+            def serve_good(q):
+                n = _pow2(q.shape[0])
+                q = np.pad(q, n)
+                return kernel(q)
+
+            def serve_const(q):
+                q = np.pad(q, 16)
+                return kernel(q)
+        """)
+        assert rules_of(active) == ["non-pow2-pad"]
+        assert "serve_bad" in active[0].message
+
+    def test_pad_without_jit_call_is_out_of_scope(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import numpy as np
+
+            def host_only(q, n):
+                return np.pad(q, n + 3)
+        """)
+        assert active == []
+
+
+# ---------------------------------------------------------------------------
+# rule family 2: lock discipline
+# ---------------------------------------------------------------------------
+
+_LOCKED_CLASS = """
+    import threading
+    from repro.analysis.annotations import guarded_by
+
+    class Engine:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0          # __init__ writes are exempt
+            self.items = []
+            self.total = 0
+
+        def good(self):
+            with self._lock:
+                self.count = 1
+                self.items.append(1)
+                self.total += 1
+
+        def bad_assign(self):
+            self.count = 2
+
+        def bad_mutator(self):
+            self.items.append(2)
+
+        def bad_augassign(self):
+            self.total += 2
+"""
+
+
+class TestLockDiscipline:
+    def test_three_unguarded_write_kinds(self, tmp_path):
+        active, _ = lint(tmp_path, _LOCKED_CLASS)
+        assert rules_of(active) == ["unguarded-write"] * 3
+        msgs = " ".join(f.message for f in active)
+        for m in ("bad_assign", "bad_mutator", "bad_augassign"):
+            assert m in msgs
+
+    def test_guarded_by_annotation_satisfies(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import threading
+            from repro.analysis.annotations import guarded_by
+
+            class Engine:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0
+
+                def caller(self):
+                    with self._lock:
+                        self._bump()
+
+                @guarded_by("_lock")
+                def _bump(self):
+                    self.count += 1
+        """)
+        assert active == []
+
+    def test_unguarded_call_of_guarded_method(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import threading
+            from repro.analysis.annotations import guarded_by
+
+            class Engine:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0
+
+                def caller(self):
+                    self._bump()
+
+                @guarded_by("_lock")
+                def _bump(self):
+                    self.count += 1
+        """)
+        assert rules_of(active) == ["unguarded-call"]
+
+    def test_unknown_lock_annotation(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import threading
+            from repro.analysis.annotations import guarded_by
+
+            class Engine:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0
+
+                @guarded_by("_mutex")
+                def bump(self):
+                    with self._lock:
+                        self.count += 1
+        """)
+        assert "unknown-lock" in rules_of(active)
+
+    def test_closure_runs_without_the_lock(self, tmp_path):
+        # a nested def is a thread target: even when the enclosing block
+        # holds the lock, the closure body executes later, without it
+        active, _ = lint(tmp_path, """
+            import threading
+
+            class Engine:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0
+
+                def tick(self):
+                    with self._lock:
+                        self.count += 1
+
+                def dispatch(self):
+                    with self._lock:
+                        def primary():
+                            self.count += 1
+                        return primary
+        """)
+        assert rules_of(active) == ["unguarded-write"]
+        assert active[0].message.startswith("Engine.dispatch")
+
+    def test_class_without_lock_is_skipped(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            class Plain:
+                def __init__(self):
+                    self.count = 0
+
+                def bump(self):
+                    self.count += 1
+        """)
+        assert active == []
+
+
+# ---------------------------------------------------------------------------
+# suppression hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestSuppressions:
+    def test_same_line_suppression(self, tmp_path):
+        active, suppressed = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                return jnp.zeros(4) + x  # repro: allow(implicit-dtype): seeded
+        """)
+        assert active == []
+        assert rules_of(suppressed) == ["implicit-dtype"]
+
+    def test_line_above_suppression(self, tmp_path):
+        active, suppressed = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                # repro: allow(implicit-dtype): seeded
+                return jnp.zeros(4) + x
+        """)
+        assert active == []
+        assert rules_of(suppressed) == ["implicit-dtype"]
+
+    def test_bare_allow_is_reported(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                return jnp.zeros(4) + x  # repro: allow(implicit-dtype)
+        """)
+        assert "bad-suppression" in rules_of(active)
+
+    def test_unknown_rule_id_is_reported(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            x = 1  # repro: allow(made-up-rule): no such rule
+        """)
+        assert "unknown-rule" in rules_of(active)
+        assert "unused-suppression" in rules_of(active)
+
+    def test_unused_suppression_is_reported(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            x = 1  # repro: allow(host-sync): nothing to suppress here
+        """)
+        assert rules_of(active) == ["unused-suppression"]
+
+    def test_suppression_does_not_leak_to_far_lines(self, tmp_path):
+        active, _ = lint(tmp_path, """
+            import jax, jax.numpy as jnp
+
+            # repro: allow(implicit-dtype): too far away to cover
+
+            @jax.jit
+            def f(x):
+                return jnp.zeros(4) + x
+        """)
+        assert rules_of(active) == ["implicit-dtype", "unused-suppression"]
+
+
+# ---------------------------------------------------------------------------
+# rule family 3: recompile-stability gate (synthetic seeded entry points)
+# ---------------------------------------------------------------------------
+
+
+def _jitted_sum():
+    import jax
+
+    @jax.jit
+    def f(x):
+        return x.sum()
+
+    return f
+
+
+def _plan_of(steps, fn, warmup=1):
+    return Plan(steps=steps,
+                cache_size=lambda: fn._cache_size(),
+                warmup_steps=warmup)
+
+
+class TestRecompileGate:
+    def test_varying_shape_triggers(self):
+        import numpy as np
+
+        f = _jitted_sum()
+
+        def builder():
+            return _plan_of(
+                [("warmup", lambda: f(np.zeros(4, np.float32))),
+                 ("grown-shape", lambda: f(np.zeros(5, np.float32)))], f)
+
+        found = run_entry_point("seeded-shape", builder)
+        assert rules_of(found) == ["recompile"]
+        assert "grown-shape" in found[0].message
+
+    def test_dtype_change_triggers(self):
+        import numpy as np
+
+        f = _jitted_sum()
+
+        def builder():
+            return _plan_of(
+                [("warmup", lambda: f(np.zeros(4, np.float32))),
+                 ("dtype-change", lambda: f(np.zeros(4, np.int32)))], f)
+
+        found = run_entry_point("seeded-dtype", builder)
+        assert rules_of(found) == ["recompile"]
+
+    def test_varying_static_arg_triggers(self):
+        import jax
+        import numpy as np
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("k",))
+        def topk(x, k):
+            return jax.lax.top_k(x, k)
+
+        def builder():
+            x = np.arange(8, dtype=np.float32)
+            return _plan_of(
+                [("warmup", lambda: topk(x, 2)),
+                 ("new-static-value", lambda: topk(x, 3))], topk)
+
+        found = run_entry_point("seeded-static", builder)
+        assert rules_of(found) == ["recompile"]
+
+    def test_stable_shapes_stay_quiet(self):
+        import numpy as np
+
+        f = _jitted_sum()
+        x = np.zeros(4, np.float32)
+
+        def builder():
+            return _plan_of(
+                [("warmup", lambda: f(x)),
+                 ("repeat-1", lambda: f(x + 1)),
+                 ("repeat-2", lambda: f(x + 2))], f)
+
+        assert run_entry_point("seeded-stable", builder) == []
+
+    def test_multi_bucket_warmup_is_respected(self):
+        import numpy as np
+
+        f = _jitted_sum()
+
+        def builder():
+            return _plan_of(
+                [("warmup-a", lambda: f(np.zeros(4, np.float32))),
+                 ("warmup-b", lambda: f(np.zeros(8, np.float32))),
+                 ("replay-a", lambda: f(np.ones(4, np.float32))),
+                 ("replay-b", lambda: f(np.ones(8, np.float32)))],
+                f, warmup=2)
+
+        assert run_entry_point("seeded-two-buckets", builder) == []
+
+    def test_builder_failure_is_a_finding(self):
+        def builder():
+            raise RuntimeError("boom")
+
+        found = run_entry_point("seeded-broken", builder)
+        assert rules_of(found) == ["entry-point-error"]
+        assert "boom" in found[0].message
+
+    def test_step_failure_is_a_finding(self):
+        f = _jitted_sum()
+
+        def bad_step():
+            raise ValueError("step boom")
+
+        def builder():
+            return _plan_of([("bad", bad_step)], f)
+
+        found = run_entry_point("seeded-bad-step", builder)
+        assert rules_of(found) == ["entry-point-error"]
+        assert "step boom" in found[0].message
+
+    def test_register_entry_point_shadowing(self):
+        before = dict(ENTRY_POINTS)
+        try:
+            @register_entry_point("seeded-shadow")
+            def _seed():
+                return Plan(steps=[], cache_size=lambda: 0)
+
+            assert ENTRY_POINTS["seeded-shadow"] is _seed
+
+            @register_entry_point("seeded-shadow")
+            def _seed2():
+                return Plan(steps=[], cache_size=lambda: 0)
+
+            assert ENTRY_POINTS["seeded-shadow"] is _seed2
+        finally:
+            ENTRY_POINTS.clear()
+            ENTRY_POINTS.update(before)
+
+    def test_real_entry_points_are_registered(self):
+        for name in ("sharded-brute-search", "brute-delta-scatter",
+                     "sharded-ivf-search", "sharded-forest-search"):
+            assert name in ENTRY_POINTS
+
+
+# ---------------------------------------------------------------------------
+# the gate the CI lint job enforces: src/repro itself is clean
+# ---------------------------------------------------------------------------
+
+
+def test_repo_tree_is_clean():
+    active, _ = run_static_analysis([os.path.join(REPO, "src", "repro")])
+    assert active == [], "\n".join(f.format() for f in active)

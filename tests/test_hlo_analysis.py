@@ -1,0 +1,206 @@
+"""Regex-parsing tests for repro.launch.hlo_analysis on synthetic HLO.
+
+The roofline's inputs come from text parses of post-optimization HLO
+dumps; XLA's dump format varies (typed vs untyped dot operands, async
+collective pairs), so each variant gets a fixture here.  Weighting is
+checked against the nested-while trip-count product by hand.
+"""
+import textwrap
+
+from repro.launch.hlo_analysis import analyze_hlo, peak_liveness
+
+
+def hlo(s: str) -> str:
+    return textwrap.dedent(s).strip("\n") + "\n"
+
+
+_TYPED_DOT = hlo("""
+    %cond.1 (arg.1: (s32[], f32[8,64])) -> pred[] {
+      %arg.1 = (s32[], f32[8,64]) parameter(0)
+      %i.1 = s32[] get-tuple-element(%arg.1), index=0
+      %limit.1 = s32[] constant(12)
+      ROOT %lt.1 = pred[] compare(%i.1, %limit.1), direction=LT
+    }
+
+    %body.1 (arg.2: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+      %lhs = f32[8,64]{1,0} parameter(0)
+      %rhs = f32[64,32]{1,0} parameter(1)
+      %d = f32[8,32]{1,0} dot(f32[8,64]{1,0} %lhs, f32[64,32]{1,0} %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    ENTRY %main (p0: f32[8,64]) -> f32[8,32] {
+      %p0 = f32[8,64]{1,0} parameter(0)
+      ROOT %w = (s32[], f32[8,64]) while((s32[], f32[8,64]) %p0), condition=%cond.1, body=%body.1
+    }
+""")
+
+
+def test_typed_dot_operands_and_trip_weighting():
+    out = analyze_hlo(_TYPED_DOT)
+    # 2 * (8*32 out) * (64 contraction) * 12 trips
+    assert out["matmul_flops"] == 2.0 * 8 * 32 * 64 * 12
+    assert out["while_trip_multipliers"] == {"body.1": 12.0}
+    assert out["n_computations"] == 3
+
+
+def test_untyped_dot_operands():
+    out = analyze_hlo(hlo("""
+        ENTRY %main (a: f32[4,8], b: f32[8,4]) -> f32[4,4] {
+          %a = f32[4,8]{1,0} parameter(0)
+          %b = f32[8,4]{1,0} parameter(1)
+          ROOT %d = f32[4,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+    """))
+    assert out["matmul_flops"] == 2.0 * 16 * 8
+
+
+def test_missing_contracting_dims_falls_back_to_k1():
+    out = analyze_hlo(hlo("""
+        ENTRY %main (a: f32[4,8], b: f32[8,4]) -> f32[4,4] {
+          %a = f32[4,8]{1,0} parameter(0)
+          %b = f32[8,4]{1,0} parameter(1)
+          ROOT %d = f32[4,4]{1,0} dot(%a, %b)
+        }
+    """))
+    assert out["matmul_flops"] == 2.0 * 16 * 1
+
+
+def test_nested_while_bodies_multiply():
+    out = analyze_hlo(hlo("""
+        %cond.outer (a: s32[]) -> pred[] {
+          %c.o = s32[] constant(12)
+        }
+
+        %cond.inner (a: s32[]) -> pred[] {
+          %c.i = s32[] constant(5)
+        }
+
+        %body.inner (x: f32[2,2]) -> f32[2,2] {
+          %xi = f32[2,2]{1,0} parameter(0)
+          ROOT %di = f32[2,2]{1,0} dot(%xi, %xi), lhs_contracting_dims={1}
+        }
+
+        %body.outer (x: f32[2,2]) -> f32[2,2] {
+          %xo = f32[2,2]{1,0} parameter(0)
+          ROOT %wi = f32[2,2] while(f32[2,2] %xo), condition=%cond.inner, body=%body.inner
+        }
+
+        ENTRY %main (x: f32[2,2]) -> f32[2,2] {
+          %x = f32[2,2]{1,0} parameter(0)
+          ROOT %wo = f32[2,2] while(f32[2,2] %x), condition=%cond.outer, body=%body.outer
+        }
+    """))
+    assert out["while_trip_multipliers"] == {"body.inner": 60.0,
+                                             "body.outer": 12.0}
+    # inner dot: lhs is a param f32[2,2], contraction dim 1 -> k=2
+    assert out["matmul_flops"] == 2.0 * 4 * 2 * 60
+
+
+def test_cond_without_constant_uses_default_trip():
+    txt = hlo("""
+        %cond.1 (a: s32[]) -> pred[] {
+          %one = s32[] constant(1)
+        }
+
+        %body.1 (x: f32[8]) -> f32[8] {
+          %xb = f32[8]{0} parameter(0)
+          ROOT %cp = f32[8]{0} copy(%xb)
+        }
+
+        ENTRY %main (x: f32[8]) -> f32[8] {
+          %x = f32[8]{0} parameter(0)
+          ROOT %w = f32[8] while(f32[8] %x), condition=%cond.1, body=%body.1
+        }
+    """)
+    # constant(1) is filtered (loop counters start at 0/1); default applies
+    assert analyze_hlo(txt)["while_trip_multipliers"] == {"body.1": 1.0}
+    assert analyze_hlo(txt, default_trip=7)["while_trip_multipliers"] \
+        == {"body.1": 7.0}
+
+
+def test_collectives_counted_and_all_reduce_doubled():
+    out = analyze_hlo(hlo("""
+        ENTRY %main (x: f32[1024]) -> f32[1024] {
+          %x = f32[1024]{0} parameter(0)
+          %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+          %ags = f32[1024]{0} all-gather-start(%x), dimensions={0}
+          ROOT %agd = f32[1024]{0} all-gather-done(%ags)
+        }
+    """))
+    cb = out["collective_bytes"]
+    assert cb["all-reduce"] == 2.0 * 4096        # ring factor
+    assert cb["all-gather"] == 4096.0            # -start counted once
+    assert cb["total"] == 3 * 4096.0
+    assert out["collective_counts"]["all-reduce"] == 1
+    assert out["collective_counts"]["all-gather"] == 1
+
+
+def test_mem_proxy_skips_aliasing_ops():
+    out = analyze_hlo(hlo("""
+        ENTRY %main (x: f32[256]) -> f32[256] {
+          %x = f32[256]{0} parameter(0)
+          %t = (f32[256]) tuple(%x)
+          %g = f32[256]{0} get-tuple-element(%t), index=0
+          ROOT %cp = f32[256]{0} copy(%g)
+        }
+    """))
+    # only the copy streams: 2 * 1024 bytes read+write
+    assert out["mem_bytes_proxy"] == 2.0 * 1024
+
+
+def test_entry_f32_hoist_detection():
+    out = analyze_hlo(hlo("""
+        ENTRY %main (w: bf16[300000000]) -> f32[300000000] {
+          %w = bf16[300000000]{0} parameter(0)
+          ROOT %convert.5 = f32[300000000]{0} convert(bf16[300000000]{0} %w)
+        }
+    """))
+    assert out["entry_f32_weight_convert_bytes"] == 4.0 * 300_000_000
+
+
+def test_no_entry_reports_error():
+    out = analyze_hlo(hlo("""
+        %helper (x: f32[4]) -> f32[4] {
+          %x = f32[4]{0} parameter(0)
+        }
+    """))
+    assert out == {"error": "no ENTRY computation found"}
+
+
+def test_peak_liveness_frees_after_last_use():
+    out = peak_liveness(hlo("""
+        ENTRY %main (p: f32[1048576]) -> f32[1048576] {
+          %p = f32[1048576]{0} parameter(0)
+          %a = f32[1048576]{0} copy(%p)
+          %b = f32[1048576]{0} add(%a, %a)
+          %c = f32[1048576]{0} multiply(%b, %b)
+          ROOT %r = f32[1048576]{0} copy(%c)
+        }
+    """))
+    m = out["main"]
+    # two 4 MiB buffers overlap at most (a+b), never three
+    assert m["peak_bytes"] == 2 * 4 * 1048576
+    names = {n for n, _b, _s in m["top_buffers"]}
+    assert names == {"a", "b"}
+    shapes = {s for _n, _b, s in m["top_buffers"]}
+    assert shapes == {"f32[1048576]"}
+
+
+def test_peak_liveness_walks_while_bodies():
+    out = peak_liveness(hlo("""
+        %cond.1 (a: s32[]) -> pred[] {
+          %c = s32[] constant(3)
+        }
+
+        %body.1 (x: f32[1048576]) -> f32[1048576] {
+          %x = f32[1048576]{0} parameter(0)
+          ROOT %y = f32[1048576]{0} copy(%x)
+        }
+
+        ENTRY %main (x: f32[1048576]) -> f32[1048576] {
+          %x = f32[1048576]{0} parameter(0)
+          ROOT %w = f32[1048576] while(f32[1048576] %x), condition=%cond.1, body=%body.1
+        }
+    """))
+    assert "body.1" in out
+    assert out["body.1"]["peak_bytes"] == 4 * 1048576
