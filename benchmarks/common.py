@@ -126,7 +126,11 @@ def lat_summary(samples_s, stats=None) -> dict:
     ``stats`` (an ``EngineStats``) additionally merges the republish
     counters — ``republished_bytes`` and ``delta_fraction`` — so the
     fig6/fig7 rows and ``docs/tuning.md`` quote the *same* gauges the
-    engine exposes instead of re-deriving them.
+    engine exposes instead of re-deriving them.  Fleet-level stats (a
+    ``CellRouter.stats()``) further merge the routing counters
+    (``shed``/``rerouted``/``hedge_cell``/``cancelled``) and a
+    ``cells`` breakdown (per-cell n/p50/p99) so fig8 can attribute a
+    p99 move to a routing decision rather than to one hot cell.
     """
     a = np.asarray(list(samples_s), dtype=np.float64) * 1e3
     out = ({"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
@@ -139,6 +143,20 @@ def lat_summary(samples_s, stats=None) -> dict:
             getattr(stats, "republished_bytes", 0))
         out["delta_fraction"] = round(
             float(getattr(stats, "delta_fraction", 0.0)), 4)
+        for ctr in ("shed", "rerouted", "hedge_cell", "cancelled"):
+            v = int(getattr(stats, ctr, 0))
+            if v:
+                out[ctr] = v
+        cells = getattr(stats, "cells", None)
+        if cells:
+            out["cells"] = {
+                name: {"n": int(s.n),
+                       "p50_ms": round(float(s.p50_ms), 3),
+                       "p99_ms": round(float(s.p99_ms), 3),
+                       "queue_ms": round(float(s.queue_ms), 3),
+                       "hedges": int(s.hedges),
+                       "cache_hits": int(s.cache_hits)}
+                for name, s in cells.items()}
     return out
 
 

@@ -1,0 +1,253 @@
+"""Fig. 8 (beyond paper): fleet serving under drifting-Zipf load.
+
+A "million-user day" compressed to a benchmark: N serving cells
+(`repro.serve.fleet.CellRouter`) on logically-separate meshes serve
+high-QPS Zipf traffic from concurrent client threads, and the three
+things that happen to a real fleet happen mid-run:
+
+  * **steady**   — head-skewed traffic against a healthy fleet
+    (cache-affinity routing keeps each cell's TinyLFU head coherent);
+  * **maint**    — the query head rotates, the index takes a clustered
+    mutation, and the leader fans ONE popped `DeltaManifest` out to
+    every cell with a rolling drain (`router.apply_updates`) while
+    clients keep hammering — the acceptance bar is p99 within 2x of
+    steady-state;
+  * **fail**     — one cell's backend starts throwing mid-window; every
+    in-flight and future request must complete via fail-fast rerouting
+    (the bar is ZERO lost requests), with rendezvous hashing remapping
+    only the dead cell's keys.
+
+Clients retry shed requests (`FleetOverloadError.retriable`) with a tiny
+backoff — shedding is back-pressure, not loss — and every row records the
+routing counters (`shed`/`rerouted`/`hedge_cell`) next to the p99s so a
+tail move is attributable.  Rows land in ``BENCH_fig8.json`` via
+``benchmarks/run.py`` and ``benchmarks/results/fleet.csv``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, clustered_corpus, csv_row, lat_summary
+
+
+class _Failable:
+    """Backend proxy with an injectable failure switch: once ``fail()``
+    is called every search raises, exactly like a wedged mesh — the
+    cell's worker turns that into ``CellFailure`` sentinels and the
+    router reroutes."""
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._dead = threading.Event()
+
+    def fail(self):
+        self._dead.set()
+
+    def __call__(self, qs):
+        if self._dead.is_set():
+            raise RuntimeError("injected cell failure (fig8)")
+        return self._fn(qs)
+
+    def apply_updates(self, *a, **kw):
+        return self._fn.apply_updates(*a, **kw)
+
+    def jit_cache_size(self):
+        return self._fn.jit_cache_size()
+
+
+def _zipf_qids(rng, n, alpha, size):
+    from repro.core.likelihood import zipf_likelihood
+
+    z = zipf_likelihood(n, alpha)
+    perm = rng.permutation(n)
+    p = np.empty(n)
+    p[perm] = z
+    return rng.choice(n, size=size, p=p / p.sum())
+
+
+def _drive(router, db, qid_chunks, *, mid_action=None, mid_delay_s=0.15,
+           timeout_s=15.0, max_retries=200):
+    """Run one traffic segment: each chunk of query ids gets a client
+    thread; ``mid_action`` fires on the main thread mid-window (the
+    leader fan-out / the cell failure).  Returns merged per-request
+    latencies (including shed-retry backoff — the client-observed
+    truth), plus lost/retry counts."""
+    results = [None] * len(qid_chunks)
+
+    def client(slot, qids):
+        lat, lost, retries = [], 0, 0
+        for qid in qids:
+            q = db[int(qid)]
+            t0 = time.perf_counter()
+            for _ in range(max_retries):
+                try:
+                    router.search(q, timeout=timeout_s)
+                    lat.append(time.perf_counter() - t0)
+                    break
+                except Exception as e:
+                    if getattr(e, "retriable", False):
+                        retries += 1
+                        time.sleep(1e-3)
+                        continue
+                    lost += 1
+                    break
+            else:
+                lost += 1
+        results[slot] = (lat, lost, retries)
+
+    threads = [threading.Thread(target=client, args=(i, c), daemon=True)
+               for i, c in enumerate(qid_chunks)]
+    t_start = time.perf_counter()
+    for t in threads:
+        t.start()
+    if mid_action is not None:
+        time.sleep(mid_delay_s)
+        mid_action()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t_start
+    lat = [x for r in results for x in r[0]]
+    lost = sum(r[1] for r in results)
+    retries = sum(r[2] for r in results)
+    return lat, lost, retries, wall
+
+
+def run(n: int = 8192, d: int = 64, fleet_sizes=(2, 4, 8),
+        clients: int = 8, reqs_per_client: int = 120,
+        zipf_alpha: float = 1.1, k: int = 10, seed: int = 0) -> list:
+    from repro.adaptive import FrequencyAdmissionCache
+    from repro.core.two_level import TwoLevelConfig, build_two_level
+    from repro.distributed.backend import ShardedSearchBackend
+    from repro.launch.mesh import make_cell_meshes
+    from repro.serve.cell import ServingCell
+    from repro.serve.fleet import CellRouter
+
+    rng = np.random.default_rng(seed)
+    db = clustered_corpus(rng, n, d)
+    n_clusters = 64
+    idx = build_two_level(db, TwoLevelConfig(
+        n_clusters=n_clusters, top="brute", bottom="brute",
+        kmeans_iters=4, kmeans_minibatch=None, bucket_cap=None))
+
+    rows = []
+    for size in fleet_sizes:
+        meshes = make_cell_meshes(size, share_devices=True)
+        proxies, cells = [], []
+        for i, mesh in enumerate(meshes):
+            be = ShardedSearchBackend(
+                mesh, idx, kind="ivf", k=k, axes=tuple(mesh.axis_names),
+                nprobe_local=8, headroom=1.5)
+            proxy = _Failable(be)
+            proxies.append(proxy)
+            cells.append(ServingCell(
+                proxy, name=f"cell{i}",
+                cache=FrequencyAdmissionCache(capacity=512),
+                max_wait_ms=0.5))
+        router = CellRouter(cells, max_queue_depth=64, hedge_ms=75.0)
+        try:
+            # warm every pow2 batch bucket concurrent clients can form
+            # (1..clients) on every cell, off the clock — otherwise the
+            # steady window measures XLA compiles, not serving
+            bb = 1
+            while bb <= clients:
+                for c in cells:
+                    c.search_fn(db[:bb])
+                bb <<= 1
+
+            def chunks(alpha_rng):
+                qids = _zipf_qids(alpha_rng, idx.db.shape[0], zipf_alpha,
+                                  clients * reqs_per_client)
+                return np.array_split(qids, clients)
+
+            # -- steady state --------------------------------------
+            lat_s, lost_s, retr_s, wall_s = _drive(
+                router, idx.db, chunks(np.random.default_rng(seed + 1)))
+
+            # -- rolling maintenance -------------------------------
+            # the head rotates AND the corpus mutates (delete part of
+            # the fullest bucket, add mass near another centroid);
+            # mid-window the leader pops one manifest and rolls it
+            # across the fleet while clients keep hammering
+            b = int(np.argmax(idx.bucket_counts))
+            idx.delete_entities(np.asarray(idx.bucket_ids[b][:16]).copy())
+            new = (np.asarray(idx.centroids[1])[None, :]
+                   + 0.1 * rng.normal(size=(16, d))).astype(np.float32)
+            idx.add_entities(new)
+            fan = {}
+
+            def leader_fanout():
+                fan.update(router.apply_updates(idx))
+
+            lat_m, lost_m, retr_m, wall_m = _drive(
+                router, idx.db, chunks(np.random.default_rng(seed + 2)),
+                mid_action=leader_fanout)
+
+            # -- single-cell failure mid-run -----------------------
+            lat_f, lost_f, retr_f, wall_f = _drive(
+                router, idx.db, chunks(np.random.default_rng(seed + 3)),
+                mid_action=proxies[0].fail)
+
+            st = router.stats()
+            s_steady = lat_summary(lat_s)
+            s_maint = lat_summary(lat_m)
+            s_fail = lat_summary(lat_f, stats=st)
+            total = 3 * clients * reqs_per_client
+            ratio = (s_maint["p99_ms"] / s_steady["p99_ms"]
+                     if s_steady["p99_ms"] else float("inf"))
+            row = {
+                "cells": size,
+                "requests": total,
+                "qps_steady": round(len(lat_s) / wall_s, 1),
+                "p99_steady_ms": round(s_steady["p99_ms"], 3),
+                "p99_maint_ms": round(s_maint["p99_ms"], 3),
+                "p99_fail_ms": round(s_fail["p99_ms"], 3),
+                "p50_steady_ms": round(s_steady["p50_ms"], 3),
+                "maint_over_steady": round(ratio, 3),
+                "fanout_mode": fan.get("mode"),
+                "fanout_bytes": fan.get("bytes"),
+                "lost": lost_s + lost_m + lost_f,
+                "shed_retries": retr_s + retr_m + retr_f,
+                "shed": int(st.shed),
+                "rerouted": int(st.rerouted),
+                "hedge_cell": int(st.hedge_cell),
+                "cache_hit_rate": round(
+                    st.cache_hits / max(st.cache_hits + st.cache_misses, 1),
+                    3),
+                "down_cells": sorted(router.down_cells()),
+            }
+            rows.append(row)
+            csv_row(
+                f"fig8_cells{size}", s_steady["p50_ms"] * 1e3,
+                f"qps={row['qps_steady']},"
+                f"p99_steady={row['p99_steady_ms']:.2f},"
+                f"p99_maint={row['p99_maint_ms']:.2f},"
+                f"p99_fail={row['p99_fail_ms']:.2f},"
+                f"maint_over_steady={row['maint_over_steady']:.2f},"
+                f"lost={row['lost']},shed={row['shed']},"
+                f"rerouted={row['rerouted']},"
+                f"hedge_cell={row['hedge_cell']}")
+            # the fleet contract is loss-free failure — this is the
+            # acceptance criterion, not a soft metric
+            assert row["lost"] == 0, \
+                f"{row['lost']} requests lost at fleet size {size}"
+            if ratio > 2.0:
+                print(f"# WARN fig8: maint p99 {ratio:.2f}x steady at "
+                      f"{size} cells (bar: 2x)")
+        finally:
+            router.close()
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "fleet.csv"), "w") as f:
+        cols = sorted(rows[0])
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

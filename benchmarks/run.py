@@ -37,7 +37,7 @@ def main() -> None:
                     help="paper-scale corpora (1M SIFT / 10M DEEP)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,table1,fig2d,fig3,sharded,"
-                         "updates,adaptive,delta,roofline")
+                         "updates,adaptive,delta,fig8,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -91,6 +91,14 @@ def main() -> None:
         n = 100_000 if args.full else 20_000
         _figure("fig7_delta", {"full": args.full, "n": n},
                 lambda: fig7_delta.run(n=n))
+    if want("fig8"):
+        from benchmarks import fig8_fleet
+
+        n = 20_000 if args.full else 8192
+        sizes = (2, 4, 8)
+        _figure("fig8", {"full": args.full, "n": n,
+                         "fleet_sizes": list(sizes)},
+                lambda: fig8_fleet.run(n=n, fleet_sizes=sizes))
     if want("roofline"):
         from benchmarks import roofline
 

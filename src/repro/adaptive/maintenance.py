@@ -20,6 +20,17 @@ the existing ``ShardedSearchBackend`` lock (in-flight batches finish on
 the old arrays).  For engines serving a host-resident index,
 ``HostIndexBackend`` provides the same ``apply_updates`` surface as the
 sharded backend so cache invalidation and republish work identically.
+
+**Fleet-leader mode.** ``engine`` may be a
+:class:`repro.serve.fleet.CellRouter` instead of a single engine: the
+scheduler then IS the fleet's maintenance leader.  The estimator is
+shared by every cell (it is internally locked), so there is exactly one
+drift decision for the whole fleet; the router's ``apply_updates`` pops
+the index's delta manifest exactly once and fans the same manifest out
+to every cell with a rolling drain (one cell republishes while its
+siblings absorb the traffic).  Nothing in the scheduler changes —
+running one scheduler per cell would instead race N ``pop_delta()``
+calls against each other and republish N different manifests.
 """
 from __future__ import annotations
 
@@ -79,7 +90,11 @@ class MaintenanceScheduler:
     index     : object with ``reboost(p)`` — ``SearchIndex`` or
                 ``TwoLevelIndex``; ``rebalance()`` is chained when present
     engine    : optional ``ServingEngine`` — republished to via
-                ``apply_updates`` (which also invalidates its cache)
+                ``apply_updates`` (which also invalidates its cache).
+                Passing a ``repro.serve.fleet.CellRouter`` here makes
+                this scheduler the fleet's maintenance *leader*: one
+                drift decision (shared estimator), one ``pop_delta()``,
+                the same manifest rolled across every cell
     cache     : optional cache to invalidate when no engine is given
     publish_target : maps the index to the ``apply_updates`` target
                 (identity by default: a ``TwoLevelIndex`` is what

@@ -218,3 +218,51 @@ def _sharded_forest_search() -> Plan:
                ("delta-republish", mutate_and_apply),
                ("reboost-republish", reboost_and_apply)],
         cache_size=be.jit_cache_size)
+
+
+@register_entry_point("fleet-router-search")
+def _fleet_router_search() -> Plan:
+    import numpy as np
+
+    from repro.launch.mesh import make_cell_meshes
+    from repro.serve.fleet import build_fleet
+
+    rng = np.random.default_rng(4)
+    _, idx = _index(rng, "brute")          # bucketed flat bottom -> IVF
+    # two logically-separate cells over the gate's 1-device pool: each
+    # owns a private ShardedSearchBackend with its own jit cache — the
+    # invariant is that ROUTED traffic plus a leader fan-out keeps every
+    # cell's search cache fixed, same as the single-backend entries
+    meshes = make_cell_meshes(2, share_devices=True)
+    router = build_fleet(
+        meshes, idx, k=5,
+        backend_kw={"nprobe_local": _K, "headroom": 2.0},
+        cell_kw={"max_wait_ms": 1.0})
+    qs = _corpus(rng, 8)
+
+    def warmup():
+        # the router batches blocking callers one at a time, so the
+        # served shape is the 1-query pow2 bucket; warm it on EVERY
+        # cell directly — rendezvous routing alone might leave a cell
+        # cold and turn its first spill/hedge into a false recompile
+        for cell in router.cells:
+            cell.search_fn(qs[:1])
+        for q in qs[:4]:
+            router.search(q)
+
+    def mutate_and_fanout():
+        _localized_mutation(rng, idx)
+        # leader contract: ONE pop, the same manifest to every cell
+        router.apply_updates(idx)
+        for q in qs[:4]:
+            router.search(q)
+
+    def cache_size():
+        sizes = [c.search_fn.jit_cache_size() for c in router.cells]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+    return Plan(
+        steps=[("warmup-routed-search", warmup),
+               ("fleet-delta-fanout-1", mutate_and_fanout),
+               ("fleet-delta-fanout-2", mutate_and_fanout)],
+        cache_size=cache_size)

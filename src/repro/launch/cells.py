@@ -38,7 +38,8 @@ from repro.models import transformer as T
 from repro.train import optim
 from repro.train.loop import TrainState, make_train_step
 
-__all__ = ["build_cell", "CellSpec", "lm_config_for_mesh"]
+__all__ = ["build_cell", "CellSpec", "lm_config_for_mesh",
+           "build_fleet_cells"]
 
 
 @dataclasses.dataclass
@@ -525,3 +526,21 @@ def build_cell(cfg, family: str, plan: ShardPlan,
     if family == "ann":
         return _ann_cell(cfg, plan, shape)
     raise ValueError(family)
+
+
+def build_fleet_cells(cfg, family: str, meshes,
+                      shape: ShapeSpec) -> list:
+    """One :class:`CellSpec` per disjoint submesh — the dry-run view of
+    a serving fleet (``repro.serve.fleet``).
+
+    ``meshes`` comes from :func:`repro.launch.mesh.make_cell_meshes`;
+    each submesh gets its own role plan (``make_plan``) and its own
+    lowerable step, matching production where every serving cell owns a
+    private ``ShardedSearchBackend`` on its own devices.  The specs are
+    intentionally *identical up to mesh*: a fleet is N replicas of one
+    cell, not N different cells.
+    """
+    from repro.launch.mesh import make_plan
+
+    return [build_cell(cfg, family, make_plan(mesh), shape)
+            for mesh in meshes]

@@ -16,7 +16,8 @@ from repro.distributed.sharding import (
     ShardPlan,
 )
 
-__all__ = ["make_production_mesh", "make_plan", "make_test_mesh"]
+__all__ = ["make_production_mesh", "make_plan", "make_test_mesh",
+           "make_cell_meshes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -47,3 +48,60 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
     n = int(np.prod(shape))
     dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
     return Mesh(dev_array, axes)
+
+
+def make_cell_meshes(n_cells: int, *, shape=None, axes=None, devices=None,
+                     share_devices: bool = False) -> list:
+    """Partition the device pool into ``n_cells`` disjoint submeshes.
+
+    The fleet tier (``repro.serve.fleet``) gives each serving cell its
+    own mesh so a straggling or failed mesh cannot stall its siblings
+    and a cross-cell hedge really rides different hardware.  Cells are
+    carved as *consecutive* device blocks (cell i gets devices
+    ``[i*per_cell, (i+1)*per_cell)``), which keeps each cell's devices
+    physically adjacent under the usual torus enumeration.
+
+    ``shape``/``axes`` describe ONE cell's mesh (default: all of the
+    cell's devices on a flat ``("data",)`` axis — the serving scan
+    shards the corpus over it).  ``share_devices=True`` relaxes
+    disjointness and assigns devices round-robin — meshes are still
+    *logically* separate (separate jit caches, separate backends), for
+    tests and single-host benchmarks where the pool is smaller than the
+    fleet; production fleets must keep the default.
+    """
+    if n_cells <= 0:
+        raise ValueError("n_cells must be positive")
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if shape is None:
+        if share_devices:
+            per_cell = max(len(devs) // n_cells, 1)
+        else:
+            per_cell = len(devs) // n_cells
+            if per_cell == 0:
+                raise RuntimeError(
+                    f"{n_cells} disjoint cells need at least {n_cells} "
+                    f"devices, found {len(devs)} — pass "
+                    "share_devices=True for logically-separate meshes "
+                    "over a shared pool (tests/single-host)")
+        shape = (per_cell,)
+    n_per = int(np.prod(shape))
+    if axes is None:
+        axes = ("data", "model")[:len(shape)] if len(shape) <= 2 else \
+            ("pod", "data", "model")[:len(shape)]
+    need = n_cells * n_per
+    if len(devs) < need and not share_devices:
+        raise RuntimeError(
+            f"{n_cells} disjoint cells of shape {tuple(shape)} need "
+            f"{need} devices, found {len(devs)} — pass "
+            "share_devices=True for logically-separate meshes over a "
+            "shared pool (tests/single-host), or force more host "
+            "devices via XLA_FLAGS=--xla_force_host_platform_device_count")
+    meshes = []
+    for i in range(n_cells):
+        if share_devices and len(devs) < need:
+            block = [devs[(i * n_per + j) % len(devs)]
+                     for j in range(n_per)]
+        else:
+            block = devs[i * n_per:(i + 1) * n_per]
+        meshes.append(Mesh(np.asarray(block).reshape(shape), tuple(axes)))
+    return meshes

@@ -1,0 +1,25 @@
+"""Serving tier: single-replica cells and the multi-cell fleet router.
+
+  * :mod:`repro.serve.cell` — ``ServingCell``: micro-batching, hedged
+    dispatch, result cache + estimator hooks, cancellation, fail-fast
+    failure sentinels; the unit of replication;
+  * :mod:`repro.serve.engine` — ``ServingEngine``: back-compat alias
+    for one cell per process;
+  * :mod:`repro.serve.fleet` — ``CellRouter``: admission control,
+    load-aware + cache-affinity dispatch, cross-cell hedging, and
+    rolling leader-driven delta fan-out across cells on disjoint
+    meshes.
+"""
+from repro.serve.cell import CellFailure, EngineStats, ServingCell
+from repro.serve.engine import ServingEngine
+from repro.serve.fleet import CellRouter, FleetOverloadError, build_fleet
+
+__all__ = [
+    "CellFailure",
+    "CellRouter",
+    "EngineStats",
+    "FleetOverloadError",
+    "ServingCell",
+    "ServingEngine",
+    "build_fleet",
+]

@@ -1,0 +1,451 @@
+"""Single-replica serving cell: request queue, micro-batcher, latency SLOs.
+
+The paper's deployment target is per-query P90 < 80 ms on-device; the
+datacenter deployment batches concurrent queries instead.  A
+:class:`ServingCell` is the production shell around one search/scoring
+function — the *unit of replication* in the fleet tier
+(:mod:`repro.serve.fleet` routes across many cells on disjoint meshes):
+
+  * micro-batching: collect up to ``max_batch`` requests or ``max_wait_ms``
+    (whichever first), pad to the next power-of-two bucket so jit caches a
+    handful of shapes;
+  * per-request latency tracking (P50/P90/P99, queue vs compute split);
+  * optional hedged dispatch to a replica after ``hedge_ms`` (straggler
+    mitigation inside the cell; the *fleet* hedges onto a different
+    cell's mesh instead — see ``CellRouter``);
+  * adaptive-serving hooks: an exact-match result cache fronting
+    :meth:`ServingCell.search` (invalidated on ``apply_updates``) and a
+    likelihood estimator fed the top-1 id of every served query, both
+    surfaced through :class:`EngineStats` (see ``repro.adaptive``);
+  * cancellation: a request abandoned by its caller (timeout) is dropped
+    by the batch worker instead of being computed anyway, and never
+    lands in the latency/queue-wait stats;
+  * fail-fast failure: a backend exception does not strand the batch —
+    every affected request receives a :class:`CellFailure` sentinel so a
+    router can re-dispatch it to a healthy cell immediately.
+
+``ServingEngine`` (:mod:`repro.serve.engine`) is the single-replica
+alias kept for existing callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["ServingCell", "EngineStats", "CellFailure"]
+
+
+@dataclasses.dataclass
+class CellFailure:
+    """Sentinel future value: the cell's backend raised while computing
+    the batch holding this request.  A routed caller (``CellRouter``)
+    marks the cell down and re-dispatches; a direct :meth:`search`
+    caller gets the underlying error re-raised."""
+
+    cell: str
+    error: BaseException
+
+
+@dataclasses.dataclass
+class _Request:
+    query: np.ndarray
+    t_enqueue: float
+    future: "queue.Queue"
+    cancelled: threading.Event
+    t_batch: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n: int
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    mean_ms: float
+    queue_ms: float
+    batch_sizes: list
+    hedges: int
+    # adaptive-serving gauges (0 when no cache/estimator is attached):
+    # benchmarks and the maintenance scheduler read this one struct
+    # instead of poking engine internals
+    cache_hits: int = 0
+    cache_misses: int = 0
+    drift: float = 0.0
+    # republish gauges (apply_updates): bytes actually shipped to the
+    # backend(s), and shipped / what-full-re-places-would-have-shipped —
+    # 1.0 means every republish was a full re-place, 0.0 means none
+    # happened yet.  fig6/fig7 and docs/tuning.md quote these counters.
+    republished_bytes: int = 0
+    delta_fraction: float = 0.0
+    # requests whose caller timed out before a result was computed; they
+    # are dropped by the batch worker and excluded from the latency and
+    # queue-wait percentiles above
+    cancelled: int = 0
+    # fleet routing counters (0 on a standalone cell; a CellRouter's
+    # stats() fills them so fig8 can attribute p99 to routing decisions)
+    shed: int = 0
+    rerouted: int = 0
+    hedge_cell: int = 0
+    # per-cell breakdown: name -> EngineStats of that cell (None on a
+    # standalone cell)
+    cells: "dict | None" = None
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class ServingCell:
+    """search_fn(queries (B, d)) -> (dists (B,k), ids (B,k))."""
+
+    def __init__(
+        self,
+        search_fn: Callable,
+        *,
+        name: str = "cell0",
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        hedge_fn: Optional[Callable] = None,
+        hedge_ms: float = 50.0,
+        cache=None,
+        estimator=None,
+    ):
+        """``cache`` (repro.adaptive.FrequencyAdmissionCache) fronts
+        :meth:`search` with exact-match results and is invalidated by
+        :meth:`apply_updates`; ``estimator``
+        (repro.adaptive.OnlineLikelihoodEstimator) observes the top-1 id
+        of every served query so drift-triggered maintenance can follow
+        the live traffic.  In a fleet, the estimator is *shared* across
+        cells (one drift decision) while the cache is per-cell (affinity
+        routing keeps each cell's head coherent)."""
+        self.search_fn = search_fn
+        self.name = name
+        self.hedge_fn = hedge_fn
+        self.hedge_ms = hedge_ms
+        self.cache = cache
+        self.estimator = estimator
+        self.estimator_errors = 0
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.q: "queue.Queue[_Request]" = queue.Queue()
+        self.latencies: list[float] = []
+        self.queue_waits: list[float] = []
+        self.batch_sizes: list[int] = []
+        self.hedges = 0
+        self.n_cancelled = 0
+        self.republished_bytes = 0
+        self.republish_full_bytes = 0
+        self._failure: Optional[BaseException] = None
+        # one lock for every telemetry counter: the batch worker, hedge
+        # path, callers of search()/apply_updates(), and stats() readers
+        # all touch these from different threads
+        self._stats_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    @classmethod
+    def sharded(cls, mesh, target, *, kind: str = "auto", k: int = 10,
+                axes=("data", "model"), query_axes=(), nprobe_local: int = 2,
+                beam_width: int = 8, headroom: float = 1.0,
+                **engine_kw) -> "ServingCell":
+        """Cell over a mesh-sharded corpus/index.
+
+        Builds a :class:`repro.distributed.backend.ShardedSearchBackend`
+        (corpus pre-placed on the mesh, shard_map search jitted once) and
+        serves it; ``engine_kw`` passes through to the cell constructor
+        (``max_batch``, ``hedge_fn``, ...).  ``headroom`` > 1 reserves
+        device-array growth room so later ``apply_updates`` calls (online
+        index mutation) keep hitting the jitted search.
+        """
+        from repro.distributed.backend import ShardedSearchBackend
+
+        fn = ShardedSearchBackend(
+            mesh, target, kind=kind, k=k, axes=axes, query_axes=query_axes,
+            nprobe_local=nprobe_local, beam_width=beam_width,
+            headroom=headroom)
+        return cls(fn, **engine_kw)
+
+    def apply_updates(self, target, *, delta="auto", **kw):
+        """Swap in a mutated corpus/index without stopping the cell.
+
+        Delegates to the backend's ``apply_updates`` (e.g.
+        :class:`repro.distributed.backend.ShardedSearchBackend`): device
+        placement happens under the backend's lock, in-flight batches
+        finish against the old arrays, later batches see the new ones,
+        and the jitted search kernel is reused — no cold (re-compiling)
+        batch anywhere in the swap.  A hedge replica is updated too —
+        a stale replica would keep serving deleted entities on every
+        hedged request, so a hedge_fn without ``apply_updates`` is an
+        error rather than a silent staleness hole.
+
+        ``delta="auto"`` pops the target's accumulated
+        :class:`repro.core.delta.DeltaManifest` (``pop_delta()``) **once**
+        and hands the same manifest to the primary and the hedge replica,
+        so both walk the same version chain and a dirty-bucket
+        maintenance pass ships only its dirty slices (the backend decides
+        delta vs full per manifest).  Pass ``delta=None`` to force a full
+        re-place, or an explicit manifest to manage popping yourself —
+        the fleet leader does exactly that: one pop, the same manifest
+        handed to every cell (manifest application is idempotent and
+        superset-safe, see ``repro.core.delta``).
+        Returns the primary backend's republish stats dict when it
+        provides one (``mode``/``bytes``/``full_bytes``), which also
+        feeds :class:`EngineStats`' ``republished_bytes`` /
+        ``delta_fraction`` gauges.
+        """
+        for name, fn in (("search_fn", self.search_fn),
+                         ("hedge_fn", self.hedge_fn)):
+            if fn is None:
+                continue
+            if not hasattr(fn, "apply_updates"):
+                raise TypeError(
+                    f"{name} {type(fn).__name__} has no apply_updates; "
+                    "only pre-placed backends support online mutation")
+        if delta == "auto":
+            delta = (target.pop_delta()
+                     if hasattr(target, "pop_delta") else None)
+        # legacy backends without a delta kwarg keep working: only pass
+        # the manifest when there is one
+        dkw = {} if delta is None else {"delta": delta}
+        stats = self.search_fn.apply_updates(target, **dkw, **kw)
+        hstats = None
+        if self.hedge_fn is not None:
+            hstats = self.hedge_fn.apply_updates(target, **dkw, **kw)
+        # the gauges count bytes shipped to EVERY backend — a hedge
+        # replica that fell back to a full re-place must show up even
+        # when the primary took the delta path
+        with self._stats_lock:
+            for st in (stats, hstats):
+                if isinstance(st, dict):
+                    self.republished_bytes += int(st.get("bytes", 0))
+                    self.republish_full_bytes += int(
+                        st.get("full_bytes", 0))
+        if self.cache is not None:
+            # invalidate AFTER the swap: the generation token handed out
+            # at miss time stops in-flight pre-swap results from being
+            # re-inserted (see FrequencyAdmissionCache.offer)
+            self.cache.invalidate_all()
+        return stats if isinstance(stats, dict) else None
+
+    # ------------------------------------------------------------------
+    def submit(self, query: np.ndarray, *, future: "queue.Queue" = None,
+               cancelled: Optional[threading.Event] = None) -> "queue.Queue":
+        """Enqueue one request; returns the future its result lands in.
+
+        ``future`` lets a router share one result queue between a
+        primary and a hedge dispatch on another cell (first responder
+        wins); ``cancelled`` is the abandon flag — once set, the batch
+        worker drops the request instead of computing it.
+        """
+        fut = queue.Queue() if future is None else future
+        self.q.put(_Request(
+            query=query, t_enqueue=time.perf_counter(), future=fut,
+            cancelled=cancelled if cancelled is not None
+            else threading.Event()))
+        return fut
+
+    def depth(self) -> int:
+        """Queued (not yet batched) request count — the router's
+        admission-control load signal."""
+        return self.q.qsize()
+
+    def failure(self) -> Optional[BaseException]:
+        """Last backend exception, or None while healthy."""
+        with self._stats_lock:
+            return self._failure
+
+    def search(self, query: np.ndarray, timeout: float = 30.0):
+        """Blocking single-query call, fronted by the result cache.
+
+        Raises :class:`TimeoutError` when no result arrives in
+        ``timeout`` seconds (worker wedged / search_fn stalled); the
+        abandoned request is *cancelled* — the batch worker drops it
+        instead of computing it, and it never lands in the latency
+        stats.  Cached results are only offered back under the
+        generation observed at miss time, so a search that raced an
+        ``apply_updates`` can never re-insert a stale result.
+        """
+        key = gen = None
+        if self.cache is not None:
+            key = self.cache.key_for(query)
+            gen = self.cache.generation
+            hit = self.cache.get(key)
+            if hit is not None:
+                if self.estimator is not None:
+                    # cache hits ARE head traffic — skipping them would
+                    # blind the drift estimator to exactly the queries
+                    # the index should stay boosted for
+                    try:
+                        self.estimator.observe(np.asarray(hit[1])[:1])
+                    except Exception:
+                        with self._stats_lock:
+                            self.estimator_errors += 1
+                return hit
+        cancelled = threading.Event()
+        fut = self.submit(query, cancelled=cancelled)
+        try:
+            out = fut.get(timeout=timeout)
+        except queue.Empty:
+            cancelled.set()
+            with self._stats_lock:
+                self.n_cancelled += 1
+            raise TimeoutError(
+                f"search timed out after {timeout}s (batch worker "
+                "stalled or search_fn hung)") from None
+        if isinstance(out, CellFailure):
+            raise RuntimeError(
+                f"cell {out.cell!r} backend failed") from out.error
+        if self.cache is not None:
+            self.cache.offer(key, out, generation=gen)
+        return out
+
+    def close(self):
+        self._stop.set()
+        self._worker.join(timeout=5)
+        # a closed cell must not strand queued requests: fail them fast
+        # so routed callers re-dispatch instead of timing out
+        fail = CellFailure(cell=self.name,
+                           error=RuntimeError(f"cell {self.name} closed"))
+        while True:
+            try:
+                self.q.get_nowait().future.put(fail)
+            except queue.Empty:
+                break
+
+    # ------------------------------------------------------------------
+    def _collect(self) -> list[_Request]:
+        try:
+            first = self.q.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait
+        while len(batch) < self.max_batch:
+            rem = deadline - time.perf_counter()
+            if rem <= 0:
+                break
+            try:
+                batch.append(self.q.get(timeout=rem))
+            except queue.Empty:
+                break
+        return batch
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            # requests abandoned by their caller (timeout) are dropped
+            # here — computing them anyway would waste backend work AND
+            # pollute the latency stats with latencies nobody observed
+            batch = [r for r in batch if not r.cancelled.is_set()]
+            if not batch:
+                continue
+            t0 = time.perf_counter()
+            qs = np.stack([r.query for r in batch])
+            b = qs.shape[0]
+            bb = _bucket(b)
+            if bb > b:
+                qs = np.pad(qs, ((0, bb - b), (0, 0)))
+            try:
+                result = self._dispatch(qs)
+            except Exception as e:
+                # fail fast, keep the worker alive: every request in the
+                # batch gets a CellFailure sentinel so a router can
+                # re-dispatch it immediately instead of timing out
+                with self._stats_lock:
+                    self._failure = e
+                fail = CellFailure(cell=self.name, error=e)
+                for r in batch:
+                    r.future.put(fail)
+                continue
+            t1 = time.perf_counter()
+            d, i = result
+            served = []
+            for j, r in enumerate(batch):
+                if r.cancelled.is_set():
+                    continue          # timed out mid-compute: drop
+                r.future.put((np.asarray(d[j]), np.asarray(i[j])))
+                served.append(r)
+            with self._stats_lock:
+                for r in served:
+                    self.latencies.append(t1 - r.t_enqueue)
+                    self.queue_waits.append(t0 - r.t_enqueue)
+                self.batch_sizes.append(b)
+            if self.estimator is not None and served:
+                try:
+                    top = np.asarray(i)[:b, 0]
+                    self.estimator.observe(top)
+                except Exception:       # telemetry must never kill serving
+                    with self._stats_lock:
+                        self.estimator_errors += 1
+
+    def _dispatch(self, qs):
+        if self.hedge_fn is None:
+            return self.search_fn(qs)
+        holder: dict = {}
+        done = threading.Event()
+
+        def primary():
+            out = self.search_fn(qs)
+            holder.setdefault("out", out)
+            done.set()
+
+        t = threading.Thread(target=primary, daemon=True)
+        t.start()
+        if not done.wait(self.hedge_ms / 1e3):
+            with self._stats_lock:
+                self.hedges += 1
+            out = self.hedge_fn(qs)      # replica answers the hedge
+            holder.setdefault("out", out)
+            done.set()
+        done.wait()
+        return holder["out"]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> EngineStats:
+        with self._stats_lock:
+            # snapshot under the lock so a stats() racing the batch
+            # worker never sees a latency without its queue_wait twin
+            a = np.asarray(self.latencies) * 1e3
+            qw = np.asarray(self.queue_waits) * 1e3
+            batch_sizes = self.batch_sizes[-100:]
+            hedges = self.hedges
+            cancelled = self.n_cancelled
+            rb = self.republished_bytes
+            rfb = self.republish_full_bytes
+        ch = cm = 0
+        drift = 0.0
+        if self.cache is not None:
+            ch, cm = self.cache.hits, self.cache.misses
+        if self.estimator is not None:
+            drift = float(self.estimator.drift()["tv"])
+        frac = rb / rfb if rfb else 0.0
+        if a.size == 0:
+            return EngineStats(0, 0, 0, 0, 0, 0, [], hedges,
+                               cache_hits=ch, cache_misses=cm, drift=drift,
+                               republished_bytes=rb,
+                               delta_fraction=frac, cancelled=cancelled)
+        return EngineStats(
+            n=a.size,
+            p50_ms=float(np.percentile(a, 50)),
+            p90_ms=float(np.percentile(a, 90)),
+            p99_ms=float(np.percentile(a, 99)),
+            mean_ms=float(a.mean()),
+            queue_ms=float(qw.mean()),
+            batch_sizes=batch_sizes,
+            hedges=hedges,
+            cache_hits=ch,
+            cache_misses=cm,
+            drift=drift,
+            republished_bytes=rb,
+            delta_fraction=frac,
+            cancelled=cancelled,
+        )

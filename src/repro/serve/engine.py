@@ -1,346 +1,23 @@
-"""Batched serving engine: request queue, micro-batcher, latency SLOs.
+"""Single-replica serving engine — back-compat alias for ``ServingCell``.
 
-The paper's deployment target is per-query P90 < 80 ms on-device; the
-datacenter deployment batches concurrent queries instead.  This engine is
-the production shell around any search/scoring function:
-
-  * micro-batching: collect up to ``max_batch`` requests or ``max_wait_ms``
-    (whichever first), pad to the next power-of-two bucket so jit caches a
-    handful of shapes;
-  * per-request latency tracking (P50/P90/P99, queue vs compute split);
-  * optional hedged dispatch to a replica after ``hedge_ms`` (straggler
-    mitigation for serving);
-  * adaptive-serving hooks: an exact-match result cache fronting
-    :meth:`ServingEngine.search` (invalidated on ``apply_updates``) and a
-    likelihood estimator fed the top-1 id of every served query, both
-    surfaced through :class:`EngineStats` (see ``repro.adaptive``).
+The batching/hedging/cache/telemetry implementation lives in
+:mod:`repro.serve.cell` (the unit of replication in the fleet tier);
+``ServingEngine`` is the historical name for running exactly one cell
+per process.  New code composing multiple replicas should use
+:class:`repro.serve.cell.ServingCell` plus
+:class:`repro.serve.fleet.CellRouter` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
-from typing import Callable, Optional
+from repro.serve.cell import CellFailure, EngineStats, ServingCell, _bucket
 
-import numpy as np
-
-__all__ = ["ServingEngine", "EngineStats"]
+__all__ = ["ServingEngine", "EngineStats", "CellFailure"]
 
 
-@dataclasses.dataclass
-class _Request:
-    query: np.ndarray
-    t_enqueue: float
-    future: "queue.Queue"
-    t_batch: float = 0.0
+class ServingEngine(ServingCell):
+    """One-cell process: identical surface to :class:`ServingCell`."""
 
 
-@dataclasses.dataclass
-class EngineStats:
-    n: int
-    p50_ms: float
-    p90_ms: float
-    p99_ms: float
-    mean_ms: float
-    queue_ms: float
-    batch_sizes: list
-    hedges: int
-    # adaptive-serving gauges (0 when no cache/estimator is attached):
-    # benchmarks and the maintenance scheduler read this one struct
-    # instead of poking engine internals
-    cache_hits: int = 0
-    cache_misses: int = 0
-    drift: float = 0.0
-    # republish gauges (apply_updates): bytes actually shipped to the
-    # backend(s), and shipped / what-full-re-places-would-have-shipped —
-    # 1.0 means every republish was a full re-place, 0.0 means none
-    # happened yet.  fig6/fig7 and docs/tuning.md quote these counters.
-    republished_bytes: int = 0
-    delta_fraction: float = 0.0
-
-
-def _bucket(n: int) -> int:
-    b = 1
-    while b < n:
-        b <<= 1
-    return b
-
-
-class ServingEngine:
-    """search_fn(queries (B, d)) -> (dists (B,k), ids (B,k))."""
-
-    def __init__(
-        self,
-        search_fn: Callable,
-        *,
-        max_batch: int = 64,
-        max_wait_ms: float = 2.0,
-        hedge_fn: Optional[Callable] = None,
-        hedge_ms: float = 50.0,
-        cache=None,
-        estimator=None,
-    ):
-        """``cache`` (repro.adaptive.FrequencyAdmissionCache) fronts
-        :meth:`search` with exact-match results and is invalidated by
-        :meth:`apply_updates`; ``estimator``
-        (repro.adaptive.OnlineLikelihoodEstimator) observes the top-1 id
-        of every served query so drift-triggered maintenance can follow
-        the live traffic."""
-        self.search_fn = search_fn
-        self.hedge_fn = hedge_fn
-        self.hedge_ms = hedge_ms
-        self.cache = cache
-        self.estimator = estimator
-        self.estimator_errors = 0
-        self.max_batch = max_batch
-        self.max_wait = max_wait_ms / 1e3
-        self.q: "queue.Queue[_Request]" = queue.Queue()
-        self.latencies: list[float] = []
-        self.queue_waits: list[float] = []
-        self.batch_sizes: list[int] = []
-        self.hedges = 0
-        self.republished_bytes = 0
-        self.republish_full_bytes = 0
-        # one lock for every telemetry counter: the batch worker, hedge
-        # path, callers of search()/apply_updates(), and stats() readers
-        # all touch these from different threads
-        self._stats_lock = threading.Lock()
-        self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
-
-    @classmethod
-    def sharded(cls, mesh, target, *, kind: str = "auto", k: int = 10,
-                axes=("data", "model"), query_axes=(), nprobe_local: int = 2,
-                beam_width: int = 8, headroom: float = 1.0,
-                **engine_kw) -> "ServingEngine":
-        """Engine over a mesh-sharded corpus/index.
-
-        Builds a :class:`repro.distributed.backend.ShardedSearchBackend`
-        (corpus pre-placed on the mesh, shard_map search jitted once) and
-        serves it; ``engine_kw`` passes through to the engine constructor
-        (``max_batch``, ``hedge_fn``, ...).  ``headroom`` > 1 reserves
-        device-array growth room so later ``apply_updates`` calls (online
-        index mutation) keep hitting the jitted search.
-        """
-        from repro.distributed.backend import ShardedSearchBackend
-
-        fn = ShardedSearchBackend(
-            mesh, target, kind=kind, k=k, axes=axes, query_axes=query_axes,
-            nprobe_local=nprobe_local, beam_width=beam_width,
-            headroom=headroom)
-        return cls(fn, **engine_kw)
-
-    def apply_updates(self, target, *, delta="auto", **kw):
-        """Swap in a mutated corpus/index without stopping the engine.
-
-        Delegates to the backend's ``apply_updates`` (e.g.
-        :class:`repro.distributed.backend.ShardedSearchBackend`): device
-        placement happens under the backend's lock, in-flight batches
-        finish against the old arrays, later batches see the new ones,
-        and the jitted search kernel is reused — no cold (re-compiling)
-        batch anywhere in the swap.  A hedge replica is updated too —
-        a stale replica would keep serving deleted entities on every
-        hedged request, so a hedge_fn without ``apply_updates`` is an
-        error rather than a silent staleness hole.
-
-        ``delta="auto"`` pops the target's accumulated
-        :class:`repro.core.delta.DeltaManifest` (``pop_delta()``) **once**
-        and hands the same manifest to the primary and the hedge replica,
-        so both walk the same version chain and a dirty-bucket
-        maintenance pass ships only its dirty slices (the backend decides
-        delta vs full per manifest).  Pass ``delta=None`` to force a full
-        re-place, or an explicit manifest to manage popping yourself.
-        Returns the primary backend's republish stats dict when it
-        provides one (``mode``/``bytes``/``full_bytes``), which also
-        feeds :class:`EngineStats`' ``republished_bytes`` /
-        ``delta_fraction`` gauges.
-        """
-        for name, fn in (("search_fn", self.search_fn),
-                         ("hedge_fn", self.hedge_fn)):
-            if fn is None:
-                continue
-            if not hasattr(fn, "apply_updates"):
-                raise TypeError(
-                    f"{name} {type(fn).__name__} has no apply_updates; "
-                    "only pre-placed backends support online mutation")
-        if delta == "auto":
-            delta = (target.pop_delta()
-                     if hasattr(target, "pop_delta") else None)
-        # legacy backends without a delta kwarg keep working: only pass
-        # the manifest when there is one
-        dkw = {} if delta is None else {"delta": delta}
-        stats = self.search_fn.apply_updates(target, **dkw, **kw)
-        hstats = None
-        if self.hedge_fn is not None:
-            hstats = self.hedge_fn.apply_updates(target, **dkw, **kw)
-        # the gauges count bytes shipped to EVERY backend — a hedge
-        # replica that fell back to a full re-place must show up even
-        # when the primary took the delta path
-        with self._stats_lock:
-            for st in (stats, hstats):
-                if isinstance(st, dict):
-                    self.republished_bytes += int(st.get("bytes", 0))
-                    self.republish_full_bytes += int(
-                        st.get("full_bytes", 0))
-        if self.cache is not None:
-            # invalidate AFTER the swap: the generation token handed out
-            # at miss time stops in-flight pre-swap results from being
-            # re-inserted (see FrequencyAdmissionCache.offer)
-            self.cache.invalidate_all()
-        return stats if isinstance(stats, dict) else None
-
-    # ------------------------------------------------------------------
-    def submit(self, query: np.ndarray) -> "queue.Queue":
-        fut: "queue.Queue" = queue.Queue(maxsize=1)
-        self.q.put(_Request(query=query, t_enqueue=time.perf_counter(),
-                            future=fut))
-        return fut
-
-    def search(self, query: np.ndarray, timeout: float = 30.0):
-        """Blocking single-query call, fronted by the result cache.
-
-        Raises :class:`TimeoutError` when no result arrives in
-        ``timeout`` seconds (worker wedged / search_fn stalled).  Cached
-        results are only offered back under the generation observed at
-        miss time, so a search that raced an ``apply_updates`` can never
-        re-insert a stale result.
-        """
-        key = gen = None
-        if self.cache is not None:
-            key = self.cache.key_for(query)
-            gen = self.cache.generation
-            hit = self.cache.get(key)
-            if hit is not None:
-                if self.estimator is not None:
-                    # cache hits ARE head traffic — skipping them would
-                    # blind the drift estimator to exactly the queries
-                    # the index should stay boosted for
-                    try:
-                        self.estimator.observe(np.asarray(hit[1])[:1])
-                    except Exception:
-                        with self._stats_lock:
-                            self.estimator_errors += 1
-                return hit
-        try:
-            out = self.submit(query).get(timeout=timeout)
-        except queue.Empty:
-            raise TimeoutError(
-                f"search timed out after {timeout}s (batch worker "
-                "stalled or search_fn hung)") from None
-        if self.cache is not None:
-            self.cache.offer(key, out, generation=gen)
-        return out
-
-    def close(self):
-        self._stop.set()
-        self._worker.join(timeout=5)
-
-    # ------------------------------------------------------------------
-    def _collect(self) -> list[_Request]:
-        try:
-            first = self.q.get(timeout=0.1)
-        except queue.Empty:
-            return []
-        batch = [first]
-        deadline = time.perf_counter() + self.max_wait
-        while len(batch) < self.max_batch:
-            rem = deadline - time.perf_counter()
-            if rem <= 0:
-                break
-            try:
-                batch.append(self.q.get(timeout=rem))
-            except queue.Empty:
-                break
-        return batch
-
-    def _run(self):
-        while not self._stop.is_set():
-            batch = self._collect()
-            if not batch:
-                continue
-            t0 = time.perf_counter()
-            qs = np.stack([r.query for r in batch])
-            b = qs.shape[0]
-            bb = _bucket(b)
-            if bb > b:
-                qs = np.pad(qs, ((0, bb - b), (0, 0)))
-            result = self._dispatch(qs)
-            t1 = time.perf_counter()
-            d, i = result
-            for j, r in enumerate(batch):
-                r.future.put((np.asarray(d[j]), np.asarray(i[j])))
-            with self._stats_lock:
-                for r in batch:
-                    self.latencies.append(t1 - r.t_enqueue)
-                    self.queue_waits.append(t0 - r.t_enqueue)
-                self.batch_sizes.append(b)
-            if self.estimator is not None:
-                try:
-                    top = np.asarray(i)[:b, 0]
-                    self.estimator.observe(top)
-                except Exception:       # telemetry must never kill serving
-                    with self._stats_lock:
-                        self.estimator_errors += 1
-
-    def _dispatch(self, qs):
-        if self.hedge_fn is None:
-            return self.search_fn(qs)
-        holder: dict = {}
-        done = threading.Event()
-
-        def primary():
-            out = self.search_fn(qs)
-            holder.setdefault("out", out)
-            done.set()
-
-        t = threading.Thread(target=primary, daemon=True)
-        t.start()
-        if not done.wait(self.hedge_ms / 1e3):
-            with self._stats_lock:
-                self.hedges += 1
-            out = self.hedge_fn(qs)      # replica answers the hedge
-            holder.setdefault("out", out)
-            done.set()
-        done.wait()
-        return holder["out"]
-
-    # ------------------------------------------------------------------
-    def stats(self) -> EngineStats:
-        with self._stats_lock:
-            # snapshot under the lock so a stats() racing the batch
-            # worker never sees a latency without its queue_wait twin
-            a = np.asarray(self.latencies) * 1e3
-            qw = np.asarray(self.queue_waits) * 1e3
-            batch_sizes = self.batch_sizes[-100:]
-            hedges = self.hedges
-            rb = self.republished_bytes
-            rfb = self.republish_full_bytes
-        ch = cm = 0
-        drift = 0.0
-        if self.cache is not None:
-            ch, cm = self.cache.hits, self.cache.misses
-        if self.estimator is not None:
-            drift = float(self.estimator.drift()["tv"])
-        frac = rb / rfb if rfb else 0.0
-        if a.size == 0:
-            return EngineStats(0, 0, 0, 0, 0, 0, [], hedges,
-                               cache_hits=ch, cache_misses=cm, drift=drift,
-                               republished_bytes=rb,
-                               delta_fraction=frac)
-        return EngineStats(
-            n=a.size,
-            p50_ms=float(np.percentile(a, 50)),
-            p90_ms=float(np.percentile(a, 90)),
-            p99_ms=float(np.percentile(a, 99)),
-            mean_ms=float(a.mean()),
-            queue_ms=float(qw.mean()),
-            batch_sizes=batch_sizes,
-            hedges=hedges,
-            cache_hits=ch,
-            cache_misses=cm,
-            drift=drift,
-            republished_bytes=rb,
-            delta_fraction=frac,
-        )
+# _bucket is re-exported for callers that imported the pow2 helper from
+# here (tests / benchmarks predating the cell split)
+_bucket = _bucket

@@ -1,0 +1,432 @@
+"""Multi-cell fleet tier: routed admission, off-mesh hedging, fan-out.
+
+One :class:`repro.serve.cell.ServingCell` serves one mesh; fleet-scale
+traffic needs N of them on *disjoint* meshes with a router in front.
+:class:`CellRouter` provides:
+
+  * **admission control** — a cell whose queue is deeper than
+    ``max_queue_depth`` is not dispatched to; when every live cell is
+    saturated the request is shed with :class:`FleetOverloadError`
+    (``retriable = True`` — the client should back off and retry, the
+    condition is load, not a broken fleet);
+  * **cache-affinity + load-aware dispatch** — the preferred cell is
+    chosen by rendezvous (highest-random-weight) hashing of a stable
+    query key, so a recurring head query always lands on the same cell
+    and that cell's TinyLFU cache sees a coherent head; when the
+    preferred cell is saturated the request spills to the least-loaded
+    open cell (counted in ``rerouted``).  Rendezvous hashing remaps
+    only the failed cell's keys when a cell goes down — the survivors'
+    cache heads stay intact;
+  * **cross-cell hedging** — after ``hedge_ms`` without a result, the
+    request is duplicated onto a *different* cell's mesh (counted in
+    ``hedge_cell``).  Unlike the in-cell ``hedge_fn`` replica (which
+    shares the primary's process and mesh), a fleet hedge rides a
+    disjoint mesh, so a straggling or wedged mesh cannot stall both
+    copies.  First responder wins; the loser is cancelled;
+  * **fail-fast rerouting** — a :class:`repro.serve.cell.CellFailure`
+    sentinel marks the cell down and immediately re-dispatches the
+    request to a surviving cell (counted in ``rerouted``); no request
+    is lost to a single-cell failure;
+  * **leader fan-out** — :meth:`CellRouter.apply_updates` pops the
+    target's :class:`repro.core.delta.DeltaManifest` **once** and
+    applies that same manifest to every cell with a *rolling drain*:
+    one cell at a time stops admitting (``_draining``), drains its
+    queue, republishes, and rejoins while the other cells absorb its
+    traffic.  A ``MaintenanceScheduler`` pointed at the router (one
+    shared estimator, one drift decision) becomes the fleet's
+    maintenance leader with no scheduler changes — see
+    ``repro.adaptive.maintenance``.
+
+Staleness across the rolling drain is bounded: a cell serves either the
+pre-manifest or post-manifest index (manifest application is atomic per
+cell, idempotent, and superset-safe), never a torn mix, and every cell's
+result cache is invalidated at its own swap.  See ``docs/serving.md``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.annotations import guarded_by
+from repro.serve.cell import CellFailure, EngineStats, ServingCell
+
+__all__ = ["CellRouter", "FleetOverloadError", "build_fleet", "query_key"]
+
+
+class FleetOverloadError(RuntimeError):
+    """Every live cell is at ``max_queue_depth`` (or no cell is live):
+    the request was shed, not enqueued.  ``retriable`` signals the
+    client to back off and retry — shedding is a load condition, not a
+    broken fleet."""
+
+    retriable = True
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer: cheap, well-distributed 64-bit mixing for
+    rendezvous scores."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+def query_key(query: np.ndarray) -> int:
+    """Stable 64-bit routing key over the query's bytes/dtype/shape —
+    the same digest the result cache keys on, so affinity routing and
+    cache keying agree byte-for-byte."""
+    from repro.adaptive.cache import FrequencyAdmissionCache
+
+    return int.from_bytes(
+        FrequencyAdmissionCache.key_for(query)[:8], "little", signed=False)
+
+
+def _salt_of(name: str) -> int:
+    import hashlib
+
+    return int.from_bytes(
+        hashlib.blake2b(name.encode(), digest_size=8).digest(), "little")
+
+
+class CellRouter:
+    """Routes single-query requests across a fleet of serving cells."""
+
+    def __init__(self, cells: Sequence[ServingCell], *,
+                 max_queue_depth: int = 64,
+                 hedge_ms: Optional[float] = None):
+        """``hedge_ms=None`` disables cross-cell hedging (a request
+        waits on its primary until ``timeout``); a float arms it."""
+        cells = list(cells)
+        if not cells:
+            raise ValueError("CellRouter needs at least one cell")
+        names = [c.name for c in cells]
+        if len(set(names)) != len(names):
+            raise ValueError(f"cell names must be unique, got {names}")
+        self.cells = cells
+        self._by_name = {c.name: c for c in cells}
+        self._salts = {c.name: _salt_of(c.name) for c in cells}
+        self.max_queue_depth = max_queue_depth
+        self.hedge_ms = hedge_ms
+        # one lock for all routing state: caller threads (search),
+        # the leader (apply_updates drain marks), and stats() readers
+        self._lock = threading.Lock()
+        self._down: dict[str, BaseException] = {}
+        self._draining: set[str] = set()
+        self.shed = 0
+        self.rerouted = 0
+        self.hedge_cell = 0
+        self.n_cancelled = 0
+        self.latencies: list[float] = []
+
+    # -- routing policy (all under self._lock) -------------------------
+    @guarded_by("_lock")
+    def _routable(self, exclude=()) -> list:
+        """Live cells preferred in non-draining order: draining cells
+        are only routed to when nothing else is left (a 1-cell fleet
+        must keep admitting through its own maintenance)."""
+        alive = [c for c in self.cells
+                 if c.name not in self._down and c.name not in exclude]
+        ready = [c for c in alive if c.name not in self._draining]
+        return ready or alive
+
+    def _rendezvous(self, key: int, cells: list) -> ServingCell:
+        """Highest-random-weight choice: stable per key, minimal remap
+        when the candidate set changes (only the lost cell's keys
+        move)."""
+        return max(cells, key=lambda c: _mix64(key ^ self._salts[c.name]))
+
+    @guarded_by("_lock")
+    def _admit(self, key: int) -> ServingCell:
+        """Admission decision for one request: preferred-by-affinity,
+        spill to least-loaded, shed when saturated."""
+        open_cells = self._routable()
+        if not open_cells:
+            self.shed += 1
+            raise FleetOverloadError("no live cells in the fleet")
+        pref = self._rendezvous(key, open_cells)
+        if pref.depth() < self.max_queue_depth:
+            return pref
+        alt = min(open_cells, key=lambda c: c.depth())
+        if alt.depth() < self.max_queue_depth:
+            self.rerouted += 1
+            return alt
+        self.shed += 1
+        raise FleetOverloadError(
+            f"all {len(open_cells)} live cells at "
+            f"max_queue_depth={self.max_queue_depth}")
+
+    @guarded_by("_lock")
+    def _pick_open(self, key: int, exclude=()) -> Optional[ServingCell]:
+        """Best alternative cell for a hedge or a failure re-dispatch;
+        None when no un-tried open cell remains."""
+        open_cells = [c for c in self._routable(exclude)
+                      if c.depth() < self.max_queue_depth]
+        if not open_cells:
+            return None
+        return self._rendezvous(key, open_cells)
+
+    @guarded_by("_lock")
+    def _mark_down(self, name: str, error: BaseException) -> None:
+        if name in self._by_name:
+            self._down[name] = error
+
+    def preferred_cell(self, query: np.ndarray) -> Optional[ServingCell]:
+        """The cell affinity routing would pick right now (load
+        ignored) — what a client cache-warms against, and what tests
+        pin routing expectations on."""
+        key = query_key(query)
+        with self._lock:
+            open_cells = self._routable()
+        if not open_cells:
+            return None
+        return self._rendezvous(key, open_cells)
+
+    def down_cells(self) -> dict:
+        """name -> error for every cell currently marked down."""
+        with self._lock:
+            return dict(self._down)
+
+    def revive(self, name: str) -> None:
+        """Put a repaired cell back into rotation (its keys rendezvous
+        back to it; survivors' cache heads are untouched)."""
+        with self._lock:
+            self._down.pop(name, None)
+
+    # -- request path --------------------------------------------------
+    def search(self, query: np.ndarray, timeout: float = 30.0):
+        """Route one query through the fleet; returns ``(dists, ids)``.
+
+        Raises :class:`FleetOverloadError` when shed at admission,
+        :class:`TimeoutError` when no cell answered in ``timeout``
+        seconds (all in-flight copies are cancelled), and
+        :class:`RuntimeError` when every dispatched cell failed and no
+        open cell remains to re-dispatch to.
+        """
+        key = query_key(query)
+        with self._lock:
+            primary = self._admit(key)
+        # per-cell exact-match cache, checked against the affinity
+        # target: recurring head queries short-circuit here, and the
+        # generation token makes a post-swap offer of a pre-swap result
+        # impossible (see FrequencyAdmissionCache)
+        ckey = cgen = None
+        if primary.cache is not None:
+            ckey = primary.cache.key_for(query)
+            cgen = primary.cache.generation
+            hit = primary.cache.get(ckey)
+            if hit is not None:
+                if primary.estimator is not None:
+                    # hits are head traffic: the shared drift estimator
+                    # must see them (same contract as ServingCell.search)
+                    try:
+                        primary.estimator.observe(np.asarray(hit[1])[:1])
+                    except Exception:
+                        pass
+                return hit
+        t0 = time.perf_counter()
+        deadline = t0 + timeout
+        hedge_at = (t0 + self.hedge_ms / 1e3
+                    if self.hedge_ms is not None else None)
+        cancelled = threading.Event()
+        fut = primary.submit(query, cancelled=cancelled)
+        tried = {primary.name}
+        outstanding = 1
+        last_error: Optional[CellFailure] = None
+        while True:
+            now = time.perf_counter()
+            if now >= deadline:
+                # abandon every in-flight copy: the cell workers drop
+                # cancelled requests instead of computing them
+                cancelled.set()
+                with self._lock:
+                    self.n_cancelled += 1
+                raise TimeoutError(
+                    f"fleet search timed out after {timeout}s "
+                    f"(tried cells: {sorted(tried)})")
+            wait_until = deadline
+            if hedge_at is not None and hedge_at < wait_until:
+                wait_until = hedge_at
+            try:
+                out = fut.get(timeout=max(wait_until - now, 1e-4))
+            except queue.Empty:
+                if hedge_at is not None and \
+                        time.perf_counter() >= hedge_at:
+                    hedge_at = None     # hedge fires at most once
+                    with self._lock:
+                        alt = self._pick_open(key, exclude=tried)
+                        if alt is not None:
+                            self.hedge_cell += 1
+                    if alt is not None:
+                        # same future, same cancelled flag: first
+                        # responder wins, the loser is dropped by its
+                        # own cell's worker
+                        alt.submit(query, future=fut, cancelled=cancelled)
+                        tried.add(alt.name)
+                        outstanding += 1
+                continue
+            if isinstance(out, CellFailure):
+                outstanding -= 1
+                last_error = out
+                with self._lock:
+                    self._mark_down(out.cell, out.error)
+                    alt = self._pick_open(key, exclude=tried)
+                    if alt is not None:
+                        self.rerouted += 1
+                if alt is not None:
+                    alt.submit(query, future=fut, cancelled=cancelled)
+                    tried.add(alt.name)
+                    outstanding += 1
+                elif outstanding <= 0:
+                    raise RuntimeError(
+                        f"every dispatched cell failed "
+                        f"(tried: {sorted(tried)})") from last_error.error
+                continue
+            # success: cancel the hedge loser (if any) and record the
+            # end-to-end routed latency
+            cancelled.set()
+            with self._lock:
+                self.latencies.append(time.perf_counter() - t0)
+            if primary.cache is not None:
+                primary.cache.offer(ckey, out, generation=cgen)
+            return out
+
+    # -- leader fan-out ------------------------------------------------
+    def apply_updates(self, target, *, delta="auto",
+                      drain_timeout_s: float = 10.0, **kw):
+        """Fan one index republish out to every cell, rolling.
+
+        ``delta="auto"`` pops the target's accumulated
+        :class:`repro.core.delta.DeltaManifest` exactly **once** and
+        hands the same manifest to every cell — the fleet-leader
+        contract (one drift decision upstream, one pop here, N
+        idempotent applications).  Cells republish one at a time: the
+        cell is marked draining (admission prefers its siblings), its
+        queue drains (bounded by ``drain_timeout_s``), it applies the
+        manifest under its backend's lock, then rejoins.  Down cells
+        are skipped (recorded as ``mode="skipped"``); a revived cell
+        must be re-synced by the next full republish.
+
+        Returns ``{"mode", "bytes", "full_bytes", "cells"}`` where
+        ``cells`` maps cell name to its backend's republish stats and
+        the aggregate mode is ``"full"`` if any cell fell back to a
+        full re-place, else ``"delta"`` if any shipped a delta.
+        """
+        if delta == "auto":
+            delta = (target.pop_delta()
+                     if hasattr(target, "pop_delta") else None)
+        per_cell: dict[str, dict] = {}
+        for cell in self.cells:
+            with self._lock:
+                skip = cell.name in self._down
+                if not skip:
+                    self._draining.add(cell.name)
+            if skip:
+                per_cell[cell.name] = {"mode": "skipped", "bytes": 0,
+                                       "full_bytes": 0, "reason": "down"}
+                continue
+            try:
+                t_end = time.perf_counter() + drain_timeout_s
+                while cell.depth() > 0 and time.perf_counter() < t_end:
+                    time.sleep(1e-3)
+                st = cell.apply_updates(target, delta=delta, **kw)
+                per_cell[cell.name] = st if isinstance(st, dict) else {}
+            finally:
+                with self._lock:
+                    self._draining.discard(cell.name)
+        modes = {s.get("mode") for s in per_cell.values()}
+        mode = ("full" if "full" in modes
+                else "delta" if "delta" in modes
+                else "none")
+        return {
+            "mode": mode,
+            "bytes": sum(int(s.get("bytes", 0)) for s in per_cell.values()),
+            "full_bytes": sum(int(s.get("full_bytes", 0))
+                              for s in per_cell.values()),
+            "cells": per_cell,
+        }
+
+    # -- telemetry -----------------------------------------------------
+    def stats(self) -> EngineStats:
+        """Fleet-level :class:`EngineStats`: percentiles over routed
+        end-to-end latencies, routing counters, and a per-cell
+        breakdown in ``.cells``."""
+        with self._lock:
+            a = np.asarray(self.latencies) * 1e3
+            shed = self.shed
+            rerouted = self.rerouted
+            hedge_cell = self.hedge_cell
+            cancelled = self.n_cancelled
+        per_cell = {c.name: c.stats() for c in self.cells}
+        vals = list(per_cell.values())
+        hedges = sum(s.hedges for s in vals)
+        ch = sum(s.cache_hits for s in vals)
+        cm = sum(s.cache_misses for s in vals)
+        cancelled += sum(s.cancelled for s in vals)
+        rb = sum(s.republished_bytes for s in vals)
+        # delta_fraction needs the raw full-bytes denominators, which
+        # the cells keep privately; recompute from their gauges
+        rfb = sum(c.republish_full_bytes for c in self.cells)
+        frac = rb / rfb if rfb else 0.0
+        # drift is fleet-global: the estimator is shared, so any cell's
+        # reading is THE reading
+        drift = max((s.drift for s in vals), default=0.0)
+        n_w = sum(s.n for s in vals)
+        queue_ms = (sum(s.queue_ms * s.n for s in vals) / n_w
+                    if n_w else 0.0)
+        batch_sizes: list = []
+        for s in vals:
+            batch_sizes.extend(s.batch_sizes[-25:])
+        common = dict(batch_sizes=batch_sizes, hedges=hedges,
+                      cache_hits=ch, cache_misses=cm, drift=drift,
+                      republished_bytes=rb, delta_fraction=frac,
+                      cancelled=cancelled, shed=shed, rerouted=rerouted,
+                      hedge_cell=hedge_cell, cells=per_cell)
+        if a.size == 0:
+            return EngineStats(0, 0, 0, 0, 0, queue_ms, **common)
+        return EngineStats(
+            n=a.size,
+            p50_ms=float(np.percentile(a, 50)),
+            p90_ms=float(np.percentile(a, 90)),
+            p99_ms=float(np.percentile(a, 99)),
+            mean_ms=float(a.mean()),
+            queue_ms=queue_ms,
+            **common,
+        )
+
+    def close(self):
+        for cell in self.cells:
+            cell.close()
+
+
+def build_fleet(meshes, target, *, kind: str = "auto", k: int = 10,
+                cache_capacity: Optional[int] = None, estimator=None,
+                backend_kw: Optional[dict] = None,
+                cell_kw: Optional[dict] = None,
+                **router_kw) -> CellRouter:
+    """Fleet constructor: one ``ShardedSearchBackend`` per disjoint
+    mesh (see :func:`repro.launch.mesh.make_cell_meshes`), a per-cell
+    TinyLFU cache (affinity routing keeps each head coherent), and ONE
+    shared estimator so the maintenance leader makes a single fleet-wide
+    drift decision (``OnlineLikelihoodEstimator`` is internally locked —
+    safe to share across cell workers).
+    """
+    from repro.distributed.backend import ShardedSearchBackend
+
+    cells = []
+    for i, mesh in enumerate(meshes):
+        fn = ShardedSearchBackend(
+            mesh, target, kind=kind, k=k, axes=tuple(mesh.axis_names),
+            **(backend_kw or {}))
+        cache = None
+        if cache_capacity:
+            from repro.adaptive.cache import FrequencyAdmissionCache
+
+            cache = FrequencyAdmissionCache(cache_capacity)
+        cells.append(ServingCell(
+            fn, name=f"cell{i}", cache=cache, estimator=estimator,
+            **(cell_kw or {})))
+    return CellRouter(cells, **router_kw)

@@ -206,6 +206,78 @@ def test_conformance_delta_parity(top, bottom):
         f"{top}/{bottom}: deleted id returned through the delta path")
 
 
+# ---------------------------------------------------------------------------
+# fleet conformance: a routed fleet is indistinguishable from one engine —
+# bitwise on results, and bitwise on every cell's device state after a
+# leader delta fan-out (PR-7 acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top,bottom", COMBOS)
+def test_conformance_fleet_bitwise(top, bottom):
+    """Routing must be a pure placement decision: every query answered
+    through the ``CellRouter`` is bitwise-identical to a standalone
+    control backend, and a leader fan-out (ONE popped manifest applied
+    to every cell) leaves every cell's device state bitwise-identical
+    to a single-cell delta apply — for every top x bottom combo."""
+    from repro.distributed.backend import ShardedSearchBackend
+    from repro.launch.mesh import make_cell_meshes
+    from repro.serve.fleet import build_fleet
+
+    rng = np.random.default_rng(400 + TOP_ALGOS.index(top) * 10
+                                + BOTTOM_ALGOS.index(bottom))
+    db = _corpus(rng, N)
+    p = rng.dirichlet(np.full(N, 0.5)) if bottom == "qlbt" else None
+    idx = _build(db, top, bottom, p)
+    meshes = make_cell_meshes(2, share_devices=True)
+    bkw = dict(nprobe_local=K, beam_width=8, headroom=1.5)
+    control = ShardedSearchBackend(
+        meshes[0], idx, k=TOPK, axes=tuple(meshes[0].axis_names), **bkw)
+    router = build_fleet(meshes, idx, k=TOPK, backend_kw=bkw,
+                         cell_kw=dict(max_wait_ms=0.5))
+    try:
+        q = _corpus(rng, 8)
+
+        def routed_matches_control():
+            for j in range(q.shape[0]):
+                dr, ir = router.search(q[j], timeout=30.0)
+                dc, ic = control(q[j:j + 1])
+                assert np.array_equal(dr, dc[0]) and \
+                    np.array_equal(ir, ic[0]), (
+                        f"{top}/{bottom}: routed result diverged from "
+                        f"the standalone engine")
+
+        routed_matches_control()
+
+        # localized mutation -> ONE pop -> leader fan-out vs single-cell
+        b = int(np.argmax(idx.bucket_counts))
+        dele = idx.bucket_ids[b][:5].copy()
+        idx.delete_entities(dele)
+        new = (idx.centroids[1][None, :]
+               + 0.1 * rng.normal(size=(5, D))).astype(np.float32)
+        idx.add_entities(new)
+        man = idx.pop_delta()
+        agg = router.apply_updates(idx, delta=man)
+        assert agg["mode"] == "delta", agg
+        assert set(agg["cells"]) == {c.name for c in router.cells}
+        control.apply_updates(idx, delta=man)
+
+        for cell in router.cells:
+            for a, c in zip(cell.search_fn._args, control._args):
+                assert a.shape == c.shape
+                assert np.array_equal(np.asarray(a), np.asarray(c)), (
+                    f"{top}/{bottom}: {cell.name} device state diverged "
+                    f"from single-cell delta apply")
+
+        routed_matches_control()
+        ir = np.stack([router.search(q[j], timeout=30.0)[1]
+                       for j in range(q.shape[0])])
+        assert not np.isin(ir, dele).any(), (
+            f"{top}/{bottom}: deleted id returned through the fleet")
+    finally:
+        router.close()
+
+
 def test_conformance_cached_serving_never_stale():
     """The cached serving path must track mutations: a result cached
     before delete+reboost+apply_updates can never resurface."""

@@ -1,0 +1,525 @@
+"""Fleet tier tests: cell cancellation/failure semantics, router
+admission/affinity/hedging/rerouting, leader fan-out, and submesh
+partitioning.  Conformance (bitwise router-vs-engine and fan-out
+parity) lives in test_conformance.py; these tests cover the *behavior*
+the fleet adds on top of a correct cell."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.cell import CellFailure, ServingCell
+from repro.serve.fleet import CellRouter, FleetOverloadError, build_fleet
+
+
+def _ok_fn(qs):
+    b = qs.shape[0]
+    return (np.zeros((b, 3), np.float32),
+            np.tile(np.arange(3), (b, 1)).astype(np.int64))
+
+
+def _slow_fn(delay_s):
+    def fn(qs):
+        time.sleep(delay_s)
+        return _ok_fn(qs)
+
+    return fn
+
+
+def _query(rng):
+    return rng.normal(size=(4,)).astype(np.float32)
+
+
+def _query_for(router, rng, cell_name):
+    """A query whose affinity-preferred cell is ``cell_name``."""
+    for _ in range(1000):
+        q = _query(rng)
+        if router.preferred_cell(q).name == cell_name:
+            return q
+    raise AssertionError(f"no query routed to {cell_name} in 1000 draws")
+
+
+# ---------------------------------------------------------------------------
+# cell: timeout cancellation (the PR-7 leak fix) and failure sentinels
+# ---------------------------------------------------------------------------
+
+
+def test_cell_timeout_cancels_and_excludes_from_stats():
+    """A timed-out request must be dropped by the batch worker — not
+    computed anyway — and must never land in the latency stats (the
+    pre-PR-7 leak: it stayed queued, was later served to nobody, and
+    its enormous latency polluted the percentiles)."""
+    cell = ServingCell(_slow_fn(0.3), name="slow", max_wait_ms=0.5)
+    try:
+        with pytest.raises(TimeoutError):
+            cell.search(np.ones(4, np.float32), timeout=0.05)
+        time.sleep(0.8)                      # let the worker churn past it
+        st = cell.stats()
+        assert st.cancelled == 1
+        assert st.n == 0, "abandoned request landed in latency stats"
+        # the cell still serves fine afterwards
+        d, i = cell.search(np.ones(4, np.float32), timeout=5.0)
+        assert d.shape == (3,)
+        st = cell.stats()
+        assert st.n == 1 and st.cancelled == 1
+    finally:
+        cell.close()
+
+
+def test_cell_backend_failure_fails_fast_not_timeout():
+    """A backend exception must surface as an immediate error on every
+    request of the batch (CellFailure sentinel), not as a 30s timeout,
+    and must not kill the batch worker."""
+
+    boom = {"on": True}
+
+    def flaky(qs):
+        if boom["on"]:
+            raise RuntimeError("boom")
+        return _ok_fn(qs)
+
+    cell = ServingCell(flaky, name="flaky", max_wait_ms=0.5)
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="backend failed"):
+            cell.search(np.ones(4, np.float32), timeout=10.0)
+        assert time.perf_counter() - t0 < 5.0, "failure took the timeout path"
+        assert isinstance(cell.failure(), RuntimeError)
+        boom["on"] = False                    # worker survived the raise
+        d, _ = cell.search(np.ones(4, np.float32), timeout=5.0)
+        assert d.shape == (3,)
+    finally:
+        cell.close()
+
+
+def test_cell_close_fails_queued_requests():
+    cell = ServingCell(_slow_fn(0.5), name="c", max_wait_ms=0.5,
+                       max_batch=1)
+    fut1 = cell.submit(np.ones(4, np.float32))
+    fut2 = cell.submit(np.ones(4, np.float32))
+    cell.close()
+    # whatever was still queued at close resolves to CellFailure, so a
+    # routed caller re-dispatches instead of waiting out its timeout
+    outs = [fut1.get(timeout=6.0), fut2.get(timeout=6.0)]
+    assert any(isinstance(o, CellFailure) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# router: admission, affinity, hedging, rerouting
+# ---------------------------------------------------------------------------
+
+
+def test_router_admission_sheds_with_retriable_signal():
+    gate = threading.Event()
+
+    def blocked(qs):
+        gate.wait(10.0)
+        return _ok_fn(qs)
+
+    cell = ServingCell(blocked, name="cell0", max_wait_ms=0.5, max_batch=1)
+    router = CellRouter([cell], max_queue_depth=2)
+    try:
+        threads = [
+            threading.Thread(
+                target=lambda j=j: router.search(
+                    np.full(4, j, np.float32), timeout=20.0),
+                daemon=True)
+            for j in range(3)]                # 1 in compute + 2 queued
+        for t in threads:
+            t.start()
+        deadline = time.perf_counter() + 5.0
+        while cell.depth() < 2 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(FleetOverloadError) as ei:
+            router.search(np.full(4, 99, np.float32), timeout=1.0)
+        assert ei.value.retriable is True
+        assert router.stats().shed == 1
+    finally:
+        gate.set()
+        for t in threads:
+            t.join(timeout=5.0)
+        router.close()
+
+
+def test_router_affinity_is_stable_and_balanced():
+    cells = [ServingCell(_ok_fn, name=f"cell{i}", max_wait_ms=0.5)
+             for i in range(4)]
+    router = CellRouter(cells)
+    try:
+        rng = np.random.default_rng(0)
+        qs = [_query(rng) for _ in range(400)]
+        first = [router.preferred_cell(q).name for q in qs]
+        again = [router.preferred_cell(q).name for q in qs]
+        assert first == again, "affinity not deterministic"
+        counts = {n: first.count(n) for n in set(first)}
+        assert len(counts) == 4
+        assert all(c > 400 / 4 / 3 for c in counts.values()), (
+            f"rendezvous badly unbalanced: {counts}")
+    finally:
+        router.close()
+
+
+def test_router_affinity_remaps_only_failed_cells_keys():
+    """Rendezvous property: when a cell dies, only ITS keys move —
+    survivors keep their cache heads."""
+    cells = [ServingCell(_ok_fn, name=f"cell{i}", max_wait_ms=0.5)
+             for i in range(4)]
+    router = CellRouter(cells)
+    try:
+        rng = np.random.default_rng(1)
+        qs = [_query(rng) for _ in range(300)]
+        before = [router.preferred_cell(q).name for q in qs]
+        with router._lock:
+            router._mark_down("cell2", RuntimeError("x"))
+        after = [router.preferred_cell(q).name for q in qs]
+        for b, a in zip(before, after):
+            if b != "cell2":
+                assert a == b, "a healthy cell's key moved on failure"
+            else:
+                assert a != "cell2"
+        router.revive("cell2")
+        assert [router.preferred_cell(q).name for q in qs] == before
+    finally:
+        router.close()
+
+
+def test_router_cross_cell_hedge():
+    """A straggling primary mesh must not stall the request: after
+    hedge_ms the router duplicates onto a different cell and the fast
+    cell's answer wins."""
+    cells = [ServingCell(_slow_fn(0.5), name="cell0", max_wait_ms=0.5),
+             ServingCell(_ok_fn, name="cell1", max_wait_ms=0.5)]
+    router = CellRouter(cells, hedge_ms=30.0)
+    try:
+        q = _query_for(router, np.random.default_rng(2), "cell0")
+        t0 = time.perf_counter()
+        d, _ = router.search(q, timeout=10.0)
+        elapsed = time.perf_counter() - t0
+        assert d.shape == (3,)
+        assert elapsed < 0.4, f"hedge did not win: {elapsed:.3f}s"
+        assert router.stats().hedge_cell == 1
+    finally:
+        router.close()
+
+
+def test_router_reroutes_on_cell_failure():
+    def failing(qs):
+        raise RuntimeError("dead mesh")
+
+    cells = [ServingCell(failing, name="cell0", max_wait_ms=0.5),
+             ServingCell(_ok_fn, name="cell1", max_wait_ms=0.5)]
+    router = CellRouter(cells)
+    try:
+        rng = np.random.default_rng(3)
+        q = _query_for(router, rng, "cell0")
+        d, _ = router.search(q, timeout=10.0)        # rerouted, not raised
+        assert d.shape == (3,)
+        st = router.stats()
+        assert st.rerouted == 1
+        assert "cell0" in router.down_cells()
+        # admission now avoids the downed cell entirely
+        assert router.preferred_cell(q).name == "cell1"
+        # all cells down -> shed with the retriable signal
+        with router._lock:
+            router._mark_down("cell1", RuntimeError("x"))
+        with pytest.raises(FleetOverloadError):
+            router.search(q, timeout=1.0)
+    finally:
+        router.close()
+
+
+def test_router_zero_lost_requests_under_cell_failure():
+    """The fig8 acceptance at test scale: a cell failing mid-stream
+    loses NOTHING — every request completes via fail-fast rerouting."""
+    switch = threading.Event()
+
+    def flaky(qs):
+        if switch.is_set():
+            raise RuntimeError("injected failure")
+        return _ok_fn(qs)
+
+    cells = [ServingCell(flaky, name="cell0", max_wait_ms=0.5),
+             ServingCell(_ok_fn, name="cell1", max_wait_ms=0.5),
+             ServingCell(_ok_fn, name="cell2", max_wait_ms=0.5)]
+    router = CellRouter(cells, max_queue_depth=64)
+    try:
+        rng = np.random.default_rng(4)
+        queries = [_query(rng) for _ in range(60)]
+        ok, errors = [], []
+
+        def client(chunk):
+            for q in chunk:
+                try:
+                    d, _ = router.search(q, timeout=15.0)
+                    ok.append(d.shape)
+                except Exception as e:       # noqa: BLE001 — counting loss
+                    errors.append(e)
+
+        chunks = [queries[i::6] for i in range(6)]
+        threads = [threading.Thread(target=client, args=(c,), daemon=True)
+                   for c in chunks]
+        for t in threads:
+            t.start()
+        time.sleep(0.02)
+        switch.set()                          # cell0 dies mid-stream
+        for t in threads:
+            t.join(timeout=30.0)
+        assert not errors, f"lost {len(errors)} requests: {errors[:3]}"
+        assert len(ok) == 60
+    finally:
+        router.close()
+
+
+def test_router_search_uses_affinity_cell_cache():
+    from repro.adaptive import FrequencyAdmissionCache
+
+    cells = [ServingCell(_ok_fn, name=f"cell{i}", max_wait_ms=0.5,
+                         cache=FrequencyAdmissionCache(capacity=32))
+             for i in range(2)]
+    router = CellRouter(cells)
+    try:
+        q = _query(np.random.default_rng(5))
+        pref = router.preferred_cell(q)
+        router.search(q, timeout=5.0)
+        router.search(q, timeout=5.0)         # exact repeat: cache hit
+        assert pref.cache.hits >= 1
+        other = next(c for c in router.cells if c is not pref)
+        assert other.cache.hits == 0, "affinity leaked to the other cache"
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# leader fan-out
+# ---------------------------------------------------------------------------
+
+
+def test_router_apply_updates_rolls_and_aggregates():
+    class _Backend:
+        def __init__(self):
+            self.applied = []
+
+        def __call__(self, qs):
+            return _ok_fn(qs)
+
+        def apply_updates(self, target, delta=None, **kw):
+            self.applied.append(delta)
+            return {"mode": "delta" if delta is not None else "full",
+                    "bytes": 7, "full_bytes": 100, "reason": None}
+
+    class _Target:
+        def __init__(self):
+            self.pops = 0
+
+        def pop_delta(self):
+            self.pops += 1
+            return f"manifest-{self.pops}"
+
+    backends = [_Backend() for _ in range(3)]
+    cells = [ServingCell(b, name=f"cell{i}", max_wait_ms=0.5)
+             for i, b in enumerate(backends)]
+    router = CellRouter(cells)
+    try:
+        target = _Target()
+        agg = router.apply_updates(target)
+        # leader contract: ONE pop, the SAME manifest to every cell
+        assert target.pops == 1
+        assert all(b.applied == ["manifest-1"] for b in backends)
+        assert agg["mode"] == "delta"
+        assert agg["bytes"] == 21 and agg["full_bytes"] == 300
+        assert set(agg["cells"]) == {"cell0", "cell1", "cell2"}
+        # down cells are skipped, not crashed into
+        with router._lock:
+            router._mark_down("cell1", RuntimeError("x"))
+        agg2 = router.apply_updates(target)
+        assert target.pops == 2
+        assert agg2["cells"]["cell1"]["mode"] == "skipped"
+        assert len(backends[1].applied) == 1
+        assert len(backends[0].applied) == 2
+        # fleet stats aggregate the republish gauges across cells
+        st = router.stats()
+        assert st.republished_bytes == 7 * 3 + 7 * 2
+    finally:
+        router.close()
+
+
+def test_maintenance_scheduler_as_fleet_leader():
+    """A MaintenanceScheduler pointed at the router IS the fleet
+    leader: one drift decision on the shared estimator, one reboost,
+    one manifest fanned to every cell, every cell's cache
+    invalidated."""
+    from repro.adaptive import (
+        FrequencyAdmissionCache,
+        HostIndexBackend,
+        MaintenanceScheduler,
+        OnlineLikelihoodEstimator,
+    )
+    from repro.core.index import SearchIndex
+    from repro.core.protocol import IndexSpec
+    from repro.core.tree import build_qlbt
+
+    rng = np.random.default_rng(6)
+    n, d = 256, 8
+    db = rng.normal(size=(n, d)).astype(np.float32)
+    p0 = np.full(n, 1.0 / n)
+    idx = SearchIndex(spec=IndexSpec(kind="qlbt"), db=db,
+                      tree=build_qlbt(db, p0, seed=1), p=p0)
+    est = OnlineLikelihoodEstimator(n, reference=p0, halflife=64)
+    backends = [HostIndexBackend(idx, k=5) for _ in range(2)]
+    cells = [ServingCell(b, name=f"cell{i}", max_wait_ms=0.5,
+                         cache=FrequencyAdmissionCache(capacity=16),
+                         estimator=est)
+             for i, b in enumerate(backends)]
+    router = CellRouter(cells)
+    sched = MaintenanceScheduler(
+        est, idx, engine=router, interval_s=None,
+        drift_threshold=0.05, min_observations=32,
+        cooldown_observations=1, rebalance=False)
+    try:
+        gens = [c.cache.generation for c in cells]
+        # skew every observation onto a tiny head: drift explodes
+        head = np.arange(4)
+        for _ in range(40):
+            est.observe(head)
+        ev = sched.check_now()
+        assert ev is not None, "leader never triggered"
+        rep = ev["republish"]
+        assert set(rep["cells"]) == {"cell0", "cell1"}
+        # every cell got the same republished index reference
+        assert all(b.index is idx for b in backends)
+        assert all(b.last_delta is backends[0].last_delta
+                   for b in backends)
+        assert all(c.cache.generation == g + 1
+                   for c, g in zip(cells, gens)), (
+            "a cell's cache survived the fan-out")
+    finally:
+        sched.close()
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# disjoint submesh partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_make_cell_meshes_single_device_requires_sharing():
+    import jax
+
+    from repro.launch.mesh import make_cell_meshes
+
+    if len(jax.devices()) > 1:
+        pytest.skip("pool has multiple devices")
+    with pytest.raises(RuntimeError, match="share_devices"):
+        make_cell_meshes(2)
+    meshes = make_cell_meshes(2, share_devices=True)
+    assert len(meshes) == 2
+    assert all(m.axis_names == ("data",) for m in meshes)
+    assert all(m.devices.size == 1 for m in meshes)
+    # one cell over the whole pool needs no sharing
+    (m,) = make_cell_meshes(1)
+    assert m.devices.size == len(jax.devices())
+
+
+def test_make_cell_meshes_disjoint_blocks():
+    """Disjoint partitioning over a fake pool: consecutive blocks, no
+    device in two cells."""
+    import jax
+
+    from repro.launch.mesh import make_cell_meshes
+
+    devs = list(jax.devices()) * 4           # fake a 4x pool by reuse
+    meshes = make_cell_meshes(4, devices=devs, shape=(1,))
+    assert len(meshes) == 4
+    for i, m in enumerate(meshes):
+        assert list(m.devices.ravel()) == devs[i:i + 1]
+    with pytest.raises(ValueError):
+        make_cell_meshes(0)
+
+
+def test_build_fleet_cells_one_spec_per_mesh():
+    from repro.configs.base import AnnConfig, ShapeSpec
+    from repro.launch.cells import build_fleet_cells
+    from repro.launch.mesh import make_cell_meshes
+
+    cfg = AnnConfig(name="fleet-test", n=2048, d=32, n_clusters=16,
+                    nprobe=4)
+    shape = ShapeSpec("serve_sm", "serve", dims={"batch": 8, "k": 10})
+    meshes = make_cell_meshes(2, share_devices=True)
+    specs = build_fleet_cells(cfg, "ann", meshes, shape)
+    assert len(specs) == 2
+    for spec, mesh in zip(specs, meshes):
+        assert spec.step_fn is not None
+        assert spec.in_shardings[0].mesh is mesh
+    # replicas are identical up to mesh
+    assert specs[0].note == specs[1].note
+    assert [a.shape for a in specs[0].args] == \
+        [a.shape for a in specs[1].args]
+
+
+# ---------------------------------------------------------------------------
+# stats plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_stats_and_lat_summary_breakdown():
+    import os
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.common import lat_summary
+
+    cells = [ServingCell(_ok_fn, name=f"cell{i}", max_wait_ms=0.5)
+             for i in range(2)]
+    router = CellRouter(cells)
+    try:
+        rng = np.random.default_rng(7)
+        ts = []
+        for _ in range(12):
+            q = _query(rng)
+            t0 = time.perf_counter()
+            router.search(q, timeout=5.0)
+            ts.append(time.perf_counter() - t0)
+        st = router.stats()
+        assert st.n == 12
+        assert set(st.cells) == {"cell0", "cell1"}
+        assert sum(s.n for s in st.cells.values()) == 12
+        out = lat_summary(ts, stats=st)
+        assert set(out["cells"]) == {"cell0", "cell1"}
+        assert all("p99_ms" in v for v in out["cells"].values())
+        # zero-valued routing counters stay out of the row; force one in
+        with router._lock:
+            router.rerouted += 1
+        out2 = lat_summary(ts, stats=router.stats())
+        assert out2["rerouted"] == 1 and "shed" not in out2
+    finally:
+        router.close()
+
+
+def test_build_fleet_shares_one_estimator():
+    from repro.adaptive import OnlineLikelihoodEstimator
+    from repro.launch.mesh import make_cell_meshes
+
+    rng = np.random.default_rng(8)
+    db = rng.normal(size=(128, 8)).astype(np.float32)
+    est = OnlineLikelihoodEstimator(128)
+    meshes = make_cell_meshes(2, share_devices=True)
+    router = build_fleet(meshes, db, kind="brute", k=5,
+                         cache_capacity=16, estimator=est,
+                         cell_kw=dict(max_wait_ms=0.5))
+    try:
+        assert len(router.cells) == 2
+        assert all(c.estimator is est for c in router.cells)
+        caches = [c.cache for c in router.cells]
+        assert caches[0] is not caches[1], "caches must be per-cell"
+        d, i = router.search(db[0], timeout=30.0)
+        assert d.shape == (5,)
+        # the worker observes AFTER delivering the result — poll briefly
+        deadline = time.perf_counter() + 5.0
+        while est.n_total == 0 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert est.n_total > 0, "shared estimator saw no traffic"
+    finally:
+        router.close()
