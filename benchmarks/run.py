@@ -36,8 +36,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale corpora (1M SIFT / 10M DEEP)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,table1,fig2d,fig3,sharded,"
-                         "updates,adaptive,delta,fig8,roofline")
+                    help="comma list: fig1,table1,fig2d,fig3,sharded "
+                         "(alias: fig4),updates,adaptive,delta,fig8,"
+                         "roofline")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI-sized configs: tiny corpora/shard counts so "
+                         "the fast job can persist BENCH_*.json artifacts")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -65,13 +69,17 @@ def main() -> None:
         from benchmarks import fig3_protocol
 
         _figure("fig3", {"full": args.full}, fig3_protocol.run)
-    if want("sharded"):
+    if want("sharded") or want("fig4"):
         from benchmarks import fig4_sharded
 
-        shards = (1, 2, 4, 8) if args.full else (1, 2, 4)
-        n = 100_000 if args.full else 20_000
-        _figure("fig4_sharded", {"full": args.full, "shards": shards,
-                                 "n": n},
+        if args.ci:
+            shards, n = (1, 2), 4096
+        elif args.full:
+            shards, n = (1, 2, 4, 8), 100_000
+        else:
+            shards, n = (1, 2, 4), 20_000
+        _figure("fig4_sharded", {"full": args.full, "ci": args.ci,
+                                 "shards": shards, "n": n},
                 lambda: fig4_sharded.run(shards=shards, n=n))
     if want("updates"):
         from benchmarks import fig5_updates

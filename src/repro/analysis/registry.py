@@ -220,6 +220,67 @@ def _sharded_forest_search() -> Plan:
         cache_size=be.jit_cache_size)
 
 
+@register_entry_point("fused-sharded-search")
+def _fused_sharded_search() -> Plan:
+    """PR-8 paths: ``fused=True`` routes the per-shard scan+top-k
+    through the kernel dispatch (``repro.kernels.ops``) and
+    ``precision="int8"`` additionally swaps the placed corpus for
+    per-row-scaled codes.  Both callables jit at construction and must
+    survive delta windows (scatters into the quantized corpus included)
+    without a single new compile."""
+    import numpy as np
+
+    from repro.core.delta import DeltaLog
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(5)
+    db = _corpus(rng, 64)
+    be8 = ShardedSearchBackend(
+        _mesh1(), db, kind="brute", k=5, axes=("data",), headroom=2.0,
+        fused=True, precision="int8")
+    _, idx = _index(rng, "brute")          # bucketed flat bottom -> IVF
+    bei = ShardedSearchBackend(
+        _mesh1(), idx, k=5, axes=("data",), nprobe_local=_K,
+        headroom=2.0, fused=True)
+    q = _corpus(rng, 4)
+    log = DeltaLog(base_version=0, base_n=64)
+    state = {"db": db, "version": 0}
+
+    def int8_delta(n_append, n_tomb):
+        def step():
+            cur = state["db"]
+            if n_append:
+                state["db"] = np.concatenate([cur, _corpus(rng, n_append)])
+            if n_tomb:
+                log.mark_tombstones(
+                    rng.choice(cur.shape[0], n_tomb, replace=False))
+            state["version"] += 1
+            man = log.pop(state["version"], state["db"].shape[0])
+            st = be8.apply_updates(state["db"], delta=man)
+            assert st["mode"] == "delta", st
+            be8(q)
+
+        return step
+
+    def ivf_mutate():
+        _localized_mutation(rng, idx)
+        bei.apply_updates(idx, delta=idx.pop_delta())
+        bei(q)
+
+    def cache_size():
+        sizes = [be8.jit_cache_size(), bei.jit_cache_size()]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+    return Plan(
+        steps=[("warmup-fused-searches", lambda: (be8(q), bei(q))),
+               ("warmup-int8-delta-append-3-tombstone-2", int8_delta(3, 2)),
+               ("int8-delta-append-4-tombstone-2", int8_delta(4, 2)),
+               ("fused-ivf-delta-republish-1", ivf_mutate),
+               ("fused-ivf-delta-republish-2", ivf_mutate)],
+        cache_size=cache_size,
+        warmup_steps=2)
+
+
 @register_entry_point("fleet-router-search")
 def _fleet_router_search() -> Plan:
     import numpy as np

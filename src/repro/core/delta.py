@@ -35,9 +35,37 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["DeltaManifest", "DeltaLog"]
+__all__ = ["DeltaManifest", "DeltaLog", "merge_manifests"]
 
 _EMPTY = np.zeros(0, dtype=np.int64)
+
+
+def merge_manifests(manifests) -> "DeltaManifest":
+    """Collapse a version-ordered run of manifests into one covering
+    window — the revived-cell replay record.
+
+    Because manifests are metadata (dirty names, not payload) and
+    application is idempotent and superset-safe, the union of dirty
+    buckets / tombstones over ``[first.base_version, last.version)``
+    applied against the *current* index state replays every change the
+    run described.  ``full`` is sticky: one inexpressible window makes
+    the merged window inexpressible.
+    """
+    ms = sorted(manifests, key=lambda m: m.base_version)
+    if not ms:
+        raise ValueError("merge_manifests needs at least one manifest")
+    return DeltaManifest(
+        base_version=ms[0].base_version,
+        version=ms[-1].version,
+        base_n=ms[0].base_n,
+        n=ms[-1].n,
+        dirty_buckets=np.unique(np.concatenate(
+            [np.asarray(m.dirty_buckets, np.int64) for m in ms])),
+        tombstones=np.unique(np.concatenate(
+            [np.asarray(m.tombstones, np.int64) for m in ms])),
+        lsh_rows_appended=sum(m.lsh_rows_appended for m in ms),
+        full=any(m.full for m in ms),
+    )
 
 
 @dataclasses.dataclass(frozen=True)

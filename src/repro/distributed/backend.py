@@ -53,9 +53,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.annotations import guarded_by
+from repro.kernels.ops import quantize_rows_int8
 from repro.distributed.sharding import (
     _axes_size,
     _brute_device_arrays,
+    _brute_int8_device_arrays,
     _forest_device_arrays,
     _ivf_device_arrays,
     _pad_queries,
@@ -108,7 +110,8 @@ class ShardedSearchBackend:
                  nprobe_local: int = 2, beam_width: int = 8,
                  headroom: float = 1.0, alive=None,
                  delta_updates: bool = True,
-                 delta_max_fraction: float = 0.5):
+                 delta_max_fraction: float = 0.5,
+                 fused: bool = True, precision: str = "f32"):
         self.mesh = mesh
         self.k = k
         self.axes = tuple(axes)
@@ -117,6 +120,8 @@ class ShardedSearchBackend:
         self.n_dev = _axes_size(mesh, self.axes)
         self.delta_updates = delta_updates
         self.delta_max_fraction = delta_max_fraction
+        self.fused = fused
+        self.precision = precision
         self._lock = threading.Lock()
         self._delta_fn = None
         self._delta_fn_masked = None     # brute explicit-alive path
@@ -139,11 +144,18 @@ class ShardedSearchBackend:
                 kind = "ivf"
         self.kind = kind
 
+        if precision not in ("f32", "int8"):
+            raise ValueError(
+                f"precision must be 'f32' or 'int8', got {precision!r}")
+        if precision == "int8" and kind != "brute":
+            raise ValueError(
+                "precision='int8' is only supported for the brute kind")
         if kind == "brute":
             n = int(np.shape(target)[0])
             self._rows = -(-int(np.ceil(n * headroom)) // self.n_dev)
             self._fn = jax.jit(make_sharded_brute_fn(
-                mesh, self.axes, k, self._rows, self.query_axes))
+                mesh, self.axes, k, self._rows, self.query_axes,
+                fused=fused, precision=precision))
         elif kind == "ivf":
             self._K = int(target.bucket_ids.shape[0])
             self._cap = int(np.ceil(target.bucket_ids.shape[1] * headroom))
@@ -151,7 +163,7 @@ class ShardedSearchBackend:
             self._Kp = Kp
             self._fn = jax.jit(make_sharded_ivf_fn(
                 mesh, self.axes, k, nprobe_local, Kp // self.n_dev,
-                self._K, self.query_axes))
+                self._K, self.query_axes, fused=fused))
         elif kind == "forest":
             self._shapes = forest_shard_shapes(
                 target, self.n_dev, headroom,
@@ -159,7 +171,7 @@ class ShardedSearchBackend:
             self._fn = jax.jit(make_sharded_forest_fn(
                 mesh, self.axes, k, nprobe_local, beam_width,
                 self._shapes.leaf_sz, self._shapes.max_depth,
-                self.query_axes))
+                self.query_axes, fused=fused))
         else:
             raise ValueError(f"unknown backend kind {kind!r}")
         self._place(target, alive=alive)
@@ -174,7 +186,17 @@ class ShardedSearchBackend:
         """Pad/shard/device_put ``target`` into the recorded shapes."""
         put = lambda x, spec: jax.device_put(
             x, NamedSharding(self.mesh, spec))
-        if self.kind == "brute":
+        if self.kind == "brute" and self.precision == "int8":
+            codes, scales, valid, _, n = _brute_int8_device_arrays(
+                np.asarray(target, np.float32), self.n_dev,
+                rows=self._rows, alive=alive)
+            self._full_bytes = sum(int(np.asarray(a).nbytes)
+                                   for a in (codes, scales, valid))
+            self._n = n
+            self._args = (put(codes, P(self.axes, None)),
+                          put(scales, P(self.axes)),
+                          put(valid, P(self.axes)))
+        elif self.kind == "brute":
             dbp, valid, _, n = _brute_device_arrays(
                 np.asarray(target, np.float32), self.n_dev,
                 rows=self._rows, alive=alive)
@@ -221,6 +243,23 @@ class ShardedSearchBackend:
         donation, so there we let XLA copy.
         """
         donate_ok = jax.default_backend() != "cpu"
+        if self.kind == "brute" and self.precision == "int8":
+            specs = (self._corpus_spec(2), self._corpus_spec(1),
+                     self._corpus_spec(1))
+
+            @partial(jax.jit,
+                     donate_argnums=(0, 1, 2) if donate_ok else (),
+                     out_shardings=specs)
+            def fn(codes, scales, valid, rows, vals8, vscales, tomb):
+                # same cumulative-liveness contract as the f32 scatter,
+                # over the quantized (codes, scales) pair
+                codes = codes.at[rows].set(vals8, mode="drop")
+                scales = scales.at[rows].set(vscales, mode="drop")
+                valid = valid.at[rows].set(True, mode="drop")
+                valid = valid.at[tomb].set(False, mode="drop")
+                return codes, scales, valid
+
+            return fn
         if self.kind == "brute":
             specs = (self._corpus_spec(2), self._corpus_spec(1))
 
@@ -287,6 +326,16 @@ class ShardedSearchBackend:
         ships the complete liveness truth as a mask, so only the corpus
         rows are scattered and the mask is re-placed wholesale."""
         donate_ok = jax.default_backend() != "cpu"
+        if self.kind == "brute" and self.precision == "int8":
+            specs = (self._corpus_spec(2), self._corpus_spec(1))
+
+            @partial(jax.jit, donate_argnums=(0, 1) if donate_ok else (),
+                     out_shardings=specs)
+            def fn8(codes, scales, rows, vals8, vscales):
+                return (codes.at[rows].set(vals8, mode="drop"),
+                        scales.at[rows].set(vscales, mode="drop"))
+
+            return fn8
 
         @partial(jax.jit, donate_argnums=(0,) if donate_ok else (),
                  out_shardings=self._corpus_spec(2))
@@ -333,11 +382,15 @@ class ShardedSearchBackend:
             new = np.arange(delta.base_n, n, dtype=np.int32)
             vals = db[delta.base_n:n]
             u = _pow2(new.size)
-            pay = {
-                "rows": _pad_rows(new, u, fill=rows_tot),
-                "vals": _pad_rows(vals, u),
-                "n": n,
-            }
+            pay = {"rows": _pad_rows(new, u, fill=rows_tot), "n": n}
+            if self.precision == "int8":
+                vals8, vscales = quantize_rows_int8(vals)
+                pay["vals8"] = _pad_rows(vals8, u)
+                pay["vscales"] = _pad_rows(vscales, u, fill=1.0)
+                vals_bytes = int(vals8.nbytes + vscales.nbytes)
+            else:
+                pay["vals"] = _pad_rows(vals, u)
+                vals_bytes = int(vals.nbytes)
             if alive is not None:
                 # caller supplied the complete liveness truth: ship the
                 # whole mask (it IS the payload — nothing to delta)
@@ -346,7 +399,7 @@ class ShardedSearchBackend:
                 if delta.tombstones.size:
                     valid[delta.tombstones] = False
                 pay["valid"] = valid
-                pay["bytes"] = int(vals.nbytes + new.nbytes + valid.nbytes)
+                pay["bytes"] = int(vals_bytes + new.nbytes + valid.nbytes)
             else:
                 # tombstone-only (and append) windows ship two index
                 # vectors; the device mask keeps the bits from earlier
@@ -355,7 +408,7 @@ class ShardedSearchBackend:
                 tomb = np.asarray(delta.tombstones, np.int32)
                 pay["tomb"] = _pad_rows(tomb, _pow2(tomb.size),
                                         fill=rows_tot)
-                pay["bytes"] = int(vals.nbytes + new.nbytes + tomb.nbytes)
+                pay["bytes"] = int(vals_bytes + new.nbytes + tomb.nbytes)
             return pay, None
         if self._version is None or delta.base_version > self._version:
             return None, "version"
@@ -388,16 +441,26 @@ class ShardedSearchBackend:
         if self.kind == "brute" and "valid" in pay:
             if self._delta_fn_masked is None:
                 self._delta_fn_masked = self._make_masked_delta_fn()
-            db = self._delta_fn_masked(
-                self._args[0], pay["rows"], pay["vals"])
             valid = jax.device_put(
                 pay["valid"], NamedSharding(self.mesh, P(self.axes)))
-            self._args = (db, valid)
+            if self.precision == "int8":
+                codes, scales = self._delta_fn_masked(
+                    self._args[0], self._args[1], pay["rows"],
+                    pay["vals8"], pay["vscales"])
+                self._args = (codes, scales, valid)
+            else:
+                db = self._delta_fn_masked(
+                    self._args[0], pay["rows"], pay["vals"])
+                self._args = (db, valid)
             self._n = pay["n"]
             return
         if self._delta_fn is None:
             self._delta_fn = self._make_delta_fn()
-        if self.kind == "brute":
+        if self.kind == "brute" and self.precision == "int8":
+            self._args = self._delta_fn(
+                self._args[0], self._args[1], self._args[2], pay["rows"],
+                pay["vals8"], pay["vscales"], pay["tomb"])
+        elif self.kind == "brute":
             self._args = self._delta_fn(
                 self._args[0], self._args[1], pay["rows"], pay["vals"],
                 pay["tomb"])

@@ -58,6 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.brute import batched_l2sq, pairwise_l2sq
+from repro.kernels import ops as kernel_ops
 
 __all__ = [
     "ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN",
@@ -211,7 +212,8 @@ def _merge_gathered(gd, gi, k):
 
 
 def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
-                          query_axes: tuple = ()):
+                          query_axes: tuple = (), *, fused: bool = True,
+                          precision: str = "f32"):
     """Exact distributed search: db row-sharded over ``axes``; queries
     optionally batch-sharded over ``query_axes``.
 
@@ -221,17 +223,28 @@ def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
     candidates in XLA's top_k.  ``valid`` being data (not a baked-in row
     count) is what lets ``ShardedSearchBackend.apply_updates`` serve
     through corpus mutations without re-jitting.
+
+    ``fused=True`` (default) routes the per-shard scan through
+    ``kernels.ops.l2_topk_op`` — on TPU the Pallas streaming kernel, which
+    never materializes the local ``(B, rows)`` distance matrix; on CPU the
+    jnp oracle whose ops are literally the unfused path's, so results are
+    bitwise-identical either way.  ``precision="int8"`` (fused only)
+    switches the operand set to per-row-scaled int8 codes — the callable
+    then takes ``(codes, scales, valid, q)``.
     """
     _check_disjoint(axes, query_axes)
+    if precision not in ("f32", "int8"):
+        raise ValueError(f"precision must be 'f32' or 'int8', "
+                         f"got {precision!r}")
+    if precision == "int8" and not fused:
+        raise ValueError("precision='int8' is a fused-kernel feature; "
+                         "pass fused=True")
     k_loc = min(k, shard_rows)   # a shard may hold fewer rows than k
 
-    def local(db_shard, valid_shard, q):
-        d2 = pairwise_l2sq(q, db_shard)                    # (B, rows)
-        d2 = jnp.where(valid_shard[None, :], d2, jnp.inf)
-        lin = jax.lax.axis_index(axes)                     # flattened index
-        neg, ids = jax.lax.top_k(-d2, k_loc)
-        gids = (ids + lin * shard_rows).astype(jnp.int32)
-        ld, li = -neg, gids
+    def _finish_local(ld, li, lin):
+        # shard-local slot ids -> global row ids; the (inf, -1) kernel
+        # sentinel must stay -1 rather than alias shard 0's rows
+        li = jnp.where(li >= 0, li + lin * shard_rows, -1).astype(jnp.int32)
         if k_loc < k:
             ld = jnp.pad(ld, ((0, 0), (0, k - k_loc)),
                          constant_values=jnp.inf)
@@ -240,13 +253,64 @@ def make_sharded_brute_fn(mesh, axes: tuple, k: int, shard_rows: int,
         gi = jax.lax.all_gather(li, axes, tiled=False)
         return _merge_gathered(gd, gi, k)
 
+    def local(db_shard, valid_shard, q):
+        lin = jax.lax.axis_index(axes)                     # flattened index
+        if fused:
+            ld, li = kernel_ops.l2_topk_op(q, db_shard, k_loc,
+                                           valid=valid_shard)
+        else:
+            d2 = pairwise_l2sq(q, db_shard)                # (B, rows)
+            d2 = jnp.where(valid_shard[None, :], d2, jnp.inf)
+            neg, li = jax.lax.top_k(-d2, k_loc)
+            ld = -neg
+        return _finish_local(ld, li, lin)
+
+    def local_int8(codes_shard, scales_shard, valid_shard, q):
+        lin = jax.lax.axis_index(axes)
+        ld, li = kernel_ops.l2_topk_int8_op(
+            q, codes_shard, scales_shard, k_loc, valid=valid_shard)
+        return _finish_local(ld, li, lin)
+
     qs = _q_spec(query_axes)
+    if precision == "int8":
+        return shard_map(
+            local_int8, mesh=mesh,
+            in_specs=(P(tuple(axes), None), P(tuple(axes)),
+                      P(tuple(axes)), qs),
+            out_specs=(qs, qs),
+            check_vma=False,
+        )
     return shard_map(
         local, mesh=mesh,
         in_specs=(P(tuple(axes), None), P(tuple(axes)), qs),
         out_specs=(qs, qs),
         check_vma=False,   # merge all-gathers over the corpus axes only
     )
+
+
+def _brute_int8_device_arrays(db, n_dev, rows=None, alive=None):
+    """int8 counterpart of ``_brute_device_arrays``: per-row symmetric
+    quantization (``kernels.ops.quantize_rows_int8``) before padding, so
+    pad rows are zero codes with scale 1.0 (dequantize to exact zero) and
+    are masked by ``valid`` like every other dead row.  Returns
+    (codes, scales, valid, rows per shard, real rows)."""
+    db = np.asarray(db, np.float32)
+    n = db.shape[0]
+    if rows is None:
+        rows = -(-n // n_dev)
+    if rows * n_dev < n:
+        raise ValueError(
+            f"corpus has {n} rows but the shard grid holds only "
+            f"{rows * n_dev}; rebuild the backend (or raise headroom)")
+    codes, scales = kernel_ops.quantize_rows_int8(db)
+    pad = rows * n_dev - n
+    codes = np.pad(codes, ((0, pad), (0, 0)))
+    scales = np.pad(scales, (0, pad), constant_values=1.0)
+    valid = np.arange(rows * n_dev) < n
+    if alive is not None:
+        valid[:n] &= np.asarray(alive, bool)
+    return (jnp.asarray(codes), jnp.asarray(scales), jnp.asarray(valid),
+            rows, n)
 
 
 def _pad_queries(mesh, queries, query_axes):
@@ -260,25 +324,40 @@ def _pad_queries(mesh, queries, query_axes):
 
 
 def sharded_brute_search(mesh, db, queries, k=10, axes=("data", "model"),
-                         query_axes=()):
+                         query_axes=(), fused=True, precision="f32"):
     """Host entry: shards db rows over ``axes`` and runs the distributed
-    scan; ``query_axes`` shards the batch dim over a *disjoint* axis set."""
+    scan; ``query_axes`` shards the batch dim over a *disjoint* axis set.
+    ``fused``/``precision`` select the kernel path (see
+    :func:`make_sharded_brute_fn`)."""
     n_dev = _axes_size(mesh, axes)
-    dbp, valid, rows, n = _brute_device_arrays(db, n_dev)
     q, B = _pad_queries(mesh, queries, query_axes)
-    fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows, tuple(query_axes))
-    with mesh:
-        dbs = jax.device_put(dbp, NamedSharding(mesh, P(tuple(axes), None)))
-        vs = jax.device_put(valid, NamedSharding(mesh, P(tuple(axes))))
-        qs = jax.device_put(q, NamedSharding(mesh, _q_spec(query_axes)))
-        d, i = fn(dbs, vs, qs)
+    put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
+    if precision == "int8":
+        codes, scales, valid, rows, _ = _brute_int8_device_arrays(db, n_dev)
+        fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows,
+                                   tuple(query_axes), fused=fused,
+                                   precision=precision)
+        with mesh:
+            d, i = fn(put(codes, P(tuple(axes), None)),
+                      put(scales, P(tuple(axes))),
+                      put(valid, P(tuple(axes))),
+                      put(q, _q_spec(query_axes)))
+    else:
+        dbp, valid, rows, _ = _brute_device_arrays(db, n_dev)
+        fn = make_sharded_brute_fn(mesh, tuple(axes), k, rows,
+                                   tuple(query_axes), fused=fused,
+                                   precision=precision)
+        with mesh:
+            d, i = fn(put(dbp, P(tuple(axes), None)),
+                      put(valid, P(tuple(axes))),
+                      put(q, _q_spec(query_axes)))
     d, i = jax.device_get((d, i))
     return np.asarray(d)[:B], np.asarray(i)[:B]
 
 
 def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
                         buckets_per_shard: int, n_buckets: int,
-                        query_axes: tuple = ()):
+                        query_axes: tuple = (), *, fused: bool = True):
     """Distributed two-level, brute bottom: centroids + padded buckets
     sharded over the mesh.
 
@@ -307,6 +386,12 @@ def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
             bsel = probe[:, j]                             # (B,)
             ids = bucket_ids[bsel]                         # (B, cap)
             vecs = bucket_vecs[bsel]                       # (B, cap, d)
+            if fused:
+                # distance + merge in one op (Pallas candidate kernel on
+                # TPU; the same-ops jnp oracle on CPU) — the probe chain
+                # carries the running best through the kernel
+                return kernel_ops.candidate_topk_op(
+                    q, vecs, ids, k, best_d=best_d, best_i=best_i), None
             d2 = batched_l2sq(vecs, q)
             d2 = jnp.where(ids >= 0, d2, jnp.inf)
             cat_d = jnp.concatenate([best_d, d2], axis=1)
@@ -359,7 +444,7 @@ def _ivf_device_arrays(index, n_dev, cap=None):
 
 
 def sharded_ivf_search(mesh, index, queries, k=10, nprobe_local=2,
-                       axes=("data", "model"), query_axes=()):
+                       axes=("data", "model"), query_axes=(), fused=True):
     """Host entry: shards a built TwoLevelIndex (brute bottom) over the
     mesh.  ``index.bucket_ids`` keeps *global* entity ids, so the merged
     result ids are directly comparable with the single-chip index."""
@@ -367,7 +452,7 @@ def sharded_ivf_search(mesh, index, queries, k=10, nprobe_local=2,
     K = index.bucket_ids.shape[0]
     cents, bids, bvecs, Kp = _ivf_device_arrays(index, n_dev)
     fn = make_sharded_ivf_fn(mesh, tuple(axes), k, nprobe_local,
-                             Kp // n_dev, K, tuple(query_axes))
+                             Kp // n_dev, K, tuple(query_axes), fused=fused)
     q, B = _pad_queries(mesh, queries, query_axes)
     with mesh:
         put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
@@ -837,7 +922,7 @@ def slice_ivf_delta(index, cap: int, dirty_buckets) -> dict:
 
 def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,
                            beam_width: int, leaf_size: int, max_depth: int,
-                           query_axes: tuple = ()):
+                           query_axes: tuple = (), *, fused: bool = True):
     """Distributed two-level, tree/QLBT bottom.
 
     Per chip: score local centroids -> descend the local forest for the
@@ -872,18 +957,27 @@ def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,
         )
         cand = res.ids.reshape(B, -1)                      # local slot ids
         vecs = vecs_flat[jnp.maximum(cand, 0)]
-        d2 = batched_l2sq(vecs, q)
-        d2 = jnp.where(cand >= 0, d2, jnp.inf)
-        k_eff = min(k, cand.shape[1])
-        neg, sel = jax.lax.top_k(-d2, k_eff)
-        slot = jnp.take_along_axis(cand, sel, axis=1)
-        gids = bids.reshape(-1)[jnp.maximum(slot, 0)]
-        gids = jnp.where((slot >= 0) & ~jnp.isinf(-neg), gids, -1)
-        ld, li = -neg, gids.astype(jnp.int32)
-        if k_eff < k:
-            ld = jnp.pad(ld, ((0, 0), (0, k - k_eff)),
-                         constant_values=jnp.inf)
-            li = jnp.pad(li, ((0, 0), (0, k - k_eff)), constant_values=-1)
+        if fused:
+            # rerank distance + top-k in one op (internal clamp/pad to k);
+            # slot ids map back to global entity ids afterwards
+            ld, slot = kernel_ops.candidate_topk_op(q, vecs, cand, k)
+            gids = bids.reshape(-1)[jnp.maximum(slot, 0)]
+            li = jnp.where((slot >= 0) & ~jnp.isinf(ld), gids,
+                           -1).astype(jnp.int32)
+        else:
+            d2 = batched_l2sq(vecs, q)
+            d2 = jnp.where(cand >= 0, d2, jnp.inf)
+            k_eff = min(k, cand.shape[1])
+            neg, sel = jax.lax.top_k(-d2, k_eff)
+            slot = jnp.take_along_axis(cand, sel, axis=1)
+            gids = bids.reshape(-1)[jnp.maximum(slot, 0)]
+            gids = jnp.where((slot >= 0) & ~jnp.isinf(-neg), gids, -1)
+            ld, li = -neg, gids.astype(jnp.int32)
+            if k_eff < k:
+                ld = jnp.pad(ld, ((0, 0), (0, k - k_eff)),
+                             constant_values=jnp.inf)
+                li = jnp.pad(li, ((0, 0), (0, k - k_eff)),
+                             constant_values=-1)
         gd = jax.lax.all_gather(ld, axes, tiled=False)
         gi = jax.lax.all_gather(li, axes, tiled=False)
         return _merge_gathered(gd, gi, k)
@@ -912,14 +1006,14 @@ def _forest_device_arrays(mesh, index, axes, n_dev, shapes=None):
 
 def sharded_forest_search(mesh, index, queries, k=10, nprobe_local=2,
                           beam_width=8, axes=("data", "model"),
-                          query_axes=()):
+                          query_axes=(), fused=True):
     """Host entry: shards a built TwoLevelIndex with a tree/QLBT forest
     bottom level over the mesh and runs the distributed descent."""
     n_dev = _axes_size(mesh, axes)
     dev, max_depth = _forest_device_arrays(mesh, index, axes, n_dev)
     fn = make_sharded_forest_fn(
         mesh, tuple(axes), k, nprobe_local, beam_width,
-        index.config.tree_leaf, max_depth, tuple(query_axes),
+        index.config.tree_leaf, max_depth, tuple(query_axes), fused=fused,
     )
     q, B = _pad_queries(mesh, queries, query_axes)
     with mesh:

@@ -16,23 +16,55 @@ INF = float("inf")  # python float: jnp closures may not capture arrays
 def merge_topk(best_d, best_i, tile_d, tile_i, k: int):
     """Merge a (B, T) score tile into the running (B, K) best lists.
 
-    K is static and small (<=32); extraction is K iterative masked argmins —
+    K is static and small (<=32); extraction is K iterative masked mins —
     no sort needed, VPU-friendly, works identically under Pallas interpret
     mode and on the TPU vector unit.
+
+    Ordering is deterministic on the **(distance, id) pair**: equal
+    distances break toward the smaller id, matching ``lax.top_k``'s
+    lower-index-first rule on an id-ordered scan.  A plain per-round
+    ``argmin`` would instead prefer whichever tied candidate entered the
+    running list in an earlier tile — an order that depends on the ``bn``
+    tiling — so the lexicographic rule is what makes fused-vs-reference
+    conformance bitwise rather than merely set-equal.
     Returns updated (best_d (B,K) ascending, best_i (B,K)).
     """
     cat_d = jnp.concatenate([best_d, tile_d], axis=1)          # (B, K+T)
     cat_i = jnp.concatenate([best_i, tile_i], axis=1)
-    cols = jax.lax.broadcasted_iota(jnp.int32, cat_d.shape, 1)
+    imax = jnp.iinfo(jnp.int32).max
     out_d, out_i = [], []
     for _ in range(k):
-        am = jnp.argmin(cat_d, axis=1)                         # (B,)
-        md = jnp.min(cat_d, axis=1)
-        mi = jnp.take_along_axis(cat_i, am[:, None], axis=1)[:, 0]
+        md = jnp.min(cat_d, axis=1)                            # (B,)
+        tie = cat_d == md[:, None]
+        mi = jnp.min(jnp.where(tie, cat_i, imax), axis=1)
         out_d.append(md)
         out_i.append(mi)
-        cat_d = jnp.where(cols == am[:, None], INF, cat_d)
+        # retire exactly the selected (distance, id) entry; duplicate
+        # (INF, -1) sentinels re-selecting is harmless and intended
+        cat_d = jnp.where(tie & (cat_i == mi[:, None]), INF, cat_d)
     return jnp.stack(out_d, axis=1), jnp.stack(out_i, axis=1)
+
+
+def valid_operand(valid, n: int, n_pad: int) -> jnp.ndarray:
+    """Liveness mask as a (1, n_pad) int32 kernel operand.
+
+    Grid-pad rows are dead; ``valid=None`` means all ``n`` rows live.
+    Kernels broadcast ``v_ref[...] != 0`` against the (BQ, BN) tile.
+    """
+    if valid is None:
+        v = jnp.ones((n,), jnp.int32)
+    else:
+        v = jnp.asarray(valid).astype(jnp.int32)
+    return jnp.pad(v, (0, n_pad - n))[None, :]
+
+
+def pad_sentinel(d, i, k: int, k_eff: int):
+    """Restore the caller's requested ``k`` after an internal clamp: the
+    impossible slots are the documented ``(inf, -1)`` sentinel."""
+    if k_eff == k:
+        return d, i
+    return (jnp.pad(d, ((0, 0), (0, k - k_eff)), constant_values=INF),
+            jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1))
 
 
 def popcount32(x):

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INF, merge_topk, popcount32
+from repro.kernels.common import INF, merge_topk, pad_sentinel, popcount32
 
 DEFAULT_BQ = 256
 DEFAULT_BN = 1024
@@ -52,9 +52,13 @@ def hamming_topk_pallas(
     bn: int = DEFAULT_BN,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (hamming dists (B, k) ascending fp32, ids (B, k))."""
+    """Returns (hamming dists (B, k) ascending fp32, ids (B, k)).
+
+    ``k`` is clamped to N; impossible slots return the ``(inf, -1)``
+    sentinel (same contract as ``l2_topk_pallas``)."""
     B, W = qcodes.shape
     N = codes.shape[0]
+    k_eff = min(k, N)
     bq = min(bq, max(8, B))
     bn = min(bn, max(8, N))
     grid_b = -(-B // bq)
@@ -63,20 +67,20 @@ def hamming_topk_pallas(
     cp = jnp.pad(codes, ((0, grid_n * bn - N), (0, 0)))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, k=k, bn=bn, n=N),
+        functools.partial(_kernel, k=k_eff, bn=bn, n=N),
         grid=(grid_b, grid_n),
         in_specs=[
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k_eff), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k_eff), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.float32),
-            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.int32),
+            jax.ShapeDtypeStruct((grid_b * bq, k_eff), jnp.float32),
+            jax.ShapeDtypeStruct((grid_b * bq, k_eff), jnp.int32),
         ],
         interpret=interpret,
     )(qp, cp)
-    return out[0][:B], out[1][:B]
+    return pad_sentinel(out[0][:B], out[1][:B], k, k_eff)

@@ -4,64 +4,126 @@ Dispatch policy: on TPU backends call the Pallas kernel compiled natively;
 on CPU (this container) call the pure-jnp oracle by default — identical
 results, XLA-optimized — or the Pallas kernel in interpret mode when
 ``force_pallas=True`` (used by tests to execute the real kernel body).
+
+All ops share the kernel result contract: ``k`` is clamped internally to
+the candidate count, dead rows (``valid == 0`` / ``id < 0``) never rank,
+and unfilled slots return the ``(inf, -1)`` sentinel.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import hamming, l2_topk, pq_adc, ref
+from repro.kernels import bucket_topk, hamming, l2_topk, pq_adc, ref
 
-__all__ = ["l2_topk_op", "pq_adc_topk_op", "hamming_topk_op"]
+__all__ = [
+    "l2_topk_op",
+    "l2_topk_int8_op",
+    "candidate_topk_op",
+    "pq_adc_topk_op",
+    "hamming_topk_op",
+    "quantize_rows_int8",
+]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def l2_topk_op(queries, db, k: int = 10, *, force_pallas: bool = False,
+def _tiles(bq=None, bn=None, bc=None):
+    kw = {}
+    if bq:
+        kw["bq"] = bq
+    if bn:
+        kw["bn"] = bn
+    if bc:
+        kw["bc"] = bc
+    return kw
+
+
+def quantize_rows_int8(db) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 quantization: ``row ~= scale * codes``.
+
+    Returns (codes (N, D) int8, scales (N,) float32).  Host-side (numpy)
+    — used at placement time; all-zero rows get scale 1.0 so the
+    dequantized row is exactly zero.
+    """
+    x = np.asarray(db, dtype=np.float32)
+    amax = np.max(np.abs(x), axis=1)
+    scales = np.where(amax > 0.0, amax / 127.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(x / scales[:, None]), -127, 127).astype(np.int8)
+    return codes, scales
+
+
+def l2_topk_op(queries, db, k: int = 10, *, valid=None,
+               force_pallas: bool = False,
                bq: int | None = None, bn: int | None = None):
     """Fused brute-force L2 top-k. (dists ascending, ids)."""
+    v = None if valid is None else jnp.asarray(valid)
     if _on_tpu() or force_pallas:
-        kw = {}
-        if bq:
-            kw["bq"] = bq
-        if bn:
-            kw["bn"] = bn
         return l2_topk.l2_topk_pallas(
-            jnp.asarray(queries), jnp.asarray(db), k,
-            interpret=not _on_tpu(), **kw,
+            jnp.asarray(queries), jnp.asarray(db), k, valid=v,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
         )
-    return ref.l2_topk_ref(jnp.asarray(queries), jnp.asarray(db), k)
+    return ref.l2_topk_ref(jnp.asarray(queries), jnp.asarray(db), k, valid=v)
 
 
-def pq_adc_topk_op(lut, codes, k: int = 10, *, force_pallas: bool = False,
+def l2_topk_int8_op(queries, db_codes, scales, k: int = 10, *, valid=None,
+                    force_pallas: bool = False,
+                    bq: int | None = None, bn: int | None = None):
+    """int8-footprint brute scan (db as per-row-scaled int8 codes)."""
+    v = None if valid is None else jnp.asarray(valid)
+    if _on_tpu() or force_pallas:
+        return l2_topk.l2_topk_int8_pallas(
+            jnp.asarray(queries), jnp.asarray(db_codes),
+            jnp.asarray(scales), k, valid=v,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
+        )
+    return ref.l2_topk_int8_ref(
+        jnp.asarray(queries), jnp.asarray(db_codes),
+        jnp.asarray(scales), k, valid=v,
+    )
+
+
+def candidate_topk_op(queries, vecs, ids, k: int = 10, *,
+                      best_d=None, best_i=None,
+                      force_pallas: bool = False,
+                      bq: int | None = None, bc: int | None = None):
+    """Per-query candidate-tile L2 top-k with optional carried best
+    (IVF probe chains, forest rerank). (dists ascending, ids)."""
+    if _on_tpu() or force_pallas:
+        return bucket_topk.candidate_topk_pallas(
+            jnp.asarray(queries), jnp.asarray(vecs), jnp.asarray(ids), k,
+            best_d=best_d, best_i=best_i,
+            interpret=not _on_tpu(), **_tiles(bq, bc=bc),
+        )
+    return ref.candidate_topk_ref(
+        jnp.asarray(queries), jnp.asarray(vecs), jnp.asarray(ids), k,
+        best_d=best_d, best_i=best_i,
+    )
+
+
+def pq_adc_topk_op(lut, codes, k: int = 10, *, valid=None,
+                   force_pallas: bool = False,
                    bq: int | None = None, bn: int | None = None):
     """PQ ADC scan + top-k from a per-query LUT. (adc dists, ids)."""
+    v = None if valid is None else jnp.asarray(valid)
     if _on_tpu() or force_pallas:
-        kw = {}
-        if bq:
-            kw["bq"] = bq
-        if bn:
-            kw["bn"] = bn
         return pq_adc.pq_adc_topk_pallas(
-            jnp.asarray(lut), jnp.asarray(codes), k,
-            interpret=not _on_tpu(), **kw,
+            jnp.asarray(lut), jnp.asarray(codes), k, valid=v,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
         )
-    return ref.pq_adc_topk_ref(jnp.asarray(lut), jnp.asarray(codes), k)
+    return ref.pq_adc_topk_ref(jnp.asarray(lut), jnp.asarray(codes), k,
+                               valid=v)
 
 
 def hamming_topk_op(qcodes, codes, k: int = 10, *, force_pallas: bool = False,
                     bq: int | None = None, bn: int | None = None):
     """Packed-bit Hamming top-k. (dists, ids)."""
     if _on_tpu() or force_pallas:
-        kw = {}
-        if bq:
-            kw["bq"] = bq
-        if bn:
-            kw["bn"] = bn
         return hamming.hamming_topk_pallas(
             jnp.asarray(qcodes), jnp.asarray(codes), k,
-            interpret=not _on_tpu(), **kw,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
         )
     return ref.hamming_topk_ref(jnp.asarray(qcodes), jnp.asarray(codes), k)

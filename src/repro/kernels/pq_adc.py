@@ -26,13 +26,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INF, merge_topk
+from repro.kernels.common import INF, merge_topk, pad_sentinel, valid_operand
 
 DEFAULT_BQ = 128
 DEFAULT_BN = 512
 
 
-def _kernel(lut_ref, codes_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
+def _kernel(lut_ref, codes_ref, v_ref, bd_ref, bi_ref,
+            *, k: int, bn: int, n: int):
     step = pl.program_id(1)
 
     @pl.when(step == 0)
@@ -60,7 +61,8 @@ def _kernel(lut_ref, codes_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
     )
 
     ids = step * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    scores = jnp.where(ids < n, scores, INF)
+    live = (ids < n) & (v_ref[...] != 0)
+    scores = jnp.where(live, scores, INF)
 
     new_d, new_i = merge_topk(bd_ref[...], bi_ref[...], scores, ids, k)
     bd_ref[...] = new_d
@@ -73,35 +75,43 @@ def pq_adc_topk_pallas(
     codes: jnp.ndarray,        # (N, M) int32/uint8
     k: int = 10,
     *,
+    valid: jnp.ndarray | None = None,
     bq: int = DEFAULT_BQ,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (adc_dists (B, k) ascending, ids (B, k))."""
+    """Returns (adc_dists (B, k) ascending, ids (B, k)).
+
+    Same contract as ``l2_topk_pallas``: optional ``valid`` liveness
+    mask, ``k`` clamped to N, dead slots are the ``(inf, -1)``
+    sentinel."""
     B, M, C = lut.shape
     N = codes.shape[0]
+    k_eff = min(k, N)
     bq = min(bq, max(8, B))
     bn = min(bn, max(8, N))
     grid_b = -(-B // bq)
     grid_n = -(-N // bn)
     lp = jnp.pad(lut, ((0, grid_b * bq - B), (0, 0), (0, 0)))
     cp = jnp.pad(codes.astype(jnp.int32), ((0, grid_n * bn - N), (0, 0)))
+    vp = valid_operand(valid, N, grid_n * bn)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, k=k, bn=bn, n=N),
+        functools.partial(_kernel, k=k_eff, bn=bn, n=N),
         grid=(grid_b, grid_n),
         in_specs=[
             pl.BlockSpec((bq, M, C), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((bn, M), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k_eff), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k_eff), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.float32),
-            jax.ShapeDtypeStruct((grid_b * bq, k), jnp.int32),
+            jax.ShapeDtypeStruct((grid_b * bq, k_eff), jnp.float32),
+            jax.ShapeDtypeStruct((grid_b * bq, k_eff), jnp.int32),
         ],
         interpret=interpret,
-    )(lp, cp)
-    return out[0][:B], out[1][:B]
+    )(lp, cp, vp)
+    return pad_sentinel(out[0][:B], out[1][:B], k, k_eff)

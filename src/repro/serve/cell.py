@@ -91,6 +91,9 @@ class EngineStats:
     shed: int = 0
     rerouted: int = 0
     hedge_cell: int = 0
+    # revived-cell replays: fan-outs a down cell missed and had applied
+    # (merged manifest or forced full re-place) at CellRouter.revive()
+    resyncs: int = 0
     # per-cell breakdown: name -> EngineStats of that cell (None on a
     # standalone cell)
     cells: "dict | None" = None

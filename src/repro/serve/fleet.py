@@ -116,10 +116,17 @@ class CellRouter:
         self._lock = threading.Lock()
         self._down: dict[str, BaseException] = {}
         self._draining: set[str] = set()
+        # per-down-cell record of fan-outs it missed: a list of
+        # DeltaManifest (replayable) or None (that fan-out had no
+        # manifest — only a full re-place can cover it); consumed by
+        # revive()'s replay together with the last published target
+        self._missed: dict[str, list] = {}
+        self._last_publish: Optional[tuple] = None
         self.shed = 0
         self.rerouted = 0
         self.hedge_cell = 0
         self.n_cancelled = 0
+        self.n_resyncs = 0
         self.latencies: list[float] = []
 
     # -- routing policy (all under self._lock) -------------------------
@@ -190,11 +197,46 @@ class CellRouter:
         with self._lock:
             return dict(self._down)
 
-    def revive(self, name: str) -> None:
+    def revive(self, name: str) -> Optional[dict]:
         """Put a repaired cell back into rotation (its keys rendezvous
-        back to it; survivors' cache heads are untouched)."""
+        back to it; survivors' cache heads are untouched).
+
+        A down cell missed every fan-out since it failed, so before it
+        rejoins the router **replays** what it missed against the last
+        published target: the missed manifests merged into one covering
+        window (:func:`repro.core.delta.merge_manifests` — idempotent,
+        superset-safe), or a forced full re-place when any missed
+        fan-out had no manifest.  The replay happens while the cell is
+        still marked down (no request can reach the stale index); if it
+        raises, the cell *stays* down.  Returns the replay's republish
+        stats, or None when nothing was missed.
+        """
+        cell = self._by_name.get(name)
+        with self._lock:
+            if name not in self._down:
+                return None
+            missed = self._missed.pop(name, [])
+            publish = self._last_publish
+        stats = None
+        if cell is not None and missed and publish is not None:
+            target, kw = publish
+            if any(m is None for m in missed):
+                manifest = None          # forces a full re-place
+            else:
+                from repro.core.delta import merge_manifests
+
+                manifest = merge_manifests(missed)
+            try:
+                stats = cell.apply_updates(target, delta=manifest, **kw)
+            except BaseException:
+                with self._lock:     # keep the record for a retry
+                    self._missed[name] = missed + self._missed.get(name, [])
+                raise
+            with self._lock:
+                self.n_resyncs += 1
         with self._lock:
             self._down.pop(name, None)
+        return stats
 
     # -- request path --------------------------------------------------
     def search(self, query: np.ndarray, timeout: float = 30.0):
@@ -307,8 +349,10 @@ class CellRouter:
         cell is marked draining (admission prefers its siblings), its
         queue drains (bounded by ``drain_timeout_s``), it applies the
         manifest under its backend's lock, then rejoins.  Down cells
-        are skipped (recorded as ``mode="skipped"``); a revived cell
-        must be re-synced by the next full republish.
+        are skipped (recorded as ``mode="skipped"``), but the manifest
+        they missed is remembered per cell so :meth:`revive` can replay
+        the merged window (or force a full re-place) before the cell
+        rejoins — a revived cell never serves a stale index.
 
         Returns ``{"mode", "bytes", "full_bytes", "cells"}`` where
         ``cells`` maps cell name to its backend's republish stats and
@@ -319,10 +363,16 @@ class CellRouter:
             delta = (target.pop_delta()
                      if hasattr(target, "pop_delta") else None)
         per_cell: dict[str, dict] = {}
+        with self._lock:
+            self._last_publish = (target, dict(kw))
         for cell in self.cells:
             with self._lock:
                 skip = cell.name in self._down
-                if not skip:
+                if skip:
+                    # remember what this down cell missed so revive()
+                    # can replay it before the cell rejoins
+                    self._missed.setdefault(cell.name, []).append(delta)
+                else:
                     self._draining.add(cell.name)
             if skip:
                 per_cell[cell.name] = {"mode": "skipped", "bytes": 0,
@@ -360,6 +410,7 @@ class CellRouter:
             rerouted = self.rerouted
             hedge_cell = self.hedge_cell
             cancelled = self.n_cancelled
+            resyncs = self.n_resyncs
         per_cell = {c.name: c.stats() for c in self.cells}
         vals = list(per_cell.values())
         hedges = sum(s.hedges for s in vals)
@@ -384,7 +435,8 @@ class CellRouter:
                       cache_hits=ch, cache_misses=cm, drift=drift,
                       republished_bytes=rb, delta_fraction=frac,
                       cancelled=cancelled, shed=shed, rerouted=rerouted,
-                      hedge_cell=hedge_cell, cells=per_cell)
+                      hedge_cell=hedge_cell, resyncs=resyncs,
+                      cells=per_cell)
         if a.size == 0:
             return EngineStats(0, 0, 0, 0, 0, queue_ms, **common)
         return EngineStats(

@@ -548,7 +548,8 @@ class TestRecompileGate:
 
     def test_real_entry_points_are_registered(self):
         for name in ("sharded-brute-search", "brute-delta-scatter",
-                     "sharded-ivf-search", "sharded-forest-search"):
+                     "sharded-ivf-search", "sharded-forest-search",
+                     "fused-sharded-search", "fleet-router-search"):
             assert name in ENTRY_POINTS
 
 

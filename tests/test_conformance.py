@@ -207,6 +207,101 @@ def test_conformance_delta_parity(top, bottom):
 
 
 # ---------------------------------------------------------------------------
+# fused kernel path: routing the sharded scans through the Pallas kernel
+# dispatch (fused=True, the default) must be bitwise-identical to the
+# unfused jnp locals — initially AND after a mutation shipped as a delta
+# (PR-8 acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top,bottom", COMBOS)
+def test_conformance_fused_vs_unfused(top, bottom):
+    """``fused=True`` swaps the per-shard scan+top-k locals for the
+    kernel dispatch (``repro.kernels.ops``).  The swap must be
+    invisible: search results bitwise-identical to ``fused=False`` on
+    the fresh index, and still bitwise-identical after a localized
+    mutation applied through the delta path on both backends."""
+    import jax
+
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(500 + TOP_ALGOS.index(top) * 10
+                                + BOTTOM_ALGOS.index(bottom))
+    db = _corpus(rng, N)
+    p = rng.dirichlet(np.full(N, 0.5)) if bottom == "qlbt" else None
+    idx = _build(db, top, bottom, p)
+    mesh = jax.make_mesh((1,), ("data",))
+    kw = dict(k=TOPK, axes=("data",), nprobe_local=K, beam_width=8,
+              headroom=1.5)
+    be_f = ShardedSearchBackend(mesh, idx, fused=True, **kw)
+    be_u = ShardedSearchBackend(mesh, idx, fused=False, **kw)
+    q = _corpus(rng, NQ)
+
+    def bitwise_equal(tag):
+        df, i_f = be_f(q)
+        du, iu = be_u(q)
+        assert np.array_equal(df, du) and np.array_equal(i_f, iu), (
+            f"{top}/{bottom} [{tag}]: fused scan diverged from unfused")
+
+    bitwise_equal("fresh")
+
+    # localized mutation -> delta apply on BOTH -> still bitwise equal
+    b = int(np.argmax(idx.bucket_counts))
+    dele = idx.bucket_ids[b][:5].copy()
+    idx.delete_entities(dele)
+    new = (idx.centroids[1][None, :]
+           + 0.1 * rng.normal(size=(5, D))).astype(np.float32)
+    idx.add_entities(new)
+    man = idx.pop_delta()
+    stf = be_f.apply_updates(idx, delta=man)
+    stu = be_u.apply_updates(idx, delta=man)
+    assert stf["mode"] == stu["mode"] == "delta", (stf, stu)
+    bitwise_equal("post-delta")
+    _, i_f = be_f(q)
+    assert not np.isin(i_f, dele).any(), (
+        f"{top}/{bottom}: deleted id returned through the fused path")
+
+
+def test_conformance_int8_brute_recall():
+    """The int8-footprint brute scan is approximate (quantization), not
+    bitwise — but it must track the f32 scan closely: recall@k vs the
+    f32 result near 1, and survive the delta path (tombstone flips, and
+    appended rows quantized on the way in)."""
+    import jax
+
+    from repro.core.delta import DeltaManifest
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(600)
+    db = _corpus(rng, N)
+    mesh = jax.make_mesh((1,), ("data",))
+    kw = dict(k=TOPK, axes=("data",), headroom=1.5)
+    be32 = ShardedSearchBackend(mesh, db, precision="f32", **kw)
+    be8 = ShardedSearchBackend(mesh, db, precision="int8", **kw)
+    q = _corpus(rng, NQ)
+    _, i32 = be32(q)
+    _, i8 = be8(q)
+    assert recall_at_k(np.asarray(i8), np.asarray(i32)) > 0.9, (
+        "int8 scan strayed too far from the f32 scan")
+
+    # tombstone window, then an append window — both down the delta path
+    dele = np.asarray([3, 17, 41])
+    man = DeltaManifest(base_version=0, version=1, base_n=N, n=N,
+                        tombstones=dele)
+    assert be8.apply_updates(db, delta=man)["mode"] == "delta"
+    be32.apply_updates(db, delta=man)
+    grown = np.concatenate([db, _corpus(rng, 8)])
+    man2 = DeltaManifest(base_version=1, version=2, base_n=N, n=N + 8)
+    st = be8.apply_updates(grown, delta=man2)
+    assert st["mode"] == "delta", st
+    be32.apply_updates(grown, delta=man2)
+    _, i32 = be32(q)
+    _, i8 = be8(q)
+    assert not np.isin(i8, dele).any(), "int8 delta path returned deleted id"
+    assert recall_at_k(np.asarray(i8), np.asarray(i32)) > 0.9
+
+
+# ---------------------------------------------------------------------------
 # fleet conformance: a routed fleet is indistinguishable from one engine —
 # bitwise on results, and bitwise on every cell's device state after a
 # leader delta fan-out (PR-7 acceptance)

@@ -114,8 +114,8 @@ def test_router_admission_sheds_with_retriable_signal():
     gate = threading.Event()
 
     def blocked(qs):
-        gate.wait(10.0)
-        return _ok_fn(qs)
+        gate.wait(60.0)       # generous: a loaded CI box must not let
+        return _ok_fn(qs)     # the queue drain before the shed probe
 
     cell = ServingCell(blocked, name="cell0", max_wait_ms=0.5, max_batch=1)
     router = CellRouter([cell], max_queue_depth=2)
@@ -123,14 +123,15 @@ def test_router_admission_sheds_with_retriable_signal():
         threads = [
             threading.Thread(
                 target=lambda j=j: router.search(
-                    np.full(4, j, np.float32), timeout=20.0),
+                    np.full(4, j, np.float32), timeout=90.0),
                 daemon=True)
             for j in range(3)]                # 1 in compute + 2 queued
         for t in threads:
             t.start()
-        deadline = time.perf_counter() + 5.0
+        deadline = time.perf_counter() + 15.0
         while cell.depth() < 2 and time.perf_counter() < deadline:
             time.sleep(0.01)
+        assert cell.depth() >= 2, "setup never saturated the queue"
         with pytest.raises(FleetOverloadError) as ei:
             router.search(np.full(4, 99, np.float32), timeout=1.0)
         assert ei.value.retriable is True
@@ -340,6 +341,75 @@ def test_router_apply_updates_rolls_and_aggregates():
         # fleet stats aggregate the republish gauges across cells
         st = router.stats()
         assert st.republished_bytes == 7 * 3 + 7 * 2
+    finally:
+        router.close()
+
+
+def test_revive_replays_missed_manifests_before_rejoin():
+    """A down cell misses rolling delta fan-outs; revive() must replay
+    the merged missed window against the last published target BEFORE
+    the cell rejoins — never re-admit it serving a stale index — and
+    count the resync in stats()."""
+    from repro.core.delta import DeltaManifest
+
+    class _Backend:
+        def __init__(self):
+            self.applied = []
+
+        def __call__(self, qs):
+            return _ok_fn(qs)
+
+        def apply_updates(self, target, delta=None, **kw):
+            self.applied.append(delta)
+            return {"mode": "delta" if delta is not None else "full",
+                    "bytes": 7, "full_bytes": 100, "reason": None}
+
+    def _man(bv, v, bn, n, dirty, tombs=()):
+        return DeltaManifest(
+            base_version=bv, version=v, base_n=bn, n=n,
+            dirty_buckets=np.asarray(dirty, np.int64),
+            tombstones=np.asarray(tombs, np.int64))
+
+    backends = [_Backend() for _ in range(3)]
+    cells = [ServingCell(b, name=f"cell{i}", max_wait_ms=0.5)
+             for i, b in enumerate(backends)]
+    router = CellRouter(cells)
+    try:
+        target = object()
+        router.apply_updates(target, delta=_man(0, 1, 10, 10, [0]))
+        with router._lock:
+            router._mark_down("cell1", RuntimeError("x"))
+        # cell1 misses two rolling fan-outs
+        router.apply_updates(target, delta=_man(1, 2, 10, 12, [1, 3]))
+        router.apply_updates(target, delta=_man(2, 3, 12, 12, [3, 5],
+                                                tombs=[7]))
+        assert len(backends[1].applied) == 1
+        rep = router.revive("cell1")
+        # the replay is ONE apply carrying the merged covering window
+        assert len(backends[1].applied) == 2
+        merged = backends[1].applied[-1]
+        assert (merged.base_version, merged.version) == (1, 3)
+        assert (merged.base_n, merged.n) == (10, 12)
+        assert merged.dirty_buckets.tolist() == [1, 3, 5]
+        assert merged.tombstones.tolist() == [7]
+        assert rep["mode"] == "delta"
+        assert "cell1" not in router.down_cells()
+        assert router.stats().resyncs == 1
+        # a fan-out with no manifest while down -> full re-place on revive
+        with router._lock:
+            router._mark_down("cell2", RuntimeError("x"))
+        router.apply_updates(target, delta=_man(3, 4, 12, 13, [2]))
+        router.apply_updates(target, delta=None)
+        router.revive("cell2")
+        assert backends[2].applied[-1] is None, "expected forced re-place"
+        assert router.stats().resyncs == 2
+        # reviving a cell that missed nothing replays nothing
+        with router._lock:
+            router._mark_down("cell0", RuntimeError("x"))
+        n_before = len(backends[0].applied)
+        assert router.revive("cell0") is None
+        assert len(backends[0].applied) == n_before
+        assert router.stats().resyncs == 2
     finally:
         router.close()
 

@@ -10,7 +10,14 @@ import pytest
 
 from proptest import sweep
 from repro.kernels import ref
-from repro.kernels.ops import hamming_topk_op, l2_topk_op, pq_adc_topk_op
+from repro.kernels.ops import (
+    candidate_topk_op,
+    hamming_topk_op,
+    l2_topk_int8_op,
+    l2_topk_op,
+    pq_adc_topk_op,
+    quantize_rows_int8,
+)
 
 
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
@@ -90,6 +97,193 @@ def test_l2_topk_random_shapes(case):
     d2, i2 = ref.l2_topk_ref(jnp.asarray(q), jnp.asarray(x), k)
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# edge shapes and the kernel result contract (PR-8): k clamped internally,
+# dead rows never rank, unfilled slots return the (inf, -1) sentinel —
+# the Pallas body (interpret=True) must match the jnp oracle on every edge
+# ---------------------------------------------------------------------------
+
+
+def _case(b, n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(b, d)).astype(np.float32),
+            rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _both_l2(q, x, k, valid=None, bq=8, bn=32):
+    dp, ip = l2_topk_op(q, x, k, valid=valid, force_pallas=True,
+                        bq=bq, bn=bn)
+    dr, ir = ref.l2_topk_ref(jnp.asarray(q), jnp.asarray(x), k,
+                             valid=None if valid is None
+                             else jnp.asarray(valid))
+    return (np.asarray(dp), np.asarray(ip)), (np.asarray(dr), np.asarray(ir))
+
+
+def test_l2_topk_single_query_row():
+    q, x = _case(1, 100, 8)
+    (dp, ip), (dr, ir) = _both_l2(q, x, 5)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+    assert (ip == ir).all()
+
+
+def test_l2_topk_n_not_multiple_of_bn():
+    q, x = _case(4, 77, 8)                    # 77 % 32 != 0 -> grid pad
+    (dp, ip), (dr, ir) = _both_l2(q, x, 5, bq=8, bn=32)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+    assert (ip == ir).all()
+    assert (ip < 77).all(), "grid-pad row leaked into the result"
+
+
+def test_l2_topk_k_exceeds_n_pads_sentinel():
+    q, x = _case(3, 6, 8)
+    (dp, ip), (dr, ir) = _both_l2(q, x, 10)
+    assert dp.shape == (3, 10) and ip.shape == (3, 10)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+    assert (ip == ir).all()
+    assert np.isinf(dp[:, 6:]).all() and (ip[:, 6:] == -1).all(), (
+        "k > N slots must carry the (inf, -1) sentinel")
+
+
+def test_l2_topk_all_dead_valid_mask():
+    q, x = _case(4, 50, 8)
+    valid = np.zeros(50, np.int32)
+    (dp, ip), (dr, ir) = _both_l2(q, x, 5, valid=valid)
+    assert np.isinf(dp).all() and (ip == -1).all(), (
+        "a fully-dead corpus must return only sentinels")
+    assert np.isinf(dr).all() and (ir == -1).all()
+
+
+def test_l2_topk_partial_valid_never_ranks_dead_rows():
+    q, x = _case(6, 120, 8)
+    rng = np.random.default_rng(3)
+    valid = (rng.random(120) > 0.5).astype(np.int32)
+    dead = np.flatnonzero(valid == 0)
+    (dp, ip), (dr, ir) = _both_l2(q, x, 7, valid=valid)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+    assert (ip == ir).all()
+    assert not np.isin(ip, dead).any(), "dead row ranked"
+
+
+def test_l2_topk_duplicate_distances_deterministic():
+    """Duplicated rows produce exact distance ties; the (distance, id)
+    tie order must make the kernel agree with the oracle exactly (the
+    oracle's lax.top_k prefers the lower scan position, and scan ids
+    are ordered — so both pick the lower id)."""
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(25, 8)).astype(np.float32)
+    x = np.concatenate([base, base])          # every distance duplicated
+    q = base[:5] + 0.01 * rng.normal(size=(5, 8)).astype(np.float32)
+    (dp, ip), (dr, ir) = _both_l2(q, x, 9)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+    assert (ip == ir).all(), "tie order diverged on duplicate distances"
+
+
+def test_pq_adc_valid_and_k_clamp():
+    rng = np.random.default_rng(5)
+    lut = (rng.normal(size=(3, 4, 256)) ** 2).astype(np.float32)
+    codes = rng.integers(0, 256, size=(40, 4)).astype(np.int32)
+    valid = (rng.random(40) > 0.3).astype(np.int32)
+    dead = np.flatnonzero(valid == 0)
+    dp, ip = pq_adc_topk_op(lut, codes, 50, valid=valid,
+                            force_pallas=True, bq=4, bn=32)
+    dr, ir = ref.pq_adc_topk_ref(jnp.asarray(lut), jnp.asarray(codes), 50,
+                                 valid=jnp.asarray(valid))
+    dp, ip, dr, ir = map(np.asarray, (dp, ip, dr, ir))
+    assert dp.shape == (3, 50)
+    np.testing.assert_allclose(dp, dr, rtol=1e-4, atol=1e-4)
+    assert (ip == ir).all()
+    assert not np.isin(ip, dead).any()
+    assert (ip[np.isinf(dp)] == -1).all()
+
+
+def test_hamming_k_clamp_pads_sentinel():
+    rng = np.random.default_rng(6)
+    qc = rng.integers(0, 2**16, size=(3, 2)).astype(np.int32)
+    cc = rng.integers(0, 2**16, size=(7, 2)).astype(np.int32)
+    dp, ip = hamming_topk_op(qc, cc, 12, force_pallas=True, bq=8, bn=8)
+    dr, ir = ref.hamming_topk_ref(jnp.asarray(qc), jnp.asarray(cc), 12)
+    dp, ip, dr, ir = map(np.asarray, (dp, ip, dr, ir))
+    assert (dp == dr).all() and (ip == ir).all()
+    assert np.isinf(dp[:, 7:]).all() and (ip[:, 7:] == -1).all()
+
+
+def test_int8_scan_within_quantization_tolerance():
+    """The int8 scan is exact w.r.t. its *dequantized* corpus (oracle
+    parity is exact-ids), and close to the f32 scan within the per-row
+    quantization error bound."""
+    q, x = _case(8, 300, 16, seed=7)
+    codes, scales = quantize_rows_int8(x)
+    dp, ip = l2_topk_int8_op(q, codes, scales, 10, force_pallas=True,
+                             bq=8, bn=64)
+    dr, ir = ref.l2_topk_int8_ref(jnp.asarray(q), jnp.asarray(codes),
+                                  jnp.asarray(scales), 10)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=2e-4, atol=2e-4)
+    assert (np.asarray(ip) == np.asarray(ir)).all()
+    # vs the f32 scan: recall@10 stays near 1 under int8 rounding
+    _, i32 = l2_topk_op(q, x, 10)
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(np.asarray(ip), np.asarray(i32))])
+    assert overlap > 0.9, f"int8 strayed too far from f32: {overlap}"
+
+
+def test_int8_all_zero_rows_quantize_exactly():
+    x = np.zeros((5, 8), np.float32)
+    codes, scales = quantize_rows_int8(x)
+    assert (codes == 0).all() and (scales == 1.0).all()
+
+
+def test_candidate_topk_edges_match_ref():
+    """bucket_topk edges: dead slots (-1 ids), k > C sentinel fill, and
+    the carried-best seeding (IVF probe-chain pattern)."""
+    rng = np.random.default_rng(8)
+    B, C, D, k = 5, 37, 8, 6
+    q = rng.normal(size=(B, D)).astype(np.float32)
+    vecs = rng.normal(size=(B, C, D)).astype(np.float32)
+    ids = rng.integers(0, 500, size=(B, C)).astype(np.int32)
+    ids[:, ::5] = -1                          # dead slots sprinkled in
+    dp, ip = candidate_topk_op(q, vecs, ids, k, force_pallas=True,
+                               bq=8, bc=16)
+    dr, ir = ref.candidate_topk_ref(jnp.asarray(q), jnp.asarray(vecs),
+                                    jnp.asarray(ids), k)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=2e-4, atol=2e-4)
+    assert (np.asarray(ip) == np.asarray(ir)).all()
+
+    # k > C: both pad with the sentinel
+    big = C + 10
+    dp, ip = candidate_topk_op(q, vecs, ids, big, force_pallas=True,
+                               bq=8, bc=16)
+    dp, ip = np.asarray(dp), np.asarray(ip)
+    assert dp.shape == (B, big)
+    assert (ip[np.isinf(dp)] == -1).all()
+
+    # carried best: the merged result equals the oracle's concat+top_k
+    bd = np.sort(rng.random((B, k)).astype(np.float32) * 0.5, axis=1)
+    bi = rng.integers(1000, 2000, size=(B, k)).astype(np.int32)
+    vecs2 = rng.normal(size=(B, C, D)).astype(np.float32)
+    ids2 = rng.integers(0, 500, size=(B, C)).astype(np.int32)
+    dp, ip = candidate_topk_op(q, vecs2, ids2, k, best_d=bd, best_i=bi,
+                               force_pallas=True, bq=8, bc=16)
+    dr, ir = ref.candidate_topk_ref(jnp.asarray(q), jnp.asarray(vecs2),
+                                    jnp.asarray(ids2), k,
+                                    best_d=jnp.asarray(bd),
+                                    best_i=jnp.asarray(bi))
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=2e-4, atol=2e-4)
+    assert (np.asarray(ip) == np.asarray(ir)).all()
+
+
+def test_candidate_topk_all_dead_tile():
+    rng = np.random.default_rng(9)
+    q = rng.normal(size=(3, 8)).astype(np.float32)
+    vecs = rng.normal(size=(3, 20, 8)).astype(np.float32)
+    ids = np.full((3, 20), -1, np.int32)
+    dp, ip = candidate_topk_op(q, vecs, ids, 4, force_pallas=True,
+                               bq=8, bc=16)
+    assert np.isinf(np.asarray(dp)).all() and (np.asarray(ip) == -1).all()
 
 
 def test_popcount_exhaustive_16bit():
