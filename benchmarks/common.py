@@ -5,6 +5,10 @@ Every row printed through :func:`csv_row` between :func:`begin_figure`
 and :func:`finish_figure` is also recorded and written to
 ``benchmarks/results/BENCH_<figure>.json`` — numbers + run config + git
 sha — so successive runs leave a perf trajectory instead of scrollback.
+The same record is mirrored to ``BENCH_<figure>.json`` at the repo root,
+which is what the cross-commit trajectory collector (and the CI bench
+artifact upload) reads — results/ is scratch, the root copy is the
+committed trajectory point.
 """
 from __future__ import annotations
 
@@ -46,7 +50,11 @@ def begin_figure(name: str) -> None:
 
 def finish_figure(config: "dict | None" = None) -> "str | None":
     """Write the recorded rows (plus ``config`` and git sha) and return
-    the written path, or None when nothing was recorded."""
+    the written path, or None when nothing was recorded.
+
+    Writes twice: ``benchmarks/results/BENCH_<fig>.json`` (scratch) and
+    ``BENCH_<fig>.json`` at the repo root — the copy the cross-commit
+    trajectory collector and the CI artifact upload read."""
     global _RECORDING
     rec, _RECORDING = _RECORDING, None
     if rec is None:
@@ -56,9 +64,11 @@ def finish_figure(config: "dict | None" = None) -> "str | None":
     rec["unix_time"] = int(time.time())
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"BENCH_{rec['figure']}.json")
-    with open(path, "w", encoding="utf-8") as f:
-        json.dump(rec, f, indent=1, sort_keys=True)
-        f.write("\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (path, os.path.join(root, f"BENCH_{rec['figure']}.json")):
+        with open(p, "w", encoding="utf-8") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+            f.write("\n")
     return path
 
 
@@ -131,6 +141,13 @@ def lat_summary(samples_s, stats=None) -> dict:
     (``shed``/``rerouted``/``hedge_cell``/``cancelled``) and a
     ``cells`` breakdown (per-cell n/p50/p99) so fig8 can attribute a
     p99 move to a routing decision rather than to one hot cell.
+
+    When ``stats`` carries the registry-backed view (``stats.n`` > 0 /
+    ``stats.stages``), the engine's histogram-derived percentiles land
+    under ``"engine"`` and the per-stage (queue/batch/dispatch/kernel/
+    rerank) summaries under ``"stages"`` — the client-observed sample
+    percentiles above stay the headline numbers, the registry view says
+    where the time went.
     """
     a = np.asarray(list(samples_s), dtype=np.float64) * 1e3
     out = ({"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
@@ -147,6 +164,19 @@ def lat_summary(samples_s, stats=None) -> dict:
             v = int(getattr(stats, ctr, 0))
             if v:
                 out[ctr] = v
+        n_eng = int(getattr(stats, "n", 0) or 0)
+        if n_eng:
+            out["engine"] = {
+                "n": n_eng,
+                "p50_ms": round(float(stats.p50_ms), 3),
+                "p99_ms": round(float(stats.p99_ms), 3)}
+        stages = getattr(stats, "stages", None)
+        if stages:
+            out["stages"] = {
+                name: {"n": int(s.get("n", 0)),
+                       "p50_ms": round(float(s.get("p50_ms", 0.0)), 3),
+                       "p99_ms": round(float(s.get("p99_ms", 0.0)), 3)}
+                for name, s in stages.items() if s.get("n")}
         cells = getattr(stats, "cells", None)
         if cells:
             out["cells"] = {

@@ -22,6 +22,14 @@ backoff — shedding is back-pressure, not loss — and every row records the
 routing counters (`shed`/`rerouted`/`hedge_cell`) next to the p99s so a
 tail move is attributable.  Rows land in ``BENCH_fig8.json`` via
 ``benchmarks/run.py`` and ``benchmarks/results/fleet.csv``.
+
+The run installs a fresh :class:`repro.obs.Tracer` so every request is
+traced end to end; the Chrome-trace export lands in
+``benchmarks/results/fig8_trace.json`` (open in Perfetto / about:tracing)
+and covers routed, hedged, rerouted, and cancelled requests plus the
+mid-window maintenance fan-out.  Per-stage medians
+(queue/batch/dispatch/kernel) from the registry-backed stage histograms
+go into each row so ``BENCH_fig8.json`` says where the latency lives.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import time
 import numpy as np
 
 from benchmarks.common import RESULTS, clustered_corpus, csv_row, lat_summary
+from repro.obs import Tracer, set_tracer
 
 
 class _Failable:
@@ -57,6 +66,12 @@ class _Failable:
 
     def jit_cache_size(self):
         return self._fn.jit_cache_size()
+
+    @property
+    def metrics(self):
+        # expose the wrapped backend's registry so the cell's stage
+        # breakdown still sees kernel/rerank histograms through the proxy
+        return self._fn.metrics
 
 
 def _zipf_qids(rng, n, alpha, size):
@@ -133,119 +148,139 @@ def run(n: int = 8192, d: int = 64, fleet_sizes=(2, 4, 8),
         n_clusters=n_clusters, top="brute", bottom="brute",
         kmeans_iters=4, kmeans_minibatch=None, bucket_cap=None))
 
+    # fresh tracer for the run: the exported Chrome-trace covers routed,
+    # hedged, rerouted, and cancelled requests plus the leader fan-out
+    tracer = Tracer(capacity=65536)
+    prev_tracer = set_tracer(tracer)
+
     rows = []
-    for size in fleet_sizes:
-        meshes = make_cell_meshes(size, share_devices=True)
-        proxies, cells = [], []
-        for i, mesh in enumerate(meshes):
-            be = ShardedSearchBackend(
-                mesh, idx, kind="ivf", k=k, axes=tuple(mesh.axis_names),
-                nprobe_local=8, headroom=1.5)
-            proxy = _Failable(be)
-            proxies.append(proxy)
-            cells.append(ServingCell(
-                proxy, name=f"cell{i}",
-                cache=FrequencyAdmissionCache(capacity=512),
-                max_wait_ms=0.5))
-        router = CellRouter(cells, max_queue_depth=64, hedge_ms=75.0)
-        try:
-            # warm every pow2 batch bucket concurrent clients can form
-            # (1..clients) on every cell, off the clock — otherwise the
-            # steady window measures XLA compiles, not serving
-            bb = 1
-            while bb <= clients:
-                for c in cells:
-                    c.search_fn(db[:bb])
-                bb <<= 1
+    try:
+        for size in fleet_sizes:
+            meshes = make_cell_meshes(size, share_devices=True)
+            proxies, cells = [], []
+            for i, mesh in enumerate(meshes):
+                be = ShardedSearchBackend(
+                    mesh, idx, kind="ivf", k=k, axes=tuple(mesh.axis_names),
+                    nprobe_local=8, headroom=1.5)
+                proxy = _Failable(be)
+                proxies.append(proxy)
+                cells.append(ServingCell(
+                    proxy, name=f"cell{i}",
+                    cache=FrequencyAdmissionCache(capacity=512),
+                    max_wait_ms=0.5))
+            router = CellRouter(cells, max_queue_depth=64, hedge_ms=75.0)
+            try:
+                # warm every pow2 batch bucket concurrent clients can form
+                # (1..clients) on every cell, off the clock — otherwise the
+                # steady window measures XLA compiles, not serving
+                bb = 1
+                while bb <= clients:
+                    for c in cells:
+                        c.search_fn(db[:bb])
+                    bb <<= 1
 
-            def chunks(alpha_rng):
-                qids = _zipf_qids(alpha_rng, idx.db.shape[0], zipf_alpha,
-                                  clients * reqs_per_client)
-                return np.array_split(qids, clients)
+                def chunks(alpha_rng):
+                    qids = _zipf_qids(alpha_rng, idx.db.shape[0], zipf_alpha,
+                                      clients * reqs_per_client)
+                    return np.array_split(qids, clients)
 
-            # -- steady state --------------------------------------
-            lat_s, lost_s, retr_s, wall_s = _drive(
-                router, idx.db, chunks(np.random.default_rng(seed + 1)))
+                # -- steady state --------------------------------------
+                lat_s, lost_s, retr_s, wall_s = _drive(
+                    router, idx.db, chunks(np.random.default_rng(seed + 1)))
 
-            # -- rolling maintenance -------------------------------
-            # the head rotates AND the corpus mutates (delete part of
-            # the fullest bucket, add mass near another centroid);
-            # mid-window the leader pops one manifest and rolls it
-            # across the fleet while clients keep hammering
-            b = int(np.argmax(idx.bucket_counts))
-            idx.delete_entities(np.asarray(idx.bucket_ids[b][:16]).copy())
-            new = (np.asarray(idx.centroids[1])[None, :]
-                   + 0.1 * rng.normal(size=(16, d))).astype(np.float32)
-            idx.add_entities(new)
-            fan = {}
+                # -- rolling maintenance -------------------------------
+                # the head rotates AND the corpus mutates (delete part of
+                # the fullest bucket, add mass near another centroid);
+                # mid-window the leader pops one manifest and rolls it
+                # across the fleet while clients keep hammering
+                b = int(np.argmax(idx.bucket_counts))
+                idx.delete_entities(np.asarray(idx.bucket_ids[b][:16]).copy())
+                new = (np.asarray(idx.centroids[1])[None, :]
+                       + 0.1 * rng.normal(size=(16, d))).astype(np.float32)
+                idx.add_entities(new)
+                fan = {}
 
-            def leader_fanout():
-                fan.update(router.apply_updates(idx))
+                def leader_fanout():
+                    fan.update(router.apply_updates(idx))
 
-            lat_m, lost_m, retr_m, wall_m = _drive(
-                router, idx.db, chunks(np.random.default_rng(seed + 2)),
-                mid_action=leader_fanout)
+                lat_m, lost_m, retr_m, wall_m = _drive(
+                    router, idx.db, chunks(np.random.default_rng(seed + 2)),
+                    mid_action=leader_fanout)
 
-            # -- single-cell failure mid-run -----------------------
-            lat_f, lost_f, retr_f, wall_f = _drive(
-                router, idx.db, chunks(np.random.default_rng(seed + 3)),
-                mid_action=proxies[0].fail)
+                # -- single-cell failure mid-run -----------------------
+                lat_f, lost_f, retr_f, wall_f = _drive(
+                    router, idx.db, chunks(np.random.default_rng(seed + 3)),
+                    mid_action=proxies[0].fail)
 
-            st = router.stats()
-            s_steady = lat_summary(lat_s)
-            s_maint = lat_summary(lat_m)
-            s_fail = lat_summary(lat_f, stats=st)
-            total = 3 * clients * reqs_per_client
-            ratio = (s_maint["p99_ms"] / s_steady["p99_ms"]
-                     if s_steady["p99_ms"] else float("inf"))
-            row = {
-                "cells": size,
-                "requests": total,
-                "qps_steady": round(len(lat_s) / wall_s, 1),
-                "p99_steady_ms": round(s_steady["p99_ms"], 3),
-                "p99_maint_ms": round(s_maint["p99_ms"], 3),
-                "p99_fail_ms": round(s_fail["p99_ms"], 3),
-                "p50_steady_ms": round(s_steady["p50_ms"], 3),
-                "maint_over_steady": round(ratio, 3),
-                "fanout_mode": fan.get("mode"),
-                "fanout_bytes": fan.get("bytes"),
-                "lost": lost_s + lost_m + lost_f,
-                "shed_retries": retr_s + retr_m + retr_f,
-                "shed": int(st.shed),
-                "rerouted": int(st.rerouted),
-                "hedge_cell": int(st.hedge_cell),
-                "cache_hit_rate": round(
-                    st.cache_hits / max(st.cache_hits + st.cache_misses, 1),
-                    3),
-                "down_cells": sorted(router.down_cells()),
-            }
-            rows.append(row)
-            csv_row(
-                f"fig8_cells{size}", s_steady["p50_ms"] * 1e3,
-                f"qps={row['qps_steady']},"
-                f"p99_steady={row['p99_steady_ms']:.2f},"
-                f"p99_maint={row['p99_maint_ms']:.2f},"
-                f"p99_fail={row['p99_fail_ms']:.2f},"
-                f"maint_over_steady={row['maint_over_steady']:.2f},"
-                f"lost={row['lost']},shed={row['shed']},"
-                f"rerouted={row['rerouted']},"
-                f"hedge_cell={row['hedge_cell']}")
-            # the fleet contract is loss-free failure — this is the
-            # acceptance criterion, not a soft metric
-            assert row["lost"] == 0, \
-                f"{row['lost']} requests lost at fleet size {size}"
-            if ratio > 2.0:
-                print(f"# WARN fig8: maint p99 {ratio:.2f}x steady at "
-                      f"{size} cells (bar: 2x)")
-        finally:
-            router.close()
+                st = router.stats()
+                s_steady = lat_summary(lat_s)
+                s_maint = lat_summary(lat_m)
+                s_fail = lat_summary(lat_f, stats=st)
+                total = 3 * clients * reqs_per_client
+                ratio = (s_maint["p99_ms"] / s_steady["p99_ms"]
+                         if s_steady["p99_ms"] else float("inf"))
+                row = {
+                    "cells": size,
+                    "requests": total,
+                    "qps_steady": round(len(lat_s) / wall_s, 1),
+                    "p99_steady_ms": round(s_steady["p99_ms"], 3),
+                    "p99_maint_ms": round(s_maint["p99_ms"], 3),
+                    "p99_fail_ms": round(s_fail["p99_ms"], 3),
+                    "p50_steady_ms": round(s_steady["p50_ms"], 3),
+                    "maint_over_steady": round(ratio, 3),
+                    "fanout_mode": fan.get("mode"),
+                    "fanout_bytes": fan.get("bytes"),
+                    "lost": lost_s + lost_m + lost_f,
+                    "shed_retries": retr_s + retr_m + retr_f,
+                    "shed": int(st.shed),
+                    "rerouted": int(st.rerouted),
+                    "hedge_cell": int(st.hedge_cell),
+                    "cache_hit_rate": round(
+                        st.cache_hits / max(st.cache_hits + st.cache_misses, 1),
+                        3),
+                    "down_cells": sorted(router.down_cells()),
+                }
+                # per-stage medians from the registry-backed histograms:
+                # where a request's time went (queue wait vs batch close
+                # vs dispatch vs device kernel), not just that it went
+                for stage in ("queue", "batch", "dispatch", "kernel"):
+                    s = (st.stages or {}).get(stage)
+                    if s and s.get("n"):
+                        row[f"{stage}_p50_ms"] = round(
+                            float(s["p50_ms"]), 3)
+                rows.append(row)
+                csv_row(
+                    f"fig8_cells{size}", s_steady["p50_ms"] * 1e3,
+                    f"qps={row['qps_steady']},"
+                    f"p99_steady={row['p99_steady_ms']:.2f},"
+                    f"p99_maint={row['p99_maint_ms']:.2f},"
+                    f"p99_fail={row['p99_fail_ms']:.2f},"
+                    f"maint_over_steady={row['maint_over_steady']:.2f},"
+                    f"lost={row['lost']},shed={row['shed']},"
+                    f"rerouted={row['rerouted']},"
+                    f"hedge_cell={row['hedge_cell']}")
+                # the fleet contract is loss-free failure — this is the
+                # acceptance criterion, not a soft metric
+                assert row["lost"] == 0, \
+                    f"{row['lost']} requests lost at fleet size {size}"
+                if ratio > 2.0:
+                    print(f"# WARN fig8: maint p99 {ratio:.2f}x steady at "
+                          f"{size} cells (bar: 2x)")
+            finally:
+                router.close()
+    finally:
+        set_tracer(prev_tracer)
 
     os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "fig8_trace.json")
+    tracer.export(trace_path)
+    print(f"# fig8: {len(tracer.events())} trace events "
+          f"({tracer.n_dropped} dropped) -> {trace_path}")
     with open(os.path.join(RESULTS, "fleet.csv"), "w") as f:
-        cols = sorted(rows[0])
+        cols = sorted(set().union(*rows))
         f.write(",".join(cols) + "\n")
         for r in rows:
-            f.write(",".join(str(r[c]) for c in cols) + "\n")
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
     return rows
 
 

@@ -41,6 +41,8 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.analysis.annotations import guarded_by
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 
 __all__ = ["HostIndexBackend", "MaintenanceScheduler"]
 
@@ -150,8 +152,16 @@ class MaintenanceScheduler:
         self.reboost_kw = reboost_kw or {}
         self.on_event = on_event
         self.events: list[dict] = []
-        self.n_reboosts = 0
         self.last_error: Optional[BaseException] = None
+        # scheduler telemetry: the live drift reading and estimator mass
+        # become gauges (polled by dashboards between triggers), trigger
+        # outcomes become a counter + duration histogram
+        self.metrics = MetricsRegistry()
+        self._g_drift = self.metrics.gauge("drift")
+        self._g_mass = self.metrics.gauge("estimator_mass")
+        self._c_reboosts = self.metrics.counter("reboosts")
+        self._h_maint = self.metrics.histogram("maintenance_ms",
+                                               lo=1e-2, hi=1e7)
         # serializes triggers: the daemon loop and direct check_now()
         # callers race on the cooldown watermark and the event log
         self._lock = threading.Lock()
@@ -162,6 +172,10 @@ class MaintenanceScheduler:
             self._thread.start()
 
     # ------------------------------------------------------------------
+    @property
+    def n_reboosts(self) -> int:
+        return self._c_reboosts.value
+
     def check_now(self) -> Optional[dict]:
         """One synchronous drift check; returns the event dict if it
         triggered maintenance, else None.  Serialized under the
@@ -169,6 +183,8 @@ class MaintenanceScheduler:
         double-trigger inside one cooldown window."""
         with self._lock:
             d = self.estimator.drift()
+            self._g_drift.set(float(d[self.metric]))
+            self._g_mass.set(float(d["n_observed"]))
             if d["n_observed"] < self.min_observations:
                 return None
             n_total = getattr(self.estimator, "n_total", 0)
@@ -181,49 +197,58 @@ class MaintenanceScheduler:
 
     @guarded_by("_lock")
     def _trigger(self, drift: dict) -> dict:
-        t0 = time.perf_counter()
-        # the corpus may have grown since the estimator was sized
-        # (add_entities keeps ids stable and appends) — grow with it so
-        # the likelihood vector matches the index
-        n_idx = getattr(self.index, "n", None)
-        if n_idx is None and hasattr(self.index, "db"):
-            n_idx = int(self.index.db.shape[0])
-        if (n_idx and hasattr(self.estimator, "resize")
-                and n_idx > getattr(self.estimator, "n", n_idx)):
-            self.estimator.resize(n_idx)
-        p_new = self.estimator.likelihood()
-        reboost_stats = self.index.reboost(p_new, **self.reboost_kw)
-        rebalance_stats = None
-        if self.rebalance and hasattr(self.index, "rebalance"):
-            rebalance_stats = self.index.rebalance()
-        republish = None
-        if self.engine is not None:
-            # the engine pops the target's delta manifest (delta="auto")
-            # and the backend ships only the dirty slices — a reboost
-            # that re-split every bucket degenerates to a full re-place
-            # via the backend's size threshold, a localized rebalance
-            # ships a handful of bucket slabs
-            republish = self.engine.apply_updates(
-                self.publish_target(self.index))
-        elif self.cache is not None:
-            self.cache.invalidate_all()
-        # re-anchor on the RAW estimate (what drift() compares against);
-        # the smoothed p_new fed to reboost would read as residual drift
-        # at low observation mass
-        if hasattr(self.estimator, "current_raw"):
-            self.estimator.set_reference(self.estimator.current_raw())
-        else:
-            self.estimator.set_reference(p_new)
-        event = {
-            "drift": drift,
-            "reboost": reboost_stats,
-            "rebalance": rebalance_stats,
-            "republish": republish,
-            "duration_s": time.perf_counter() - t0,
-            "t": time.time(),
-        }
-        self.events.append(event)
-        self.n_reboosts += 1
+        tracer = get_tracer()
+        with tracer.span("maint.trigger",
+                         drift=round(float(drift[self.metric]), 4)):
+            t0 = time.perf_counter()
+            # the corpus may have grown since the estimator was sized
+            # (add_entities keeps ids stable and appends) — grow with it
+            # so the likelihood vector matches the index
+            n_idx = getattr(self.index, "n", None)
+            if n_idx is None and hasattr(self.index, "db"):
+                n_idx = int(self.index.db.shape[0])
+            if (n_idx and hasattr(self.estimator, "resize")
+                    and n_idx > getattr(self.estimator, "n", n_idx)):
+                self.estimator.resize(n_idx)
+            p_new = self.estimator.likelihood()
+            with tracer.span("maint.reboost"):
+                reboost_stats = self.index.reboost(p_new, **self.reboost_kw)
+            rebalance_stats = None
+            if self.rebalance and hasattr(self.index, "rebalance"):
+                with tracer.span("maint.rebalance"):
+                    rebalance_stats = self.index.rebalance()
+            republish = None
+            if self.engine is not None:
+                # the engine pops the target's delta manifest
+                # (delta="auto") and the backend ships only the dirty
+                # slices — a reboost that re-split every bucket
+                # degenerates to a full re-place via the backend's size
+                # threshold, a localized rebalance ships a handful of
+                # bucket slabs.  Fleet routers / cells emit their own
+                # maint.fanout / republish spans underneath this one.
+                republish = self.engine.apply_updates(
+                    self.publish_target(self.index))
+            elif self.cache is not None:
+                self.cache.invalidate_all()
+            # re-anchor on the RAW estimate (what drift() compares
+            # against); the smoothed p_new fed to reboost would read as
+            # residual drift at low observation mass
+            if hasattr(self.estimator, "current_raw"):
+                self.estimator.set_reference(self.estimator.current_raw())
+            else:
+                self.estimator.set_reference(p_new)
+            duration_s = time.perf_counter() - t0
+            event = {
+                "drift": drift,
+                "reboost": reboost_stats,
+                "rebalance": rebalance_stats,
+                "republish": republish,
+                "duration_s": duration_s,
+                "t": time.time(),
+            }
+            self.events.append(event)
+            self._c_reboosts.inc()
+            self._h_maint.observe(duration_s * 1e3)
         if self.on_event is not None:
             self.on_event(event)
         return event

@@ -39,6 +39,13 @@ Exemptions baked into the model (not suppressions):
   set even when the enclosing block holds the lock: closures here are
   thread targets (``_dispatch``'s hedge primary) and run later, without
   the lock.
+* **Internally-locked instruments** — attributes assigned from a
+  ``repro.obs`` constructor in ``__init__`` (``MetricsRegistry()``,
+  ``Tracer()``, ``Counter``/``Gauge``/``Histogram``, or a registry's
+  ``counter()``/``gauge()``/``histogram()`` get-or-create).  Every obs
+  instrument owns a private lock and serializes its own mutations, so
+  the class-level lock discipline does not apply to them — no
+  ``# repro: allow`` waiver needed at the call sites.
 """
 from __future__ import annotations
 
@@ -62,6 +69,14 @@ _LOCK_CTORS = {"Lock", "RLock", "Condition"}
 _MUTATORS = {"append", "extend", "insert", "remove", "pop", "popitem",
              "clear", "update", "add", "discard", "setdefault",
              "appendleft", "popleft"}
+# repro.obs instrument constructors: classes (MetricsRegistry(),
+# Tracer(), Counter/Gauge/Histogram(...)) and the registry's
+# get-or-create methods (self.metrics.counter("x"), ...).  An attribute
+# initialized from one of these in __init__ is *internally locked* — the
+# instrument serializes its own mutations — so the class's lock
+# discipline is not inferred from (or enforced on) writes to it.
+_OBS_CTORS = {"MetricsRegistry", "Tracer", "Counter", "Gauge",
+              "Histogram", "counter", "gauge", "histogram"}
 
 
 def _self_attr(node: ast.AST) -> Optional[str]:
@@ -72,13 +87,21 @@ def _self_attr(node: ast.AST) -> Optional[str]:
     return None
 
 
-def _is_lock_ctor(node: ast.AST) -> bool:
+def _call_name(node: ast.AST) -> Optional[str]:
+    """Terminal callee name of a Call (``a.b.c(...)`` -> ``c``)."""
     if not isinstance(node, ast.Call):
-        return False
+        return None
     path = node.func
-    name = path.attr if isinstance(path, ast.Attribute) else \
+    return path.attr if isinstance(path, ast.Attribute) else \
         path.id if isinstance(path, ast.Name) else None
-    return name in _LOCK_CTORS
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    return _call_name(node) in _LOCK_CTORS
+
+
+def _is_obs_ctor(node: ast.AST) -> bool:
+    return _call_name(node) in _OBS_CTORS
 
 
 def _guarded_by_of(fn: ast.FunctionDef) -> Optional[str]:
@@ -138,22 +161,31 @@ class _ClassChecker:
                         if isinstance(n, (ast.FunctionDef,
                                           ast.AsyncFunctionDef))]
         self.locks = self._designated_locks()
+        self.internally_locked = self._internally_locked()
         self.guarded_methods = {m.name: g for m in self.methods
                                 if (g := _guarded_by_of(m)) is not None}
 
-    def _designated_locks(self) -> set:
-        locks = set()
+    def _init_assigns(self, pred):
+        out = set()
         for m in self.methods:
             if m.name != "__init__":
                 continue
             for node in ast.walk(m):
-                if isinstance(node, ast.Assign) and \
-                        _is_lock_ctor(node.value):
+                if isinstance(node, ast.Assign) and pred(node.value):
                     for t in node.targets:
                         attr = _self_attr(t)
                         if attr is not None:
-                            locks.add(attr)
-        return locks
+                            out.add(attr)
+        return out
+
+    def _designated_locks(self) -> set:
+        return self._init_assigns(_is_lock_ctor)
+
+    def _internally_locked(self) -> set:
+        """Attrs holding a repro.obs instrument: each owns a private
+        lock, so the class lock discipline is neither inferred from nor
+        enforced on writes to them."""
+        return self._init_assigns(_is_obs_ctor)
 
     # -- pass 1: infer guarded attributes ------------------------------
     def _infer_guarded(self) -> dict:
@@ -161,6 +193,8 @@ class _ClassChecker:
         guarded: dict[str, set] = {}
 
         def note(attr, lock):
+            if attr in self.internally_locked:
+                return
             guarded.setdefault(attr, set()).add(lock)
 
         for m in self.methods:
@@ -234,6 +268,8 @@ class _ClassChecker:
                 self._walk_check(method, stmt.body, inner, guarded)
                 continue
             for attr, node in _iter_writes(stmt):
+                if attr in self.internally_locked:
+                    continue
                 locks_for = guarded.get(attr)
                 if locks_for and not (held & locks_for):
                     self.findings.append(Finding(

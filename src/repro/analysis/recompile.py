@@ -17,14 +17,23 @@ Findings carry the source location of the entry point's builder in
 as the static rules.  A builder or step that *raises* is reported as
 ``entry-point-error`` — a gate that silently skips a broken entry point
 would report stability it never measured.
+
+The gate logs through :mod:`repro.obs`: every run records per-step wall
+times and compile counts into the process-wide ``PROFILE`` registry and
+emits ``gate.entry-point``/``gate.step`` spans, so a gate run under an
+active tracer shows up on the same Perfetto timeline as the serving
+traffic it certifies.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Callable, Iterable, Optional
 
 from repro.analysis.core import Finding
+from repro.obs.profile import PROFILE
+from repro.obs.trace import get_tracer
 
 __all__ = ["Plan", "run_entry_point", "run_recompile_gate"]
 
@@ -57,35 +66,47 @@ def _loc(builder) -> tuple:
 
 def run_entry_point(name: str, builder: Callable[[], Plan]) -> list:
     path, line = _loc(builder)
-    try:
-        plan = builder()
-    except Exception as e:
-        return [Finding(
-            "entry-point-error", path, line, 1,
-            f"{name}: builder failed: {e!r}")]
-    findings: list = []
-    baseline: Optional[int] = None
-    for step_i, (label, thunk) in enumerate(plan.steps):
+    tracer = get_tracer()
+    h_step = PROFILE.histogram("gate_step_ms", lo=1e-3, hi=1e7)
+    with tracer.span("gate.entry-point", entry=name) as esp:
         try:
-            thunk()
+            plan = builder()
         except Exception as e:
-            findings.append(Finding(
+            esp.set(error=type(e).__name__)
+            return [Finding(
                 "entry-point-error", path, line, 1,
-                f"{name}: step '{label}' failed: {e!r}"))
-            return findings
-        size = plan.cache_size()
-        if size < 0:
-            return findings          # no cache introspection: skip
-        if step_i < plan.warmup_steps or baseline is None:
-            baseline = size          # warm-up compiles are expected
-        elif size != baseline:
-            findings.append(Finding(
-                "recompile", path, line, 1,
-                f"{name}: step '{label}' changed the compile-signature "
-                f"set ({baseline} -> {size} cached variants) — a "
-                "mutation-perturbed shape reached the jitted entry "
-                "point"))
-            baseline = size          # report each new trigger once
+                f"{name}: builder failed: {e!r}")]
+        findings: list = []
+        baseline: Optional[int] = None
+        for step_i, (label, thunk) in enumerate(plan.steps):
+            t0 = time.perf_counter()
+            try:
+                with tracer.span("gate.step", entry=name, step=label):
+                    thunk()
+            except Exception as e:
+                findings.append(Finding(
+                    "entry-point-error", path, line, 1,
+                    f"{name}: step '{label}' failed: {e!r}"))
+                return findings
+            h_step.observe((time.perf_counter() - t0) * 1e3)
+            size = plan.cache_size()
+            if size < 0:
+                return findings      # no cache introspection: skip
+            if step_i < plan.warmup_steps or baseline is None:
+                baseline = size      # warm-up compiles are expected
+            elif size != baseline:
+                PROFILE.counter("gate_recompiles").inc()
+                tracer.instant("gate-recompile", entry=name, step=label,
+                               variants=size)
+                findings.append(Finding(
+                    "recompile", path, line, 1,
+                    f"{name}: step '{label}' changed the "
+                    f"compile-signature set ({baseline} -> {size} cached "
+                    "variants) — a mutation-perturbed shape reached the "
+                    "jitted entry point"))
+                baseline = size      # report each new trigger once
+        esp.set(steps=len(plan.steps),
+                variants=baseline if baseline is not None else -1)
     return findings
 
 

@@ -43,6 +43,7 @@ Every apply returns a stats dict (``mode``/``bytes``/``full_bytes``/
 from __future__ import annotations
 
 import threading
+import time
 from functools import partial
 from typing import Optional
 
@@ -54,6 +55,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.analysis.annotations import guarded_by
 from repro.kernels.ops import quantize_rows_int8
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.distributed.sharding import (
     _axes_size,
     _brute_device_arrays,
@@ -122,17 +125,31 @@ class ShardedSearchBackend:
         self.delta_max_fraction = delta_max_fraction
         self.fused = fused
         self.precision = precision
+        self.nprobe_local = nprobe_local
+        self.beam_width = beam_width
         self._lock = threading.Lock()
         self._delta_fn = None
         self._delta_fn_masked = None     # brute explicit-alive path
         self._version: Optional[int] = None
         self._n = 0                      # real corpus rows last placed
         self._full_bytes = 0             # host bytes of a full re-place
-        self.republished_bytes = 0       # cumulative bytes shipped by applies
-        self.republish_full_bytes = 0    # what full re-places would have cost
-        self.n_delta_applies = 0
-        self.n_full_applies = 0
         self.last_republish: Optional[dict] = None
+        # fixed-footprint telemetry: dispatch/kernel/rerank timings plus
+        # republish + compile-signature counters (see docs/observability.md)
+        self.metrics = MetricsRegistry()
+        self._h_kernel = self.metrics.histogram("kernel_ms")
+        self._h_rerank = self.metrics.histogram("rerank_ms")
+        self._h_first = self.metrics.histogram("first_call_ms",
+                                               lo=1e-2, hi=1e7)
+        self._c_dispatches = self.metrics.counter("dispatches")
+        self._c_sigs = self.metrics.counter("compile_signatures")
+        self._c_repub = self.metrics.counter("republished_bytes")
+        self._c_repub_full = self.metrics.counter("republish_full_bytes")
+        self._c_delta = self.metrics.counter("delta_applies")
+        self._c_full = self.metrics.counter("full_applies")
+        # abstract query signatures (shape, dtype) already dispatched —
+        # the first call per signature is the one that paid trace+compile
+        self._seen_sigs: set = set()
 
         if kind == "auto":
             if isinstance(target, np.ndarray) or not hasattr(
@@ -175,6 +192,25 @@ class ShardedSearchBackend:
         else:
             raise ValueError(f"unknown backend kind {kind!r}")
         self._place(target, alive=alive)
+
+    # -- registry-backed compatibility counters ------------------------
+    @property
+    def republished_bytes(self) -> int:
+        """Cumulative bytes shipped by applies."""
+        return self._c_repub.value
+
+    @property
+    def republish_full_bytes(self) -> int:
+        """What full re-places would have cost."""
+        return self._c_repub_full.value
+
+    @property
+    def n_delta_applies(self) -> int:
+        return self._c_delta.value
+
+    @property
+    def n_full_applies(self) -> int:
+        return self._c_full.value
 
     # ------------------------------------------------------------------
     def _corpus_spec(self, ndim: int) -> NamedSharding:
@@ -494,17 +530,19 @@ class ShardedSearchBackend:
         is ``"delta"``, ``"full"``, or ``"noop"``; ``bytes`` is what was
         actually shipped; ``full_bytes`` is what a full re-place ships.
         """
-        with self._lock:
-            stats = self._apply_locked(target, alive, delta)
-            # counters stay under the lock: two maintenance passes
-            # applying concurrently would lose increments otherwise
-            self.last_republish = stats
-            self.republished_bytes += stats["bytes"]
-            self.republish_full_bytes += stats["full_bytes"]
+        with get_tracer().span("republish.place", kind=self.kind) as sp:
+            with self._lock:
+                stats = self._apply_locked(target, alive, delta)
+                self.last_republish = stats
+            # counters are internally locked — concurrent maintenance
+            # passes can't lose increments even outside the backend lock
+            self._c_repub.inc(stats["bytes"])
+            self._c_repub_full.inc(stats["full_bytes"])
             if stats["mode"] == "delta":
-                self.n_delta_applies += 1
+                self._c_delta.inc()
             elif stats["mode"] == "full":
-                self.n_full_applies += 1
+                self._c_full.inc()
+            sp.set(mode=stats["mode"], bytes=stats["bytes"])
         return stats
 
     @guarded_by("_lock")
@@ -549,10 +587,83 @@ class ShardedSearchBackend:
             return -1
 
     def __call__(self, queries):
+        tracer = get_tracer()
         q, B = _pad_queries(self.mesh, queries, self.query_axes)
-        with self._lock, self.mesh:
-            qs = jax.device_put(
-                q, NamedSharding(self.mesh, _q_spec(self.query_axes)))
-            d, i = self._fn(*self._args, qs)
-        d, i = jax.device_get((d, i))
-        return np.asarray(d)[:B], np.asarray(i)[:B]
+        sig = (tuple(q.shape), str(q.dtype))
+        t0 = time.perf_counter()
+        # kernel: queue + device execution of the jitted shard_map scan.
+        # block_until_ready runs OUTSIDE the lock (same concurrency as
+        # before, where device_get did the blocking) so the span measures
+        # real device time, not async dispatch.
+        with tracer.span("kernel", kind=self.kind, b=int(q.shape[0])):
+            with self._lock, self.mesh:
+                first = sig not in self._seen_sigs
+                if first:
+                    self._seen_sigs.add(sig)
+                qs = jax.device_put(
+                    q, NamedSharding(self.mesh, _q_spec(self.query_axes)))
+                d, i = self._fn(*self._args, qs)
+            jax.block_until_ready((d, i))
+        t1 = time.perf_counter()
+        # rerank: pull the per-shard top-k merge result back to host and
+        # trim query padding — the host half of candidate re-scoring
+        with tracer.span("rerank", kind=self.kind):
+            d, i = jax.device_get((d, i))
+            out = np.asarray(d)[:B], np.asarray(i)[:B]
+        t2 = time.perf_counter()
+        self._c_dispatches.inc()
+        self._h_kernel.observe((t1 - t0) * 1e3)
+        self._h_rerank.observe((t2 - t1) * 1e3)
+        if first:
+            # first dispatch of this abstract signature paid the
+            # trace+compile; record it with the signature that triggered it
+            self._c_sigs.inc()
+            self._h_first.observe((t1 - t0) * 1e3)
+            tracer.instant("compile-signature", kind=self.kind,
+                           shape=str(list(sig[0])), dtype=sig[1],
+                           ms=round((t1 - t0) * 1e3, 3))
+        return out
+
+    def roofline_report(self, b: int = 1, *, peak_bw: float = 0.0) -> dict:
+        """Analytic bytes/FLOPs for one dispatch next to the *measured*
+        kernel time from live telemetry.
+
+        ``analytic_frac`` is the useful-byte fraction of the cost model
+        (what fraction of moved bytes are corpus bytes a perfect kernel
+        must move); ``achieved_gbps`` divides the model's moved bytes by
+        the median measured kernel time; with ``peak_bw`` (bytes/s, e.g.
+        ``benchmarks.roofline.HBM_BW``) the measured useful-byte fraction
+        ``measured_frac`` = useful bytes/s over peak is reported too.
+        """
+        from repro.obs.profile import backend_cost
+
+        if self.kind == "brute":
+            d = int(np.asarray(self._args[0]).shape[1])
+            cost = backend_cost("brute", fused=self.fused,
+                                precision=self.precision, n_rows=self._n,
+                                d=d, b=b, k=self.k)
+        elif self.kind == "ivf":
+            d = int(np.asarray(self._args[0]).shape[1])
+            cost = backend_cost(
+                "ivf", fused=self.fused, precision=self.precision,
+                n_rows=self._n, d=d, b=b, k=self.k,
+                n_probe_rows=self.nprobe_local * self.n_dev * self._cap,
+                n_centroids=self._Kp)
+        else:
+            d = int(np.asarray(self._args[0]).shape[2])
+            nb = int(np.asarray(self._args[0]).shape[1])
+            cost = backend_cost(
+                "forest", fused=self.fused, precision=self.precision,
+                n_rows=self._n, d=d, b=b, k=self.k,
+                n_probe_rows=(self.nprobe_local * self.n_dev
+                              * self._shapes.cap),
+                n_centroids=self.n_dev * nb)
+        med_ms = self._h_kernel.quantile(0.5) if self._h_kernel.count else 0.0
+        cost["measured_kernel_ms_p50"] = med_ms
+        if med_ms > 0:
+            bps = cost["bytes_moved"] / (med_ms / 1e3)
+            cost["achieved_gbps"] = bps / 1e9
+            if peak_bw > 0:
+                cost["measured_frac"] = (
+                    cost["useful_bytes"] / (med_ms / 1e3)) / peak_bw
+        return cost

@@ -9,7 +9,10 @@ function — the *unit of replication* in the fleet tier
   * micro-batching: collect up to ``max_batch`` requests or ``max_wait_ms``
     (whichever first), pad to the next power-of-two bucket so jit caches a
     handful of shapes;
-  * per-request latency tracking (P50/P90/P99, queue vs compute split);
+  * per-request latency tracking (P50/P90/P99, queue vs compute split) in
+    a fixed-footprint :class:`repro.obs.metrics.MetricsRegistry` — the
+    cell's memory does not grow with traffic — plus per-request
+    ``queue``/``batch``/``dispatch`` spans through :mod:`repro.obs.trace`;
   * optional hedged dispatch to a replica after ``hedge_ms`` (straggler
     mitigation inside the cell; the *fleet* hedges onto a different
     cell's mesh instead — see ``CellRouter``);
@@ -33,9 +36,13 @@ import dataclasses
 import queue
 import threading
 import time
+from collections import deque
 from typing import Callable, Optional
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 
 __all__ = ["ServingCell", "EngineStats", "CellFailure"]
 
@@ -57,11 +64,18 @@ class _Request:
     t_enqueue: float
     future: "queue.Queue"
     cancelled: threading.Event
+    trace_id: int = 0
     t_batch: float = 0.0
 
 
 @dataclasses.dataclass
 class EngineStats:
+    """Read-only view over the cell's metrics registry.
+
+    Constructed fresh by :meth:`ServingCell.stats` from the registry's
+    histograms and counters — no field here is live mutable state.
+    """
+
     n: int
     p50_ms: float
     p90_ms: float
@@ -97,6 +111,10 @@ class EngineStats:
     # per-cell breakdown: name -> EngineStats of that cell (None on a
     # standalone cell)
     cells: "dict | None" = None
+    # per-stage latency breakdown: stage name (queue/batch/dispatch/
+    # kernel/rerank) -> {"n", "p50_ms", "p99_ms", "mean_ms"} from the
+    # registry's stage histograms (None when nothing was recorded)
+    stages: "dict | None" = None
 
 
 def _bucket(n: int) -> int:
@@ -135,25 +153,55 @@ class ServingCell:
         self.hedge_ms = hedge_ms
         self.cache = cache
         self.estimator = estimator
-        self.estimator_errors = 0
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.q: "queue.Queue[_Request]" = queue.Queue()
-        self.latencies: list[float] = []
-        self.queue_waits: list[float] = []
-        self.batch_sizes: list[int] = []
-        self.hedges = 0
-        self.n_cancelled = 0
-        self.republished_bytes = 0
-        self.republish_full_bytes = 0
+        # every latency/size series lives in fixed-footprint instruments:
+        # observing 10 requests or 10 million costs the same bytes
+        self.metrics = MetricsRegistry()
+        self._h_latency = self.metrics.histogram("latency_ms")
+        self._h_queue = self.metrics.histogram("queue_ms")
+        self._h_batch = self.metrics.histogram("batch_ms")
+        self._h_dispatch = self.metrics.histogram("dispatch_ms")
+        self._h_bsize = self.metrics.histogram("batch_size", lo=1.0,
+                                               hi=4096.0)
+        self._c_hedges = self.metrics.counter("hedges")
+        self._c_cancelled = self.metrics.counter("cancelled")
+        self._c_repub = self.metrics.counter("republished_bytes")
+        self._c_repub_full = self.metrics.counter("republish_full_bytes")
+        self._c_est_err = self.metrics.counter("estimator_errors")
+        self._c_failures = self.metrics.counter("backend_failures")
+        # last-100 batch sizes, kept as a *bounded* deque purely for the
+        # EngineStats.batch_sizes compatibility list
+        self._recent_batches: deque = deque(maxlen=100)
         self._failure: Optional[BaseException] = None
-        # one lock for every telemetry counter: the batch worker, hedge
-        # path, callers of search()/apply_updates(), and stats() readers
-        # all touch these from different threads
+        # guards the failure slot and the recent-batch deque; metric
+        # instruments are internally locked and never need it
         self._stats_lock = threading.Lock()
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
+
+    # -- registry-backed compatibility counters ------------------------
+    @property
+    def hedges(self) -> int:
+        return self._c_hedges.value
+
+    @property
+    def n_cancelled(self) -> int:
+        return self._c_cancelled.value
+
+    @property
+    def republished_bytes(self) -> int:
+        return self._c_repub.value
+
+    @property
+    def republish_full_bytes(self) -> int:
+        return self._c_repub_full.value
+
+    @property
+    def estimator_errors(self) -> int:
+        return self._c_est_err.value
 
     @classmethod
     def sharded(cls, mesh, target, *, kind: str = "auto", k: int = 10,
@@ -219,19 +267,21 @@ class ServingCell:
         # legacy backends without a delta kwarg keep working: only pass
         # the manifest when there is one
         dkw = {} if delta is None else {"delta": delta}
-        stats = self.search_fn.apply_updates(target, **dkw, **kw)
-        hstats = None
-        if self.hedge_fn is not None:
-            hstats = self.hedge_fn.apply_updates(target, **dkw, **kw)
-        # the gauges count bytes shipped to EVERY backend — a hedge
-        # replica that fell back to a full re-place must show up even
-        # when the primary took the delta path
-        with self._stats_lock:
+        with get_tracer().span("republish", cell=self.name) as sp:
+            stats = self.search_fn.apply_updates(target, **dkw, **kw)
+            hstats = None
+            if self.hedge_fn is not None:
+                hstats = self.hedge_fn.apply_updates(target, **dkw, **kw)
+            # the counters track bytes shipped to EVERY backend — a hedge
+            # replica that fell back to a full re-place must show up even
+            # when the primary took the delta path
             for st in (stats, hstats):
                 if isinstance(st, dict):
-                    self.republished_bytes += int(st.get("bytes", 0))
-                    self.republish_full_bytes += int(
-                        st.get("full_bytes", 0))
+                    self._c_repub.inc(int(st.get("bytes", 0)))
+                    self._c_repub_full.inc(int(st.get("full_bytes", 0)))
+            if isinstance(stats, dict):
+                sp.set(mode=stats.get("mode"),
+                       bytes=int(stats.get("bytes", 0)))
         if self.cache is not None:
             # invalidate AFTER the swap: the generation token handed out
             # at miss time stops in-flight pre-swap results from being
@@ -241,19 +291,22 @@ class ServingCell:
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray, *, future: "queue.Queue" = None,
-               cancelled: Optional[threading.Event] = None) -> "queue.Queue":
+               cancelled: Optional[threading.Event] = None,
+               trace_id: int = 0) -> "queue.Queue":
         """Enqueue one request; returns the future its result lands in.
 
         ``future`` lets a router share one result queue between a
         primary and a hedge dispatch on another cell (first responder
         wins); ``cancelled`` is the abandon flag — once set, the batch
-        worker drops the request instead of computing it.
+        worker drops the request instead of computing it.  ``trace_id``
+        threads a router-assigned trace through the worker's spans so
+        the queue wait and dispatch of one request share an id.
         """
         fut = queue.Queue() if future is None else future
         self.q.put(_Request(
             query=query, t_enqueue=time.perf_counter(), future=fut,
             cancelled=cancelled if cancelled is not None
-            else threading.Event()))
+            else threading.Event(), trace_id=trace_id))
         return fut
 
     def depth(self) -> int:
@@ -277,6 +330,7 @@ class ServingCell:
         generation observed at miss time, so a search that raced an
         ``apply_updates`` can never re-insert a stale result.
         """
+        tracer = get_tracer()
         key = gen = None
         if self.cache is not None:
             key = self.cache.key_for(query)
@@ -290,17 +344,17 @@ class ServingCell:
                     try:
                         self.estimator.observe(np.asarray(hit[1])[:1])
                     except Exception:
-                        with self._stats_lock:
-                            self.estimator_errors += 1
+                        self._c_est_err.inc()
                 return hit
         cancelled = threading.Event()
-        fut = self.submit(query, cancelled=cancelled)
+        trace_id = tracer.new_trace_id()
+        fut = self.submit(query, cancelled=cancelled, trace_id=trace_id)
         try:
             out = fut.get(timeout=timeout)
         except queue.Empty:
             cancelled.set()
-            with self._stats_lock:
-                self.n_cancelled += 1
+            self._c_cancelled.inc()
+            tracer.instant("cancel", cell=self.name, trace_id=trace_id)
             raise TimeoutError(
                 f"search timed out after {timeout}s (batch worker "
                 "stalled or search_fn hung)") from None
@@ -325,13 +379,17 @@ class ServingCell:
                 break
 
     # ------------------------------------------------------------------
-    def _collect(self) -> list[_Request]:
+    def _collect(self) -> "tuple[list[_Request], float]":
+        """Returns (batch, t_first): the requests collected and the
+        instant the first one was dequeued — the micro-batch assembly
+        span runs from t_first to dispatch."""
         try:
             first = self.q.get(timeout=0.1)
         except queue.Empty:
-            return []
+            return [], 0.0
+        t_first = time.perf_counter()
         batch = [first]
-        deadline = time.perf_counter() + self.max_wait
+        deadline = t_first + self.max_wait
         while len(batch) < self.max_batch:
             rem = deadline - time.perf_counter()
             if rem <= 0:
@@ -340,29 +398,42 @@ class ServingCell:
                 batch.append(self.q.get(timeout=rem))
             except queue.Empty:
                 break
-        return batch
+        return batch, t_first
 
     def _run(self):
         while not self._stop.is_set():
-            batch = self._collect()
+            batch, t_first = self._collect()
             # requests abandoned by their caller (timeout) are dropped
             # here — computing them anyway would waste backend work AND
             # pollute the latency stats with latencies nobody observed
             batch = [r for r in batch if not r.cancelled.is_set()]
             if not batch:
                 continue
-            t0 = time.perf_counter()
+            tracer = get_tracer()
             qs = np.stack([r.query for r in batch])
             b = qs.shape[0]
             bb = _bucket(b)
             if bb > b:
                 qs = np.pad(qs, ((0, bb - b), (0, 0)))
+            t0 = time.perf_counter()
+            # per-request queue waits started on the caller thread and
+            # end here, on the worker — the cross-thread recording form
+            for r in batch:
+                tracer.record_span("queue", r.t_enqueue, t_first,
+                                   trace_id=r.trace_id, cell=self.name)
+            tracer.record_span("batch", t_first, t0,
+                               trace_id=batch[0].trace_id,
+                               cell=self.name, size=b, bucket=bb)
             try:
-                result = self._dispatch(qs)
+                with tracer.span("dispatch",
+                                 trace_id=batch[0].trace_id,
+                                 cell=self.name, size=b, bucket=bb):
+                    result = self._dispatch(qs)
             except Exception as e:
                 # fail fast, keep the worker alive: every request in the
                 # batch gets a CellFailure sentinel so a router can
                 # re-dispatch it immediately instead of timing out
+                self._c_failures.inc()
                 with self._stats_lock:
                     self._failure = e
                 fail = CellFailure(cell=self.name, error=e)
@@ -371,24 +442,26 @@ class ServingCell:
                 continue
             t1 = time.perf_counter()
             d, i = result
-            served = []
-            for j, r in enumerate(batch):
-                if r.cancelled.is_set():
-                    continue          # timed out mid-compute: drop
-                r.future.put((np.asarray(d[j]), np.asarray(i[j])))
-                served.append(r)
+            served = [(j, r) for j, r in enumerate(batch)
+                      if not r.cancelled.is_set()]   # timed out: drop
+            # telemetry BEFORE resolving futures: a caller that read its
+            # result and immediately calls stats() must see this batch
+            for _, r in served:
+                self._h_latency.observe((t1 - r.t_enqueue) * 1e3)
+                self._h_queue.observe((t_first - r.t_enqueue) * 1e3)
+            self._h_batch.observe((t0 - t_first) * 1e3)
+            self._h_dispatch.observe((t1 - t0) * 1e3)
+            self._h_bsize.observe(b)
             with self._stats_lock:
-                for r in served:
-                    self.latencies.append(t1 - r.t_enqueue)
-                    self.queue_waits.append(t0 - r.t_enqueue)
-                self.batch_sizes.append(b)
+                self._recent_batches.append(b)
+            for j, r in served:
+                r.future.put((np.asarray(d[j]), np.asarray(i[j])))
             if self.estimator is not None and served:
                 try:
                     top = np.asarray(i)[:b, 0]
                     self.estimator.observe(top)
                 except Exception:       # telemetry must never kill serving
-                    with self._stats_lock:
-                        self.estimator_errors += 1
+                    self._c_est_err.inc()
 
     def _dispatch(self, qs):
         if self.hedge_fn is None:
@@ -404,8 +477,8 @@ class ServingCell:
         t = threading.Thread(target=primary, daemon=True)
         t.start()
         if not done.wait(self.hedge_ms / 1e3):
-            with self._stats_lock:
-                self.hedges += 1
+            self._c_hedges.inc()
+            get_tracer().instant("hedge-fired", cell=self.name)
             out = self.hedge_fn(qs)      # replica answers the hedge
             holder.setdefault("out", out)
             done.set()
@@ -413,17 +486,31 @@ class ServingCell:
         return holder["out"]
 
     # ------------------------------------------------------------------
+    def _stage_stats(self) -> dict:
+        """Per-stage latency summaries; kernel/rerank come from the
+        backend's own registry when it exposes one."""
+        stages = {
+            "queue": self._h_queue.stats_dict(),
+            "batch": self._h_batch.stats_dict(),
+            "dispatch": self._h_dispatch.stats_dict(),
+        }
+        bm = getattr(self.search_fn, "metrics", None)
+        if isinstance(bm, MetricsRegistry):
+            for hname, stage in (("kernel_ms", "kernel"),
+                                 ("rerank_ms", "rerank")):
+                h = bm.get(hname)
+                if h is not None and h.count:
+                    stages[stage] = h.stats_dict()
+        return stages
+
     def stats(self) -> EngineStats:
+        lat = self._h_latency
+        hedges = self._c_hedges.value
+        cancelled = self._c_cancelled.value
+        rb = self._c_repub.value
+        rfb = self._c_repub_full.value
         with self._stats_lock:
-            # snapshot under the lock so a stats() racing the batch
-            # worker never sees a latency without its queue_wait twin
-            a = np.asarray(self.latencies) * 1e3
-            qw = np.asarray(self.queue_waits) * 1e3
-            batch_sizes = self.batch_sizes[-100:]
-            hedges = self.hedges
-            cancelled = self.n_cancelled
-            rb = self.republished_bytes
-            rfb = self.republish_full_bytes
+            batch_sizes = list(self._recent_batches)
         ch = cm = 0
         drift = 0.0
         if self.cache is not None:
@@ -431,18 +518,20 @@ class ServingCell:
         if self.estimator is not None:
             drift = float(self.estimator.drift()["tv"])
         frac = rb / rfb if rfb else 0.0
-        if a.size == 0:
+        stages = self._stage_stats()
+        if lat.count == 0:
             return EngineStats(0, 0, 0, 0, 0, 0, [], hedges,
                                cache_hits=ch, cache_misses=cm, drift=drift,
                                republished_bytes=rb,
-                               delta_fraction=frac, cancelled=cancelled)
+                               delta_fraction=frac, cancelled=cancelled,
+                               stages=stages)
         return EngineStats(
-            n=a.size,
-            p50_ms=float(np.percentile(a, 50)),
-            p90_ms=float(np.percentile(a, 90)),
-            p99_ms=float(np.percentile(a, 99)),
-            mean_ms=float(a.mean()),
-            queue_ms=float(qw.mean()),
+            n=lat.count,
+            p50_ms=lat.quantile(0.5),
+            p90_ms=lat.quantile(0.9),
+            p99_ms=lat.quantile(0.99),
+            mean_ms=lat.mean(),
+            queue_ms=self._h_queue.mean(),
             batch_sizes=batch_sizes,
             hedges=hedges,
             cache_hits=ch,
@@ -451,4 +540,5 @@ class ServingCell:
             republished_bytes=rb,
             delta_fraction=frac,
             cancelled=cancelled,
+            stages=stages,
         )

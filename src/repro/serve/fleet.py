@@ -52,6 +52,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.analysis.annotations import guarded_by
+from repro.obs.metrics import Histogram, MetricsRegistry, merge_snapshots
+from repro.obs.trace import get_tracer
 from repro.serve.cell import CellFailure, EngineStats, ServingCell
 
 __all__ = ["CellRouter", "FleetOverloadError", "build_fleet", "query_key"]
@@ -122,12 +124,36 @@ class CellRouter:
         # revive()'s replay together with the last published target
         self._missed: dict[str, list] = {}
         self._last_publish: Optional[tuple] = None
-        self.shed = 0
-        self.rerouted = 0
-        self.hedge_cell = 0
-        self.n_cancelled = 0
-        self.n_resyncs = 0
-        self.latencies: list[float] = []
+        # routing telemetry lives in a fixed-footprint registry: the
+        # route-latency histogram replaces the old unbounded list
+        self.metrics = MetricsRegistry()
+        self._h_route = self.metrics.histogram("route_ms")
+        self._c_shed = self.metrics.counter("shed")
+        self._c_rerouted = self.metrics.counter("rerouted")
+        self._c_hedge_cell = self.metrics.counter("hedge_cell")
+        self._c_cancelled = self.metrics.counter("cancelled")
+        self._c_resyncs = self.metrics.counter("resyncs")
+
+    # -- registry-backed compatibility counters ------------------------
+    @property
+    def shed(self) -> int:
+        return self._c_shed.value
+
+    @property
+    def rerouted(self) -> int:
+        return self._c_rerouted.value
+
+    @property
+    def hedge_cell(self) -> int:
+        return self._c_hedge_cell.value
+
+    @property
+    def n_cancelled(self) -> int:
+        return self._c_cancelled.value
+
+    @property
+    def n_resyncs(self) -> int:
+        return self._c_resyncs.value
 
     # -- routing policy (all under self._lock) -------------------------
     @guarded_by("_lock")
@@ -152,16 +178,16 @@ class CellRouter:
         spill to least-loaded, shed when saturated."""
         open_cells = self._routable()
         if not open_cells:
-            self.shed += 1
+            self._c_shed.inc()
             raise FleetOverloadError("no live cells in the fleet")
         pref = self._rendezvous(key, open_cells)
         if pref.depth() < self.max_queue_depth:
             return pref
         alt = min(open_cells, key=lambda c: c.depth())
         if alt.depth() < self.max_queue_depth:
-            self.rerouted += 1
+            self._c_rerouted.inc()
             return alt
-        self.shed += 1
+        self._c_shed.inc()
         raise FleetOverloadError(
             f"all {len(open_cells)} live cells at "
             f"max_queue_depth={self.max_queue_depth}")
@@ -227,13 +253,14 @@ class CellRouter:
 
                 manifest = merge_manifests(missed)
             try:
-                stats = cell.apply_updates(target, delta=manifest, **kw)
+                with get_tracer().span("maint.revive", cell=name,
+                                       missed=len(missed)):
+                    stats = cell.apply_updates(target, delta=manifest, **kw)
             except BaseException:
                 with self._lock:     # keep the record for a retry
                     self._missed[name] = missed + self._missed.get(name, [])
                 raise
-            with self._lock:
-                self.n_resyncs += 1
+            self._c_resyncs.inc()
         with self._lock:
             self._down.pop(name, None)
         return stats
@@ -247,94 +274,125 @@ class CellRouter:
         seconds (all in-flight copies are cancelled), and
         :class:`RuntimeError` when every dispatched cell failed and no
         open cell remains to re-dispatch to.
+
+        The whole routed request runs under a ``route`` span whose
+        ``trace_id`` is threaded through every cell dispatch, so the
+        per-request ``queue``/``batch``/``dispatch``/``kernel`` spans
+        recorded by the worker threads key back to it; the span's
+        ``outcome`` attribute ends as ``ok``/``hedged``/``rerouted``/
+        ``shed``/``cancelled``.
         """
+        tracer = get_tracer()
         key = query_key(query)
-        with self._lock:
-            primary = self._admit(key)
-        # per-cell exact-match cache, checked against the affinity
-        # target: recurring head queries short-circuit here, and the
-        # generation token makes a post-swap offer of a pre-swap result
-        # impossible (see FrequencyAdmissionCache)
-        ckey = cgen = None
-        if primary.cache is not None:
-            ckey = primary.cache.key_for(query)
-            cgen = primary.cache.generation
-            hit = primary.cache.get(ckey)
-            if hit is not None:
-                if primary.estimator is not None:
-                    # hits are head traffic: the shared drift estimator
-                    # must see them (same contract as ServingCell.search)
-                    try:
-                        primary.estimator.observe(np.asarray(hit[1])[:1])
-                    except Exception:
-                        pass
-                return hit
-        t0 = time.perf_counter()
-        deadline = t0 + timeout
-        hedge_at = (t0 + self.hedge_ms / 1e3
-                    if self.hedge_ms is not None else None)
-        cancelled = threading.Event()
-        fut = primary.submit(query, cancelled=cancelled)
-        tried = {primary.name}
-        outstanding = 1
-        last_error: Optional[CellFailure] = None
-        while True:
-            now = time.perf_counter()
-            if now >= deadline:
-                # abandon every in-flight copy: the cell workers drop
-                # cancelled requests instead of computing them
-                cancelled.set()
-                with self._lock:
-                    self.n_cancelled += 1
-                raise TimeoutError(
-                    f"fleet search timed out after {timeout}s "
-                    f"(tried cells: {sorted(tried)})")
-            wait_until = deadline
-            if hedge_at is not None and hedge_at < wait_until:
-                wait_until = hedge_at
+        with tracer.span("route") as rsp:
+            trace_id = rsp.trace_id
             try:
-                out = fut.get(timeout=max(wait_until - now, 1e-4))
-            except queue.Empty:
-                if hedge_at is not None and \
-                        time.perf_counter() >= hedge_at:
-                    hedge_at = None     # hedge fires at most once
+                with tracer.span("admission"):
                     with self._lock:
-                        alt = self._pick_open(key, exclude=tried)
+                        primary = self._admit(key)
+            except FleetOverloadError:
+                rsp.set(outcome="shed")
+                raise
+            rsp.set(cell=primary.name)
+            # per-cell exact-match cache, checked against the affinity
+            # target: recurring head queries short-circuit here, and the
+            # generation token makes a post-swap offer of a pre-swap
+            # result impossible (see FrequencyAdmissionCache)
+            ckey = cgen = None
+            if primary.cache is not None:
+                ckey = primary.cache.key_for(query)
+                cgen = primary.cache.generation
+                hit = primary.cache.get(ckey)
+                if hit is not None:
+                    if primary.estimator is not None:
+                        # hits are head traffic: the shared drift
+                        # estimator must see them (same contract as
+                        # ServingCell.search)
+                        try:
+                            primary.estimator.observe(
+                                np.asarray(hit[1])[:1])
+                        except Exception:
+                            pass
+                    rsp.set(outcome="cache-hit")
+                    return hit
+            t0 = time.perf_counter()
+            deadline = t0 + timeout
+            hedge_at = (t0 + self.hedge_ms / 1e3
+                        if self.hedge_ms is not None else None)
+            cancelled = threading.Event()
+            fut = primary.submit(query, cancelled=cancelled,
+                                 trace_id=trace_id)
+            tried = {primary.name}
+            outstanding = 1
+            hedged = rerouted = False
+            last_error: Optional[CellFailure] = None
+            while True:
+                now = time.perf_counter()
+                if now >= deadline:
+                    # abandon every in-flight copy: the cell workers
+                    # drop cancelled requests instead of computing them
+                    cancelled.set()
+                    self._c_cancelled.inc()
+                    rsp.set(outcome="cancelled")
+                    tracer.instant("cancel", trace_id=trace_id)
+                    raise TimeoutError(
+                        f"fleet search timed out after {timeout}s "
+                        f"(tried cells: {sorted(tried)})")
+                wait_until = deadline
+                if hedge_at is not None and hedge_at < wait_until:
+                    wait_until = hedge_at
+                try:
+                    out = fut.get(timeout=max(wait_until - now, 1e-4))
+                except queue.Empty:
+                    if hedge_at is not None and \
+                            time.perf_counter() >= hedge_at:
+                        hedge_at = None     # hedge fires at most once
+                        with self._lock:
+                            alt = self._pick_open(key, exclude=tried)
                         if alt is not None:
-                            self.hedge_cell += 1
+                            self._c_hedge_cell.inc()
+                            hedged = True
+                            tracer.instant("hedge-cell", cell=alt.name,
+                                           trace_id=trace_id)
+                            # same future, same cancelled flag: first
+                            # responder wins, the loser is dropped by
+                            # its own cell's worker
+                            alt.submit(query, future=fut,
+                                       cancelled=cancelled,
+                                       trace_id=trace_id)
+                            tried.add(alt.name)
+                            outstanding += 1
+                    continue
+                if isinstance(out, CellFailure):
+                    outstanding -= 1
+                    last_error = out
+                    with self._lock:
+                        self._mark_down(out.cell, out.error)
+                        alt = self._pick_open(key, exclude=tried)
                     if alt is not None:
-                        # same future, same cancelled flag: first
-                        # responder wins, the loser is dropped by its
-                        # own cell's worker
-                        alt.submit(query, future=fut, cancelled=cancelled)
+                        self._c_rerouted.inc()
+                        rerouted = True
+                        tracer.instant("reroute", failed=out.cell,
+                                       cell=alt.name, trace_id=trace_id)
+                        alt.submit(query, future=fut, cancelled=cancelled,
+                                   trace_id=trace_id)
                         tried.add(alt.name)
                         outstanding += 1
-                continue
-            if isinstance(out, CellFailure):
-                outstanding -= 1
-                last_error = out
-                with self._lock:
-                    self._mark_down(out.cell, out.error)
-                    alt = self._pick_open(key, exclude=tried)
-                    if alt is not None:
-                        self.rerouted += 1
-                if alt is not None:
-                    alt.submit(query, future=fut, cancelled=cancelled)
-                    tried.add(alt.name)
-                    outstanding += 1
-                elif outstanding <= 0:
-                    raise RuntimeError(
-                        f"every dispatched cell failed "
-                        f"(tried: {sorted(tried)})") from last_error.error
-                continue
-            # success: cancel the hedge loser (if any) and record the
-            # end-to-end routed latency
-            cancelled.set()
-            with self._lock:
-                self.latencies.append(time.perf_counter() - t0)
-            if primary.cache is not None:
-                primary.cache.offer(ckey, out, generation=cgen)
-            return out
+                    elif outstanding <= 0:
+                        raise RuntimeError(
+                            f"every dispatched cell failed "
+                            f"(tried: {sorted(tried)})"
+                        ) from last_error.error
+                    continue
+                # success: cancel the hedge loser (if any) and record
+                # the end-to-end routed latency
+                cancelled.set()
+                self._h_route.observe((time.perf_counter() - t0) * 1e3)
+                rsp.set(outcome=("hedged" if hedged
+                                 else "rerouted" if rerouted else "ok"))
+                if primary.cache is not None:
+                    primary.cache.offer(ckey, out, generation=cgen)
+                return out
 
     # -- leader fan-out ------------------------------------------------
     def apply_updates(self, target, *, delta="auto",
@@ -359,34 +417,42 @@ class CellRouter:
         the aggregate mode is ``"full"`` if any cell fell back to a
         full re-place, else ``"delta"`` if any shipped a delta.
         """
+        tracer = get_tracer()
         if delta == "auto":
             delta = (target.pop_delta()
                      if hasattr(target, "pop_delta") else None)
         per_cell: dict[str, dict] = {}
         with self._lock:
             self._last_publish = (target, dict(kw))
-        for cell in self.cells:
-            with self._lock:
-                skip = cell.name in self._down
-                if skip:
-                    # remember what this down cell missed so revive()
-                    # can replay it before the cell rejoins
-                    self._missed.setdefault(cell.name, []).append(delta)
-                else:
-                    self._draining.add(cell.name)
-            if skip:
-                per_cell[cell.name] = {"mode": "skipped", "bytes": 0,
-                                       "full_bytes": 0, "reason": "down"}
-                continue
-            try:
-                t_end = time.perf_counter() + drain_timeout_s
-                while cell.depth() > 0 and time.perf_counter() < t_end:
-                    time.sleep(1e-3)
-                st = cell.apply_updates(target, delta=delta, **kw)
-                per_cell[cell.name] = st if isinstance(st, dict) else {}
-            finally:
+        with tracer.span("maint.fanout", cells=len(self.cells),
+                         manifest=delta is not None):
+            for cell in self.cells:
                 with self._lock:
-                    self._draining.discard(cell.name)
+                    skip = cell.name in self._down
+                    if skip:
+                        # remember what this down cell missed so
+                        # revive() can replay it before the cell rejoins
+                        self._missed.setdefault(cell.name,
+                                                []).append(delta)
+                    else:
+                        self._draining.add(cell.name)
+                if skip:
+                    per_cell[cell.name] = {
+                        "mode": "skipped", "bytes": 0,
+                        "full_bytes": 0, "reason": "down"}
+                    continue
+                try:
+                    with tracer.span("maint.drain", cell=cell.name):
+                        t_end = time.perf_counter() + drain_timeout_s
+                        while (cell.depth() > 0
+                               and time.perf_counter() < t_end):
+                            time.sleep(1e-3)
+                    # cell.apply_updates emits its own "republish" span
+                    st = cell.apply_updates(target, delta=delta, **kw)
+                    per_cell[cell.name] = st if isinstance(st, dict) else {}
+                finally:
+                    with self._lock:
+                        self._draining.discard(cell.name)
         modes = {s.get("mode") for s in per_cell.values()}
         mode = ("full" if "full" in modes
                 else "delta" if "delta" in modes
@@ -400,17 +466,63 @@ class CellRouter:
         }
 
     # -- telemetry -----------------------------------------------------
+    def registries(self) -> dict:
+        """Prefix -> :class:`MetricsRegistry` for every component in the
+        fleet: the router's own, each cell's, and each cell backend's
+        (when it exposes one) — the unit :meth:`metrics_snapshot` and
+        :meth:`exposition` aggregate over."""
+        parts = {"router.": self.metrics}
+        for c in self.cells:
+            parts[f"{c.name}."] = c.metrics
+            bm = getattr(c.search_fn, "metrics", None)
+            if isinstance(bm, MetricsRegistry):
+                parts[f"{c.name}.backend."] = bm
+        return parts
+
+    def metrics_snapshot(self) -> dict:
+        """One JSON-safe snapshot over every registry in the fleet."""
+        return merge_snapshots(self.registries())
+
+    def exposition(self) -> str:
+        """Prometheus text exposition over every registry in the fleet."""
+        return "".join(reg.exposition(prefix=prefix)
+                       for prefix, reg in sorted(self.registries().items()))
+
+    def _fleet_stages(self, per_cell: dict) -> dict:
+        """Fleet-level per-stage summaries: identically-bucketed stage
+        histograms merged across cells, plus the router's route span."""
+        stages: dict = {}
+        for stage, source, hname in (
+                ("queue", "cell", "queue_ms"),
+                ("batch", "cell", "batch_ms"),
+                ("dispatch", "cell", "dispatch_ms"),
+                ("kernel", "backend", "kernel_ms"),
+                ("rerank", "backend", "rerank_ms")):
+            hists = []
+            for c in self.cells:
+                reg = (c.metrics if source == "cell"
+                       else getattr(c.search_fn, "metrics", None))
+                if not isinstance(reg, MetricsRegistry):
+                    continue
+                h = reg.get(hname)
+                if h is not None and h.count:
+                    hists.append(h)
+            if hists:
+                stages[stage] = Histogram.merged(hname, hists).stats_dict()
+        if self._h_route.count:
+            stages["route"] = self._h_route.stats_dict()
+        return stages
+
     def stats(self) -> EngineStats:
         """Fleet-level :class:`EngineStats`: percentiles over routed
         end-to-end latencies, routing counters, and a per-cell
         breakdown in ``.cells``."""
-        with self._lock:
-            a = np.asarray(self.latencies) * 1e3
-            shed = self.shed
-            rerouted = self.rerouted
-            hedge_cell = self.hedge_cell
-            cancelled = self.n_cancelled
-            resyncs = self.n_resyncs
+        a = self._h_route
+        shed = self._c_shed.value
+        rerouted = self._c_rerouted.value
+        hedge_cell = self._c_hedge_cell.value
+        cancelled = self._c_cancelled.value
+        resyncs = self._c_resyncs.value
         per_cell = {c.name: c.stats() for c in self.cells}
         vals = list(per_cell.values())
         hedges = sum(s.hedges for s in vals)
@@ -436,15 +548,15 @@ class CellRouter:
                       republished_bytes=rb, delta_fraction=frac,
                       cancelled=cancelled, shed=shed, rerouted=rerouted,
                       hedge_cell=hedge_cell, resyncs=resyncs,
-                      cells=per_cell)
-        if a.size == 0:
+                      cells=per_cell, stages=self._fleet_stages(per_cell))
+        if a.count == 0:
             return EngineStats(0, 0, 0, 0, 0, queue_ms, **common)
         return EngineStats(
-            n=a.size,
-            p50_ms=float(np.percentile(a, 50)),
-            p90_ms=float(np.percentile(a, 90)),
-            p99_ms=float(np.percentile(a, 99)),
-            mean_ms=float(a.mean()),
+            n=a.count,
+            p50_ms=a.quantile(0.5),
+            p90_ms=a.quantile(0.9),
+            p99_ms=a.quantile(0.99),
+            mean_ms=a.mean(),
             queue_ms=queue_ms,
             **common,
         )

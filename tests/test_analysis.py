@@ -345,6 +345,37 @@ class TestLockDiscipline:
         """)
         assert active == []
 
+    def test_obs_instruments_exempt_from_lock_discipline(self, tmp_path):
+        # attrs initialized from a repro.obs constructor in __init__ are
+        # internally locked: writes to them mixed under/outside the
+        # designated lock raise no finding (and infer no guard), while a
+        # plain list in the same class keeps the full discipline — no
+        # `# repro: allow` waiver involved
+        active, _ = lint(tmp_path, """
+            import threading
+            from repro.obs.metrics import MetricsRegistry, Histogram
+
+            class Engine:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.metrics = MetricsRegistry()
+                    self._h = self.metrics.histogram("latency_ms")
+                    self._c = self.metrics.counter("hits")
+                    self.samples = []
+
+                def locked_path(self):
+                    with self._lock:
+                        self._h = Histogram("latency_ms")
+                        self.samples.append(1)
+
+                def unlocked_path(self):
+                    self._h = Histogram("latency_ms")
+                    self._c = self.metrics.counter("hits")
+                    self.samples.append(2)
+        """)
+        assert rules_of(active) == ["unguarded-write"]
+        assert "self.samples" in active[0].message
+
 
 # ---------------------------------------------------------------------------
 # suppression hygiene

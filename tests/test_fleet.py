@@ -560,8 +560,7 @@ def test_fleet_stats_and_lat_summary_breakdown():
         assert set(out["cells"]) == {"cell0", "cell1"}
         assert all("p99_ms" in v for v in out["cells"].values())
         # zero-valued routing counters stay out of the row; force one in
-        with router._lock:
-            router.rerouted += 1
+        router.metrics.counter("rerouted").inc()
         out2 = lat_summary(ts, stats=router.stats())
         assert out2["rerouted"] == 1 and "shed" not in out2
     finally:
