@@ -38,7 +38,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,table1,fig2d,fig3,sharded "
                          "(alias: fig4),updates,adaptive,delta,fig8,"
-                         "roofline")
+                         "fig9,roofline")
     ap.add_argument("--ci", action="store_true",
                     help="CI-sized configs: tiny corpora/shard counts so "
                          "the fast job can persist BENCH_*.json artifacts")
@@ -107,6 +107,18 @@ def main() -> None:
         _figure("fig8", {"full": args.full, "n": n,
                          "fleet_sizes": list(sizes)},
                 lambda: fig8_fleet.run(n=n, fleet_sizes=sizes))
+    if want("fig9"):
+        from benchmarks import fig9_filtered
+
+        if args.ci:
+            n, nq = 4096, 16
+        elif args.full:
+            n, nq = 100_000, 64
+        else:
+            n, nq = 20_000, 64
+        _figure("fig9", {"full": args.full, "ci": args.ci,
+                         "n": n, "nq": nq},
+                lambda: fig9_filtered.run(n=n, nq=nq))
     if want("roofline"):
         from benchmarks import roofline
 

@@ -74,13 +74,20 @@ class FrequencyAdmissionCache:
 
     # ------------------------------------------------------------------
     @staticmethod
-    def key_for(query: np.ndarray) -> bytes:
-        """Stable key over the query's bytes, dtype and shape."""
+    def key_for(query: np.ndarray, extra: bytes = b"") -> bytes:
+        """Stable key over the query's bytes, dtype and shape.
+
+        ``extra`` folds request options that change the answer — filter
+        digest, search mode, hybrid alpha — into the key, so a filtered
+        result can never satisfy an unfiltered request (or vice versa)
+        for the same query vector."""
         q = np.ascontiguousarray(query)
         h = hashlib.blake2b(digest_size=16)
         h.update(str(q.dtype).encode())
         h.update(str(q.shape).encode())
         h.update(q.tobytes())
+        if extra:
+            h.update(extra)
         return h.digest()
 
     @staticmethod

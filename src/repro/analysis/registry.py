@@ -281,6 +281,90 @@ def _fused_sharded_search() -> Plan:
         warmup_steps=2)
 
 
+@register_entry_point("filtered-sharded-search")
+def _filtered_sharded_search() -> Plan:
+    """Filter + mode surface: predicates compile to mask *operands*
+    (brute valid-AND, ivf/forest bucket-slot -1s) and hybrid alpha is a
+    (1, 1) operand, so sweeping filters, modes, and alphas across delta
+    windows must not mint one new executable beyond the three per-mode
+    callables jitted at construction."""
+    import numpy as np
+
+    from repro.core.lexical import build_lexical_slabs, query_operands
+    from repro.core.metadata import FilterSpec, MetadataTable
+    from repro.distributed.backend import ShardedSearchBackend
+
+    rng = np.random.default_rng(6)
+    db = _corpus(rng, 64)
+    meta = MetadataTable(
+        {"cat": rng.integers(0, 4, 64).astype(np.int32)})
+    docs = [list(rng.integers(0, 32, 5)) for _ in range(64)]
+    slabs = build_lexical_slabs(docs, 32)
+    beb = ShardedSearchBackend(
+        _mesh1(), db, kind="brute", k=5, axes=("data",), headroom=2.0,
+        metadata=meta, lexical=slabs)
+    _, idx = _index(rng, "brute")          # bucketed flat bottom -> IVF
+    imeta = MetadataTable(
+        {"cat": rng.integers(0, 4, _N).astype(np.int32)})
+    bei = ShardedSearchBackend(
+        _mesh1(), idx, k=5, axes=("data",), nprobe_local=_K,
+        headroom=2.0, metadata=imeta)
+    q = _corpus(rng, 4)
+    qt, qw = query_operands([docs[0], docs[1], docs[2], docs[3]], slabs)
+    state = {"db": db, "round": 0}
+
+    def sweep():
+        # fresh predicates every round: each compiles to a new mask
+        # operand and must hit the same executables
+        r = state["round"]
+        state["round"] += 1
+        specs = (FilterSpec.eq("cat", r % 4),
+                 FilterSpec.range("cat", 0, 1 + r % 3),
+                 FilterSpec.isin("cat", (r % 4, (r + 1) % 4)))
+        for fs in specs:
+            beb(q, filter_spec=fs)
+            bei(q, filter_spec=fs)
+        beb(q, mode="lexical", q_terms=qt, q_weights=qw,
+            filter_spec=specs[0])
+        for alpha in (0.1 + 0.2 * r, 0.9):
+            beb(q, mode="hybrid", alpha=alpha, q_terms=qt, q_weights=qw,
+                filter_spec=specs[1])
+
+    def mutate_and_sweep():
+        # grow the brute corpus (+slabs +metadata) through a delta
+        # window, then sweep filters over the post-delta state
+        from repro.core.delta import DeltaManifest
+
+        cur = state["db"]
+        n0, n1 = cur.shape[0], cur.shape[0] + 4
+        state["db"] = np.concatenate([cur, _corpus(rng, 4)])
+        slabs.append_docs([list(rng.integers(0, 32, 5))
+                           for _ in range(4)])
+        meta.append_rows(
+            {"cat": rng.integers(0, 4, 4).astype(np.int32)}, 4)
+        man = DeltaManifest(
+            base_version=0, version=1, base_n=n0, n=n1,
+            dirty_buckets=np.zeros(0, np.int64),
+            tombstones=np.asarray([1, 3], np.int64),
+            lsh_rows_appended=0, full=False)
+        beb.apply_updates(state["db"], delta=man)
+        _localized_mutation(rng, idx)
+        imeta.append_rows(
+            {"cat": rng.integers(0, 4, 3).astype(np.int32)}, 3)
+        bei.apply_updates(idx, delta=idx.pop_delta())
+        sweep()
+
+    def cache_size():
+        sizes = [beb.jit_cache_size(), bei.jit_cache_size()]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+    return Plan(
+        steps=[("warmup-filter-mode-sweep", sweep),
+               ("filter-sweep-new-predicates", sweep),
+               ("delta-republish-filter-sweep", mutate_and_sweep)],
+        cache_size=cache_size)
+
+
 @register_entry_point("fleet-router-search")
 def _fleet_router_search() -> Plan:
     import numpy as np

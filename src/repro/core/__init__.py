@@ -3,11 +3,17 @@
 # the mesh-sharded datacenter extension (distributed.py).
 from repro.core.delta import DeltaManifest
 from repro.core.index import SearchIndex, auto_build_index, build_index
+from repro.core.lexical import (
+    LexicalSlabs,
+    build_lexical_slabs,
+    query_operands,
+)
 from repro.core.likelihood import (
     beta_for_unbalance,
     simulate_beta_likelihood,
     unbalance_score,
 )
+from repro.core.metadata import FilterSpec, MetadataTable
 from repro.core.protocol import IndexSpec, select_index_spec
 from repro.core.tree import build_kd_tree, build_qlbt, build_rp_tree, tree_search
 from repro.core.two_level import TwoLevelConfig, TwoLevelIndex, build_two_level
@@ -15,7 +21,9 @@ from repro.core.two_level import TwoLevelConfig, TwoLevelIndex, build_two_level
 __all__ = [
     "DeltaManifest",
     "SearchIndex", "auto_build_index", "build_index",
+    "LexicalSlabs", "build_lexical_slabs", "query_operands",
     "beta_for_unbalance", "simulate_beta_likelihood", "unbalance_score",
+    "FilterSpec", "MetadataTable",
     "IndexSpec", "select_index_spec",
     "build_kd_tree", "build_qlbt", "build_rp_tree", "tree_search",
     "TwoLevelConfig", "TwoLevelIndex", "build_two_level",

@@ -36,6 +36,25 @@ class SearchIndex:
     mutation_version: int = 0
     delta_log: Optional[DeltaLog] = dataclasses.field(
         default=None, repr=False)
+    # single-tree metadata sidecar; two-level indexes own theirs (the
+    # ``metadata`` property routes either way)
+    _metadata: Optional[object] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def metadata(self):
+        """Row-aligned :class:`repro.core.metadata.MetadataTable` (or
+        None) — the table ``FilterSpec`` predicates resolve against."""
+        if self.two_level is not None:
+            return self.two_level.metadata
+        return self._metadata
+
+    @property
+    def lexical(self):
+        """Row-aligned :class:`repro.core.lexical.LexicalSlabs` (or None)
+        — the BM25 postings the lexical/hybrid modes scan."""
+        if self.two_level is not None:
+            return self.two_level.lexical
+        return None
 
     def search(
         self,
@@ -137,6 +156,13 @@ class SearchIndex:
         ids = np.arange(start, start + new_vecs.shape[0], dtype=np.int32)
         self.db = np.concatenate([self.db, new_vecs], axis=0)
         self.alive = np.concatenate([self.alive, np.ones(ids.size, bool)])
+        meta_rows = kw.pop("metadata", None)
+        if self._metadata is not None:
+            self._metadata.append_rows(meta_rows or {}, ids.size)
+        elif meta_rows:
+            raise ValueError(
+                "index has no metadata table; build with metadata= to "
+                "accept per-entity metadata on add_entities")
         if self.spec.kind == "qlbt" and self.p is not None:
             p_new = kw.get("p")
             if p_new is None:
@@ -228,20 +254,29 @@ def build_index(
     *,
     p: Optional[np.ndarray] = None,
     partition_features: Optional[np.ndarray] = None,
+    metadata=None,
+    lexical=None,
     seed: int = 0,
 ) -> SearchIndex:
     db = np.ascontiguousarray(db, dtype=np.float32)
+    if metadata is not None and metadata.n_rows != db.shape[0]:
+        raise ValueError(
+            f"metadata table has {metadata.n_rows} rows for a "
+            f"{db.shape[0]}-row db")
     if spec.kind == "qlbt":
         if p is None:
             raise ValueError("QLBT requires a query-likelihood vector p")
         t = build_qlbt(db, p, seed=seed)
         return SearchIndex(spec=spec, db=db, tree=t,
-                           p=np.asarray(p, np.float64))
+                           p=np.asarray(p, np.float64), _metadata=metadata)
     if spec.kind == "tree":
-        return SearchIndex(spec=spec, db=db, tree=build_rp_tree(db, seed=seed))
+        return SearchIndex(spec=spec, db=db,
+                           tree=build_rp_tree(db, seed=seed),
+                           _metadata=metadata)
     if spec.kind == "two_level":
         tl = build_two_level(
-            db, spec.two_level, p=p, partition_features=partition_features
+            db, spec.two_level, p=p, partition_features=partition_features,
+            metadata=metadata, lexical=lexical,
         )
         return SearchIndex(spec=spec, db=db, two_level=tl)
     raise ValueError(f"unknown index kind {spec.kind!r}")

@@ -1,0 +1,139 @@
+"""Fixed-shape BM25 postings slabs + the pure-numpy lexical oracle.
+
+The hybrid serving path (``docs/filtering.md``) fuses a BM25-ish
+lexical score with the semantic L2 distance.  Edge constraints rule out
+a classic inverted index (pointer-chasing, variable-length lists), so
+documents carry their term data as **fixed-shape slabs**, the same
+layout discipline as every other operand in the repo:
+
+* ``terms``  — ``(N, S)`` int32, the up-to-``S`` highest-tf term ids of
+  each document, ``-1``-padded.  Rows are append-only and aligned with
+  the corpus (row i describes entity i).
+* ``tf_sat`` — ``(N, S)`` f32, the *saturated* term-frequency factor
+  ``tf * (k1 + 1) / (tf + k1_norm_d)`` with
+  ``k1_norm_d = k1 * (1 - b + b * len_d / avg_len)`` precomputed on the
+  host.  Kernels then only match + weight + sum — no division on the
+  scan path.
+
+Scores follow the BM25 shape ``sum_t idf_t * sat(tf_{t,d})`` over the
+query's unique terms; the *ranking distance* is ``-score`` so lower is
+better and the ``(inf, -1)`` sentinel contract carries over unchanged.
+
+``idf`` and ``avg_len`` are frozen at build time: appended documents are
+scored under the corpus statistics of the last build (re-deriving them
+per append would silently re-rank the whole corpus between deltas).
+``build_lexical_slabs`` on the current docs refreshes them — the same
+rebuild-vs-delta trade every other structure here makes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["LexicalSlabs", "build_lexical_slabs", "query_operands",
+           "bm25_dists"]
+
+
+@dataclasses.dataclass
+class LexicalSlabs:
+    terms: np.ndarray        # (N, S) int32, -1 padded
+    tf_sat: np.ndarray       # (N, S) f32, saturated tf factor
+    idf: np.ndarray          # (V,) f32, frozen at build
+    k1: float
+    b: float
+    avg_len: float           # frozen at build
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.terms.shape[0])
+
+    @property
+    def slots(self) -> int:
+        return int(self.terms.shape[1])
+
+    @property
+    def n_vocab(self) -> int:
+        return int(self.idf.shape[0])
+
+    def footprint_bytes(self) -> int:
+        return self.terms.nbytes + self.tf_sat.nbytes + self.idf.nbytes
+
+    def append_docs(self, docs) -> None:
+        """Append one slab row per document (term-id sequences), scored
+        under the *frozen* idf / avg_len (see module docstring)."""
+        t, s = _slab_rows(docs, self.slots, self.k1, self.b, self.avg_len)
+        self.terms = np.concatenate([self.terms, t])
+        self.tf_sat = np.concatenate([self.tf_sat, s])
+
+
+def _slab_rows(docs, slots: int, k1: float, b: float, avg_len: float):
+    n = len(docs)
+    terms = np.full((n, slots), -1, dtype=np.int32)
+    tf_sat = np.zeros((n, slots), dtype=np.float32)
+    for i, doc in enumerate(docs):
+        ids, tf = np.unique(np.asarray(doc, dtype=np.int64),
+                            return_counts=True)
+        ids = ids[ids >= 0]
+        tf = tf[-ids.size:] if ids.size else tf[:0]
+        length = float(np.sum(tf))
+        if ids.size > slots:        # keep the highest-tf terms
+            keep = np.argsort(-tf, kind="stable")[:slots]
+            keep.sort()
+            ids, tf = ids[keep], tf[keep]
+        k1n = k1 * (1.0 - b + b * (length / max(avg_len, 1e-9)))
+        terms[i, :ids.size] = ids.astype(np.int32)
+        tf_sat[i, :ids.size] = (
+            tf * (k1 + 1.0) / (tf + k1n)).astype(np.float32)
+    return terms, tf_sat
+
+
+def build_lexical_slabs(docs, n_vocab: int, *, slots: int = 16,
+                        k1: float = 1.2, b: float = 0.75) -> LexicalSlabs:
+    """Build slabs + corpus statistics from term-id sequences."""
+    n = len(docs)
+    df = np.zeros(n_vocab, dtype=np.int64)
+    lengths = np.zeros(n, dtype=np.float64)
+    for i, doc in enumerate(docs):
+        ids = np.unique(np.asarray(doc, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < n_vocab)]
+        df[ids] += 1
+        lengths[i] = len(doc)
+    avg_len = float(lengths.mean()) if n else 1.0
+    idf = np.log(1.0 + (n - df + 0.5) / (df + 0.5)).astype(np.float32)
+    terms, tf_sat = _slab_rows(docs, slots, k1, b, avg_len)
+    return LexicalSlabs(terms=terms, tf_sat=tf_sat, idf=idf,
+                        k1=float(k1), b=float(b), avg_len=avg_len)
+
+
+def query_operands(q_docs, slabs: LexicalSlabs, *, slots: int = 8):
+    """Fixed-shape query operands: ``(B, T)`` unique term ids (-1 pad)
+    and their idf weights.  Terms beyond ``slots`` are dropped highest-
+    idf-first-kept (rarest terms carry the score)."""
+    bsz = len(q_docs)
+    qt = np.full((bsz, slots), -1, dtype=np.int32)
+    qw = np.zeros((bsz, slots), dtype=np.float32)
+    for i, doc in enumerate(q_docs):
+        ids = np.unique(np.asarray(doc, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < slabs.n_vocab)]
+        w = slabs.idf[ids]
+        if ids.size > slots:
+            keep = np.argsort(-w, kind="stable")[:slots]
+            keep.sort()
+            ids, w = ids[keep], w[keep]
+        qt[i, :ids.size] = ids.astype(np.int32)
+        qw[i, :ids.size] = w.astype(np.float32)
+    return qt, qw
+
+
+def bm25_dists(terms: np.ndarray, tf_sat: np.ndarray,
+               q_terms: np.ndarray, q_weights: np.ndarray) -> np.ndarray:
+    """Pure-numpy oracle: ``(B, N)`` ranking distances (``-score``)."""
+    bsz, tq = q_terms.shape
+    score = np.zeros((bsz, terms.shape[0]), dtype=np.float32)
+    for t in range(tq):
+        qt = q_terms[:, t]                                   # (B,)
+        m = (terms[None, :, :] == qt[:, None, None])         # (B, N, S)
+        m &= qt[:, None, None] >= 0
+        score += (m * tf_sat[None, :, :]).sum(-1) * q_weights[:, t:t + 1]
+    return -score

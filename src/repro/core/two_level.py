@@ -117,6 +117,12 @@ class TwoLevelIndex:
     mutation_version: int = 0                   # bumped per mutation batch
     delta_log: Optional[DeltaLog] = dataclasses.field(
         default=None, repr=False)
+    # ---- per-entity metadata / lexical sidecars (docs/filtering.md) ----
+    # row-aligned with db: appends grow them in lockstep, tombstones leave
+    # them in place (stable ids), so FilterSpec masks and BM25 slabs can be
+    # compiled against the same row numbering the scan returns
+    metadata: Optional[object] = dataclasses.field(default=None, repr=False)
+    lexical: Optional[object] = dataclasses.field(default=None, repr=False)
 
     # ---------------- construction helpers ----------------
     @property
@@ -204,6 +210,8 @@ class TwoLevelIndex:
         partition_features: Optional[np.ndarray] = None,
         p: Optional[np.ndarray] = None,
         refresh: bool = True,
+        metadata: Optional[dict] = None,
+        docs: Optional[list] = None,
     ) -> np.ndarray:
         """Incremental insert for every bottom level.  Returns the new
         global entity ids (db rows are append-only; deleted rows are
@@ -255,6 +263,23 @@ class TwoLevelIndex:
                 # no traffic estimate yet: assume average likelihood
                 p = np.full(m, float(np.mean(self.p)), self.p.dtype)
             self.p = np.concatenate([self.p, np.asarray(p, self.p.dtype)])
+
+        if self.metadata is not None:
+            # rows not named in ``metadata`` get the column fill (0) —
+            # appended before _place so a failed placement can't leave
+            # the table short of the db
+            self.metadata.append_rows(metadata or {}, m)
+        elif metadata:
+            raise ValueError(
+                "index has no metadata table; build with metadata= to "
+                "accept per-entity metadata on add_entities")
+        if self.lexical is not None:
+            self.lexical.append_docs(
+                docs if docs is not None else [[] for _ in range(m)])
+        elif docs is not None:
+            raise ValueError(
+                "index has no lexical slabs; build with lexical= to "
+                "accept docs on add_entities")
 
         feat_rows = (new_vecs if self.part_feats is None
                      else self.part_feats[ids])
@@ -726,8 +751,15 @@ def build_two_level(
     *,
     p: Optional[np.ndarray] = None,
     partition_features: Optional[np.ndarray] = None,
+    metadata=None,
+    lexical=None,
 ) -> TwoLevelIndex:
-    """Paper §3.2 build: partition features -> k-means -> per-level indexes."""
+    """Paper §3.2 build: partition features -> k-means -> per-level indexes.
+
+    ``metadata`` (a :class:`repro.core.metadata.MetadataTable`) and
+    ``lexical`` (a :class:`repro.core.lexical.LexicalSlabs`) are optional
+    row-aligned sidecars carried through mutations and sharded placement —
+    the filter/hybrid surface (docs/filtering.md)."""
     if config.top not in TOP_ALGOS:
         raise ValueError(f"top must be one of {TOP_ALGOS}")
     if config.bottom not in BOTTOM_ALGOS:
@@ -764,7 +796,15 @@ def build_two_level(
         dirty=np.zeros(k, dtype=bool),
         p=None if p is None else np.asarray(p, np.float64),
         part_feats=None if partition_features is None else feats,
+        metadata=metadata,
+        lexical=lexical,
     )
+    if metadata is not None and metadata.n_rows != n:
+        raise ValueError(
+            f"metadata table has {metadata.n_rows} rows for a {n}-row db")
+    if lexical is not None and lexical.n_docs != n:
+        raise ValueError(
+            f"lexical slabs hold {lexical.n_docs} docs for a {n}-row db")
 
     if config.top == "pq":
         idx.top_pq = pq_train(km.centroids, m=config.pq_m, seed=config.seed,

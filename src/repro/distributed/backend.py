@@ -63,12 +63,16 @@ from repro.distributed.sharding import (
     _brute_int8_device_arrays,
     _forest_device_arrays,
     _ivf_device_arrays,
+    _lexical_device_arrays,
     _pad_queries,
+    _pad_term_queries,
     _q_spec,
     forest_shard_shapes,
     make_sharded_brute_fn,
     make_sharded_forest_fn,
+    make_sharded_hybrid_fn,
     make_sharded_ivf_fn,
+    make_sharded_lexical_fn,
     slice_forest_delta,
     slice_ivf_delta,
 )
@@ -114,7 +118,8 @@ class ShardedSearchBackend:
                  headroom: float = 1.0, alive=None,
                  delta_updates: bool = True,
                  delta_max_fraction: float = 0.5,
-                 fused: bool = True, precision: str = "f32"):
+                 fused: bool = True, precision: str = "f32",
+                 metadata=None, lexical=None):
         self.mesh = mesh
         self.k = k
         self.axes = tuple(axes)
@@ -130,6 +135,20 @@ class ShardedSearchBackend:
         self._lock = threading.Lock()
         self._delta_fn = None
         self._delta_fn_masked = None     # brute explicit-alive path
+        self._lex_delta_fn = None        # postings-slab append scatter
+        # filter surface: metadata snapshot (pinned at placement) + the
+        # per-FilterSpec compiled mask operands, both lock-guarded; the
+        # cache is cleared on every apply so filters observe metadata
+        # with the same staleness as the vectors (docs/filtering.md)
+        self.metadata_src = metadata
+        self.lexical_src = lexical
+        self._meta = None
+        self._fmask_cache: dict = {}
+        self._host_valid: Optional[np.ndarray] = None
+        self._host_bids: Optional[np.ndarray] = None
+        self._lex_args = None
+        self._fn_lex = None
+        self._fn_hyb = None
         self._version: Optional[int] = None
         self._n = 0                      # real corpus rows last placed
         self._full_bytes = 0             # host bytes of a full re-place
@@ -191,6 +210,19 @@ class ShardedSearchBackend:
                 self.query_axes, fused=fused))
         else:
             raise ValueError(f"unknown backend kind {kind!r}")
+        if self.lexical_src is None:
+            self.lexical_src = getattr(target, "lexical", None)
+        if self.lexical_src is not None:
+            if kind != "brute" or precision != "f32":
+                raise ValueError(
+                    "lexical slabs (lexical / hybrid modes) require "
+                    "kind='brute', precision='f32'")
+            self._fn_lex = jax.jit(make_sharded_lexical_fn(
+                mesh, self.axes, k, self._rows, self.query_axes,
+                fused=fused))
+            self._fn_hyb = jax.jit(make_sharded_hybrid_fn(
+                mesh, self.axes, k, self._rows, self.query_axes,
+                fused=fused))
         self._place(target, alive=alive)
 
     # -- registry-backed compatibility counters ------------------------
@@ -229,18 +261,35 @@ class ShardedSearchBackend:
             self._full_bytes = sum(int(np.asarray(a).nbytes)
                                    for a in (codes, scales, valid))
             self._n = n
+            self._host_valid = np.asarray(valid, bool).copy()
             self._args = (put(codes, P(self.axes, None)),
                           put(scales, P(self.axes)),
                           put(valid, P(self.axes)))
         elif self.kind == "brute":
+            db_host = np.asarray(
+                getattr(target, "db", target), np.float32)
             dbp, valid, _, n = _brute_device_arrays(
-                np.asarray(target, np.float32), self.n_dev,
-                rows=self._rows, alive=alive)
+                db_host, self.n_dev, rows=self._rows, alive=alive)
             self._full_bytes = int(np.asarray(dbp).nbytes
                                    + np.asarray(valid).nbytes)
             self._n = n
+            self._host_valid = np.asarray(valid, bool).copy()
             self._args = (put(dbp, P(self.axes, None)),
                           put(valid, P(self.axes)))
+            if self.lexical_src is not None:
+                slabs = self.lexical_src
+                if slabs.n_docs != n:
+                    raise ValueError(
+                        f"lexical slabs hold {slabs.n_docs} rows for a "
+                        f"{n}-row corpus; append_docs must track "
+                        "add_entities")
+                tp, fp, _, _, _ = _lexical_device_arrays(
+                    slabs.terms, slabs.tf_sat, self.n_dev,
+                    rows=self._rows, alive=alive)
+                self._full_bytes += int(np.asarray(tp).nbytes
+                                        + np.asarray(fp).nbytes)
+                self._lex_args = (put(tp, P(self.axes, None)),
+                                  put(fp, P(self.axes, None)))
         elif self.kind == "ivf":
             if int(target.bucket_ids.shape[0]) != self._K:
                 raise ValueError(
@@ -251,6 +300,7 @@ class ShardedSearchBackend:
             self._full_bytes = sum(int(np.asarray(a).nbytes)
                                    for a in (cents, bids, bvecs))
             self._n = int(target.db.shape[0])
+            self._host_bids = np.asarray(bids, np.int32).copy()
             self._args = (
                 put(cents, P(self.axes, None)),
                 put(bids, P(self.axes, None)),
@@ -262,8 +312,61 @@ class ShardedSearchBackend:
                 shapes=self._shapes)
             self._full_bytes = sum(int(dev[n].nbytes) for n in _FOREST_ARGS)
             self._n = int(target.db.shape[0])
+            self._host_bids = np.asarray(dev["bucket_ids"], np.int32).copy()
             self._args = tuple(dev[name] for name in _FOREST_ARGS)
         self._version = getattr(target, "mutation_version", None)
+        self._refresh_meta(target)
+
+    @guarded_by("_lock")
+    def _refresh_meta(self, target) -> None:
+        """Pin the metadata the *next* filtered queries will see and drop
+        every compiled mask — applies move the staleness window for
+        filters and vectors together (docs/filtering.md)."""
+        meta = (self.metadata_src if self.metadata_src is not None
+                else getattr(target, "metadata", None))
+        self._meta = meta.snapshot() if meta is not None else None
+        self._fmask_cache.clear()
+
+    @guarded_by("_lock")
+    def _filter_operand(self, filter_spec):
+        """Compile a ``FilterSpec`` to this kind's mask operand (cached
+        per spec digest until the next apply).
+
+        brute/lexical/hybrid: the entity mask ANDed into the placed
+        ``valid`` row operand.  ivf/forest: filtered entities' slots in
+        ``bucket_ids`` masked to -1 — the scan's existing ``id >= 0``
+        discipline then keeps them from ranking.  Same shapes and dtypes
+        as the unfiltered operands, so the jitted search signature (and
+        its compile cache) is untouched — the recompile gate's
+        ``filtered-sharded-search`` entry holds this.
+        """
+        key = filter_spec.key()
+        hit = self._fmask_cache.get(key)
+        if hit is not None:
+            return hit
+        put = lambda x, spec: jax.device_put(
+            x, NamedSharding(self.mesh, spec))
+        if self.kind == "brute":
+            emask = filter_spec.mask(self._meta, self._host_valid.shape[0])
+            dev = put(jnp.asarray(self._host_valid & emask), P(self.axes))
+        elif self.kind == "ivf":
+            emask = filter_spec.mask(self._meta, max(self._n, 1))
+            b = self._host_bids
+            live = (b >= 0) & emask[np.minimum(np.maximum(b, 0),
+                                               emask.shape[0] - 1)]
+            dev = put(jnp.asarray(np.where(live, b, -1).astype(np.int32)),
+                      P(self.axes, None))
+        else:  # forest
+            emask = filter_spec.mask(self._meta, max(self._n, 1))
+            b = self._host_bids
+            live = (b >= 0) & emask[np.minimum(np.maximum(b, 0),
+                                               emask.shape[0] - 1)]
+            dev = put(jnp.asarray(np.where(live, b, -1).astype(np.int32)),
+                      P(self.axes, None, None))
+        if len(self._fmask_cache) >= 64:
+            self._fmask_cache.clear()
+        self._fmask_cache[key] = dev
+        return dev
 
     # ------------------------------------------------------------------
     # delta apply: jitted fixed-shape in-place scatters
@@ -380,6 +483,21 @@ class ShardedSearchBackend:
 
         return fn
 
+    def _make_lex_delta_fn(self):
+        """Postings-slab counterpart of the brute row scatter: appended
+        docs land their term/tf slab rows at the same row ids as their
+        vectors (liveness rides the shared ``valid`` mask)."""
+        donate_ok = jax.default_backend() != "cpu"
+        specs = (self._corpus_spec(2), self._corpus_spec(2))
+
+        @partial(jax.jit, donate_argnums=(0, 1) if donate_ok else (),
+                 out_shardings=specs)
+        def fn(terms, tf, rows, u_terms, u_tf):
+            return (terms.at[rows].set(u_terms, mode="drop"),
+                    tf.at[rows].set(u_tf, mode="drop"))
+
+        return fn
+
     def _bucket_payload_bytes(self) -> int:
         """Exact per-dirty-bucket payload size — computable up front
         because every slab/row shape is fixed, so an over-threshold
@@ -410,7 +528,7 @@ class ShardedSearchBackend:
                 # construction, but once a manifest chain starts a gap
                 # in it means missed tombstones — full re-place
                 return None, "version"
-            db = np.asarray(target, np.float32)
+            db = np.asarray(getattr(target, "db", target), np.float32)
             n = db.shape[0]
             if n > self._rows * self.n_dev:
                 return None, "outgrew"        # full place raises loudly
@@ -427,6 +545,17 @@ class ShardedSearchBackend:
             else:
                 pay["vals"] = _pad_rows(vals, u)
                 vals_bytes = int(vals.nbytes)
+            if self._lex_args is not None:
+                slabs = self.lexical_src
+                if slabs is None or slabs.n_docs != n:
+                    return None, "lexical-misaligned"
+                pay["lex_terms"] = _pad_rows(
+                    np.asarray(slabs.terms[delta.base_n:n], np.int32),
+                    u, fill=-1)
+                pay["lex_tf"] = _pad_rows(
+                    np.asarray(slabs.tf_sat[delta.base_n:n], np.float32), u)
+                vals_bytes += int(pay["lex_terms"].nbytes
+                                  + pay["lex_tf"].nbytes)
             if alive is not None:
                 # caller supplied the complete liveness truth: ship the
                 # whole mask (it IS the payload — nothing to delta)
@@ -473,6 +602,17 @@ class ShardedSearchBackend:
         return pay, None
 
     @guarded_by("_lock")
+    def _apply_lex_delta(self, pay) -> None:
+        """Scatter appended postings-slab rows next to their vectors."""
+        if self._lex_args is None or "lex_terms" not in pay:
+            return
+        if self._lex_delta_fn is None:
+            self._lex_delta_fn = self._make_lex_delta_fn()
+        self._lex_args = self._lex_delta_fn(
+            self._lex_args[0], self._lex_args[1], pay["rows"],
+            pay["lex_terms"], pay["lex_tf"])
+
+    @guarded_by("_lock")
     def _apply_delta(self, pay) -> None:
         if self.kind == "brute" and "valid" in pay:
             if self._delta_fn_masked is None:
@@ -488,6 +628,8 @@ class ShardedSearchBackend:
                 db = self._delta_fn_masked(
                     self._args[0], pay["rows"], pay["vals"])
                 self._args = (db, valid)
+                self._apply_lex_delta(pay)
+            self._host_valid = np.asarray(pay["valid"], bool).copy()
             self._n = pay["n"]
             return
         if self._delta_fn is None:
@@ -496,19 +638,41 @@ class ShardedSearchBackend:
             self._args = self._delta_fn(
                 self._args[0], self._args[1], self._args[2], pay["rows"],
                 pay["vals8"], pay["vscales"], pay["tomb"])
+            self._mirror_brute_liveness(pay)
         elif self.kind == "brute":
             self._args = self._delta_fn(
                 self._args[0], self._args[1], pay["rows"], pay["vals"],
                 pay["tomb"])
+            self._apply_lex_delta(pay)
+            self._mirror_brute_liveness(pay)
         elif self.kind == "ivf":
             self._args = self._delta_fn(
                 *self._args, pay["rows"], pay["cents"],
                 pay["bucket_ids"], pay["bvecs"])
+            rows = np.asarray(pay["rows"])
+            keep = rows < self._host_bids.shape[0]
+            self._host_bids[rows[keep]] = np.asarray(
+                pay["bucket_ids"])[keep]
         else:
             self._args = self._delta_fn(
                 *self._args, pay["shard"], pay["slot"],
                 *(pay[name] for name in _FOREST_ARGS))
+            sh = np.asarray(pay["shard"])
+            sl = np.asarray(pay["slot"])
+            keep = sh < self._host_bids.shape[0]
+            self._host_bids[sh[keep], sl[keep]] = np.asarray(
+                pay["bucket_ids"])[keep]
         self._n = pay["n"]
+
+    @guarded_by("_lock")
+    def _mirror_brute_liveness(self, pay) -> None:
+        """Replay the device liveness flips on the host mirror the filter
+        compiler reads (appends flip alive, tombstones flip dead)."""
+        rt = self._host_valid.shape[0]
+        rows = np.asarray(pay["rows"])
+        self._host_valid[rows[rows < rt]] = True
+        tomb = np.asarray(pay["tomb"])
+        self._host_valid[tomb[tomb < rt]] = False
 
     # ------------------------------------------------------------------
     def apply_updates(self, target, alive=None, delta=None) -> dict:
@@ -557,6 +721,7 @@ class ShardedSearchBackend:
                        and delta.base_version <= self._version)
             if delta.empty and (covered or self.kind == "brute"):
                 self._version = delta.version
+                self._refresh_meta(target)
                 return {"mode": "noop", "bytes": 0,
                         "full_bytes": self._full_bytes, "reason": None}
             if (self.kind in ("ivf", "forest") and self.delta_updates
@@ -573,6 +738,7 @@ class ShardedSearchBackend:
                 else:
                     self._apply_delta(pay)
                     self._version = delta.version
+                    self._refresh_meta(target)
                     return {"mode": "delta", "bytes": pay["bytes"],
                             "full_bytes": self._full_bytes, "reason": None}
         self._place(target, alive=alive)
@@ -580,29 +746,98 @@ class ShardedSearchBackend:
                 "full_bytes": self._full_bytes, "reason": reason}
 
     def jit_cache_size(self) -> int:
-        """Compiled-variant count of the underlying search (test hook)."""
-        try:
-            return int(self._fn._cache_size())
-        except AttributeError:          # older jax: no introspection
-            return -1
+        """Compiled-variant count of the underlying search (test hook) —
+        summed over the semantic/lexical/hybrid callables."""
+        total = 0
+        for fn in (self._fn, self._fn_lex, self._fn_hyb):
+            if fn is None:
+                continue
+            try:
+                total += int(fn._cache_size())
+            except AttributeError:      # older jax: no introspection
+                return -1
+        return total
 
-    def __call__(self, queries):
+    def __call__(self, queries, *, filter_spec=None, mode: str = "semantic",
+                 alpha: float = 0.5, q_terms=None, q_weights=None):
+        """Search.  ``filter_spec`` (a :class:`repro.core.metadata.
+        FilterSpec`) restricts results to matching entities; ``mode``
+        selects ``"semantic"`` (dense scan), ``"lexical"`` (BM25 over the
+        postings slabs), or ``"hybrid"`` (``alpha * l2sq - (1 - alpha) *
+        bm25``).  Non-semantic modes need the backend built with lexical
+        slabs and per-query ``q_terms``/``q_weights`` operands (see
+        :func:`repro.core.lexical.query_operands`).  Filters and alpha are
+        data, not shapes — no mode/filter combination mints a new jit
+        signature beyond the three per-mode callables.
+        """
         tracer = get_tracer()
-        q, B = _pad_queries(self.mesh, queries, self.query_axes)
-        sig = (tuple(q.shape), str(q.dtype))
+        if filter_spec is not None and filter_spec.empty:
+            filter_spec = None
+        if mode not in ("semantic", "lexical", "hybrid"):
+            raise ValueError(
+                f"mode must be 'semantic', 'lexical', or 'hybrid', "
+                f"got {mode!r}")
+        if mode != "semantic":
+            if self._fn_lex is None:
+                raise ValueError(
+                    f"mode={mode!r} requires a backend built with lexical "
+                    "slabs (kind='brute', lexical=...)")
+            if q_terms is None or q_weights is None:
+                raise ValueError(
+                    f"mode={mode!r} requires q_terms/q_weights (see "
+                    "repro.core.lexical.query_operands)")
+            qt, qw, B = _pad_term_queries(
+                self.mesh, q_terms, q_weights, self.query_axes)
+        if mode == "lexical":
+            sig = (mode, tuple(qt.shape), str(qt.dtype))
+            b_disp = int(qt.shape[0])
+        else:
+            q, B = _pad_queries(self.mesh, queries, self.query_axes)
+            sig = (mode, tuple(q.shape), str(q.dtype))
+            b_disp = int(q.shape[0])
         t0 = time.perf_counter()
         # kernel: queue + device execution of the jitted shard_map scan.
         # block_until_ready runs OUTSIDE the lock (same concurrency as
         # before, where device_get did the blocking) so the span measures
         # real device time, not async dispatch.
-        with tracer.span("kernel", kind=self.kind, b=int(q.shape[0])):
+        with tracer.span("kernel", kind=self.kind, b=b_disp):
             with self._lock, self.mesh:
                 first = sig not in self._seen_sigs
                 if first:
                     self._seen_sigs.add(sig)
-                qs = jax.device_put(
-                    q, NamedSharding(self.mesh, _q_spec(self.query_axes)))
-                d, i = self._fn(*self._args, qs)
+                qspec = NamedSharding(self.mesh, _q_spec(self.query_axes))
+                args = self._args
+                if filter_spec is not None:
+                    fdev = self._filter_operand(filter_spec)
+                    if self.kind == "brute":
+                        if self.precision == "int8":
+                            args = (args[0], args[1], fdev)
+                        else:
+                            args = (args[0], fdev)
+                    elif self.kind == "ivf":
+                        args = (args[0], fdev, args[2])
+                    else:  # forest: bucket_ids is _FOREST_ARGS[3]
+                        args = args[:3] + (fdev,) + args[4:]
+                if mode == "semantic":
+                    qs = jax.device_put(q, qspec)
+                    d, i = self._fn(*args, qs)
+                elif mode == "lexical":
+                    # args[-1] is the (possibly filtered) valid operand
+                    qts = jax.device_put(qt, qspec)
+                    qws = jax.device_put(qw, qspec)
+                    d, i = self._fn_lex(
+                        self._lex_args[0], self._lex_args[1], args[1],
+                        qts, qws)
+                else:  # hybrid
+                    qs = jax.device_put(q, qspec)
+                    qts = jax.device_put(qt, qspec)
+                    qws = jax.device_put(qw, qspec)
+                    a_dev = jax.device_put(
+                        jnp.full((1, 1), float(alpha), dtype=jnp.float32),
+                        NamedSharding(self.mesh, P(None, None)))
+                    d, i = self._fn_hyb(
+                        args[0], self._lex_args[0], self._lex_args[1],
+                        args[1], qs, qts, qws, a_dev)
             jax.block_until_ready((d, i))
         t1 = time.perf_counter()
         # rerank: pull the per-shard top-k merge result back to host and

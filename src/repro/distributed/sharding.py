@@ -64,6 +64,7 @@ __all__ = [
     "ShardPlan", "SINGLE_POD_PLAN", "MULTI_POD_PLAN", "LOCAL_PLAN",
     "sharded_brute_search", "sharded_ivf_search", "sharded_forest_search",
     "make_sharded_brute_fn", "make_sharded_ivf_fn", "make_sharded_forest_fn",
+    "make_sharded_lexical_fn", "make_sharded_hybrid_fn",
     "shard_forest", "forest_shard_shapes", "ForestShardShapes",
     "slice_forest_delta", "slice_ivf_delta",
 ]
@@ -323,6 +324,23 @@ def _pad_queries(mesh, queries, query_axes):
     return q, B
 
 
+def _pad_term_queries(mesh, q_terms, q_weights, query_axes):
+    """Batch-pad the lexical query operands to the query-axis grid.
+
+    Pad rows get term id -1 (never matches a slab slot) and weight 0, so
+    the padded queries score nothing and are trimmed after the merge —
+    same contract as :func:`_pad_queries` for dense queries."""
+    qt = jnp.asarray(q_terms, jnp.int32)
+    qw = jnp.asarray(q_weights, jnp.float32)
+    B = qt.shape[0]
+    n_q = _axes_size(mesh, query_axes) if query_axes else 1
+    Bp = -(-B // n_q) * n_q
+    if Bp > B:
+        qt = jnp.pad(qt, ((0, Bp - B), (0, 0)), constant_values=-1)
+        qw = jnp.pad(qw, ((0, Bp - B), (0, 0)))
+    return qt, qw, B
+
+
 def sharded_brute_search(mesh, db, queries, k=10, axes=("data", "model"),
                          query_axes=(), fused=True, precision="f32"):
     """Host entry: shards db rows over ``axes`` and runs the distributed
@@ -353,6 +371,127 @@ def sharded_brute_search(mesh, db, queries, k=10, axes=("data", "model"),
                       put(q, _q_spec(query_axes)))
     d, i = jax.device_get((d, i))
     return np.asarray(d)[:B], np.asarray(i)[:B]
+
+
+def _lexical_device_arrays(terms, tf_sat, n_dev, rows=None, alive=None):
+    """Postings-slab counterpart of ``_brute_device_arrays``: term rows
+    padded with -1 (no term id 0 aliasing), tf rows with zeros; pads and
+    tombstones are masked by the same explicit ``valid`` operand.
+    Returns (padded terms, padded tf_sat, valid, rows per shard, n)."""
+    t = np.asarray(terms, np.int32)
+    f = np.asarray(tf_sat, np.float32)
+    n = t.shape[0]
+    if rows is None:
+        rows = -(-n // n_dev)
+    if rows * n_dev < n:
+        raise ValueError(
+            f"postings have {n} rows but the shard grid holds only "
+            f"{rows * n_dev}; rebuild the backend (or raise headroom)")
+    pad = rows * n_dev - n
+    tp = np.pad(t, ((0, pad), (0, 0)), constant_values=-1)
+    fp = np.pad(f, ((0, pad), (0, 0)))
+    valid = np.arange(rows * n_dev) < n
+    if alive is not None:
+        valid[:n] &= np.asarray(alive, bool)
+    return (jnp.asarray(tp), jnp.asarray(fp), jnp.asarray(valid), rows, n)
+
+
+def make_sharded_lexical_fn(mesh, axes: tuple, k: int, shard_rows: int,
+                            query_axes: tuple = (), *, fused: bool = True):
+    """Distributed BM25 lexical scan: postings slabs row-sharded over
+    ``axes`` — the brute layout with term/tf slabs in place of vectors.
+    The callable takes ``(terms, tf_sat, valid, q_terms, q_weights)``;
+    filters and tombstones compose through ``valid`` exactly as in the
+    brute scan, so a filtered call reuses the unfiltered signature.
+    """
+    from repro.kernels.ref import bm25_dists_ref
+
+    _check_disjoint(axes, query_axes)
+    k_loc = min(k, shard_rows)
+
+    def _finish_local(ld, li, lin):
+        li = jnp.where(li >= 0, li + lin * shard_rows, -1).astype(jnp.int32)
+        if k_loc < k:
+            ld = jnp.pad(ld, ((0, 0), (0, k - k_loc)),
+                         constant_values=jnp.inf)
+            li = jnp.pad(li, ((0, 0), (0, k - k_loc)), constant_values=-1)
+        gd = jax.lax.all_gather(ld, axes, tiled=False)
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        return _merge_gathered(gd, gi, k)
+
+    def local(terms_shard, tf_shard, valid_shard, qt, qw):
+        lin = jax.lax.axis_index(axes)
+        if fused:
+            ld, li = kernel_ops.bm25_topk_op(
+                qt, qw, terms_shard, tf_shard, k_loc, valid=valid_shard)
+        else:
+            dist = bm25_dists_ref(qt, qw, terms_shard, tf_shard)
+            dist = jnp.where(valid_shard[None, :], dist, jnp.inf)
+            neg, li = jax.lax.top_k(-dist, k_loc)
+            ld = -neg
+        return _finish_local(ld, li, lin)
+
+    qs = _q_spec(query_axes)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tuple(axes), None), P(tuple(axes), None),
+                  P(tuple(axes)), qs, qs),
+        out_specs=(qs, qs),
+        check_vma=False,   # merge all-gathers over the corpus axes only
+    )
+
+
+def make_sharded_hybrid_fn(mesh, axes: tuple, k: int, shard_rows: int,
+                           query_axes: tuple = (), *, fused: bool = True):
+    """Distributed hybrid scan: semantic L2 and BM25 fused per shard as
+    ``alpha * l2sq - (1 - alpha) * bm25``.
+
+    The callable takes ``(db, terms, tf_sat, valid, q, q_terms,
+    q_weights, alpha)``; ``alpha`` is a replicated (1, 1) f32 *operand*
+    — sweeping the blend mints no new executables (the recompile gate's
+    ``filtered-sharded-search`` entry covers this).
+    """
+    from repro.kernels.ref import bm25_dists_ref
+
+    _check_disjoint(axes, query_axes)
+    k_loc = min(k, shard_rows)
+
+    def _finish_local(ld, li, lin):
+        li = jnp.where(li >= 0, li + lin * shard_rows, -1).astype(jnp.int32)
+        if k_loc < k:
+            ld = jnp.pad(ld, ((0, 0), (0, k - k_loc)),
+                         constant_values=jnp.inf)
+            li = jnp.pad(li, ((0, 0), (0, k - k_loc)), constant_values=-1)
+        gd = jax.lax.all_gather(ld, axes, tiled=False)
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        return _merge_gathered(gd, gi, k)
+
+    def local(db_shard, terms_shard, tf_shard, valid_shard,
+              q, qt, qw, alpha):
+        lin = jax.lax.axis_index(axes)
+        if fused:
+            ld, li = kernel_ops.hybrid_topk_op(
+                q, db_shard, qt, qw, terms_shard, tf_shard, alpha, k_loc,
+                valid=valid_shard)
+        else:
+            d2 = pairwise_l2sq(q, db_shard)
+            score = -bm25_dists_ref(qt, qw, terms_shard, tf_shard)
+            a = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+            dist = a * d2 - (1.0 - a) * score
+            dist = jnp.where(valid_shard[None, :], dist, jnp.inf)
+            neg, li = jax.lax.top_k(-dist, k_loc)
+            ld = -neg
+        return _finish_local(ld, li, lin)
+
+    qs = _q_spec(query_axes)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tuple(axes), None), P(tuple(axes), None),
+                  P(tuple(axes), None), P(tuple(axes)),
+                  qs, qs, qs, P(None, None)),
+        out_specs=(qs, qs),
+        check_vma=False,   # merge all-gathers over the corpus axes only
+    )
 
 
 def make_sharded_ivf_fn(mesh, axes: tuple, k: int, nprobe_local: int,
@@ -956,6 +1095,15 @@ def make_sharded_forest_fn(mesh, axes: tuple, k: int, nprobe_local: int,
             rerank=False, roots=rr,
         )
         cand = res.ids.reshape(B, -1)                      # local slot ids
+        # bucket-slot liveness: a probed slot whose bucket entry is -1
+        # holds no servable entity — pad slots, compacted deletes, and
+        # (since filters mask bucket_ids the same way) filtered-out rows.
+        # For an unfiltered placement every live slot has its entity id
+        # in bucket_ids, so this is a no-op there; with a filter mask it
+        # is what keeps masked entities from ranking in the rerank.
+        flat_bids = bids.reshape(-1)
+        cand = jnp.where(
+            (cand >= 0) & (flat_bids[jnp.maximum(cand, 0)] >= 0), cand, -1)
         vecs = vecs_flat[jnp.maximum(cand, 0)]
         if fused:
             # rerank distance + top-k in one op (internal clamp/pad to k);

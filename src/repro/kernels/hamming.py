@@ -15,13 +15,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INF, merge_topk, pad_sentinel, popcount32
+from repro.kernels.common import (
+    INF, merge_topk, pad_sentinel, popcount32, valid_operand,
+)
 
 DEFAULT_BQ = 256
 DEFAULT_BN = 1024
 
 
-def _kernel(q_ref, c_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
+def _kernel(q_ref, c_ref, v_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
     step = pl.program_id(1)
 
     @pl.when(step == 0)
@@ -35,7 +37,7 @@ def _kernel(q_ref, c_ref, bd_ref, bi_ref, *, k: int, bn: int, n: int):
     ham = popcount32(x).sum(axis=-1).astype(jnp.float32)
 
     ids = step * bn + jax.lax.broadcasted_iota(jnp.int32, ham.shape, 1)
-    ham = jnp.where(ids < n, ham, INF)
+    ham = jnp.where((ids < n) & (v_ref[...] != 0), ham, INF)
 
     new_d, new_i = merge_topk(bd_ref[...], bi_ref[...], ham, ids, k)
     bd_ref[...] = new_d
@@ -48,14 +50,17 @@ def hamming_topk_pallas(
     codes: jnp.ndarray,        # (N, W) int32 packed
     k: int = 10,
     *,
+    valid: jnp.ndarray | None = None,
     bq: int = DEFAULT_BQ,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (hamming dists (B, k) ascending fp32, ids (B, k)).
 
-    ``k`` is clamped to N; impossible slots return the ``(inf, -1)``
-    sentinel (same contract as ``l2_topk_pallas``)."""
+    ``valid`` is an optional (N,) liveness mask (tombstones / filters);
+    dead rows are unrankable.  ``k`` is clamped to N; impossible slots
+    return the ``(inf, -1)`` sentinel (same contract as
+    ``l2_topk_pallas``)."""
     B, W = qcodes.shape
     N = codes.shape[0]
     k_eff = min(k, N)
@@ -65,6 +70,7 @@ def hamming_topk_pallas(
     grid_n = -(-N // bn)
     qp = jnp.pad(qcodes, ((0, grid_b * bq - B), (0, 0)))
     cp = jnp.pad(codes, ((0, grid_n * bn - N), (0, 0)))
+    vp = valid_operand(valid, N, grid_n * bn)
 
     out = pl.pallas_call(
         functools.partial(_kernel, k=k_eff, bn=bn, n=N),
@@ -72,6 +78,7 @@ def hamming_topk_pallas(
         in_specs=[
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=[
             pl.BlockSpec((bq, k_eff), lambda i, j: (i, 0)),
@@ -82,5 +89,5 @@ def hamming_topk_pallas(
             jax.ShapeDtypeStruct((grid_b * bq, k_eff), jnp.int32),
         ],
         interpret=interpret,
-    )(qp, cp)
+    )(qp, cp, vp)
     return pad_sentinel(out[0][:B], out[1][:B], k, k_eff)

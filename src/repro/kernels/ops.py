@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import bucket_topk, hamming, l2_topk, pq_adc, ref
+from repro.kernels import bm25, bucket_topk, hamming, l2_topk, pq_adc, ref
 
 __all__ = [
     "l2_topk_op",
@@ -23,6 +23,8 @@ __all__ = [
     "candidate_topk_op",
     "pq_adc_topk_op",
     "hamming_topk_op",
+    "bm25_topk_op",
+    "hybrid_topk_op",
     "quantize_rows_int8",
 ]
 
@@ -118,12 +120,55 @@ def pq_adc_topk_op(lut, codes, k: int = 10, *, valid=None,
                                valid=v)
 
 
-def hamming_topk_op(qcodes, codes, k: int = 10, *, force_pallas: bool = False,
+def hamming_topk_op(qcodes, codes, k: int = 10, *, valid=None,
+                    force_pallas: bool = False,
                     bq: int | None = None, bn: int | None = None):
     """Packed-bit Hamming top-k. (dists, ids)."""
+    v = None if valid is None else jnp.asarray(valid)
     if _on_tpu() or force_pallas:
         return hamming.hamming_topk_pallas(
-            jnp.asarray(qcodes), jnp.asarray(codes), k,
+            jnp.asarray(qcodes), jnp.asarray(codes), k, valid=v,
             interpret=not _on_tpu(), **_tiles(bq, bn),
         )
-    return ref.hamming_topk_ref(jnp.asarray(qcodes), jnp.asarray(codes), k)
+    return ref.hamming_topk_ref(jnp.asarray(qcodes), jnp.asarray(codes), k,
+                                valid=v)
+
+
+def bm25_topk_op(q_terms, q_weights, terms, tf_sat, k: int = 10, *,
+                 valid=None, force_pallas: bool = False,
+                 bq: int | None = None, bn: int | None = None):
+    """Fused BM25 lexical scan over fixed-shape postings slabs.
+    (ranking dists = -score ascending, ids)."""
+    v = None if valid is None else jnp.asarray(valid)
+    if _on_tpu() or force_pallas:
+        return bm25.bm25_topk_pallas(
+            jnp.asarray(q_terms), jnp.asarray(q_weights),
+            jnp.asarray(terms), jnp.asarray(tf_sat), k, valid=v,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
+        )
+    return ref.bm25_topk_ref(
+        jnp.asarray(q_terms), jnp.asarray(q_weights),
+        jnp.asarray(terms), jnp.asarray(tf_sat), k, valid=v,
+    )
+
+
+def hybrid_topk_op(queries, db, q_terms, q_weights, terms, tf_sat, alpha,
+                   k: int = 10, *, valid=None, force_pallas: bool = False,
+                   bq: int | None = None, bn: int | None = None):
+    """Fused hybrid ``alpha * l2sq - (1 - alpha) * bm25`` top-k.
+    ``alpha`` is a (1, 1) operand — sweeping it mints no executables."""
+    v = None if valid is None else jnp.asarray(valid)
+    if _on_tpu() or force_pallas:
+        return bm25.hybrid_topk_pallas(
+            jnp.asarray(queries), jnp.asarray(db),
+            jnp.asarray(q_terms), jnp.asarray(q_weights),
+            jnp.asarray(terms), jnp.asarray(tf_sat),
+            jnp.asarray(alpha), k, valid=v,
+            interpret=not _on_tpu(), **_tiles(bq, bn),
+        )
+    return ref.hybrid_topk_ref(
+        jnp.asarray(queries), jnp.asarray(db),
+        jnp.asarray(q_terms), jnp.asarray(q_weights),
+        jnp.asarray(terms), jnp.asarray(tf_sat), jnp.asarray(alpha), k,
+        valid=v,
+    )

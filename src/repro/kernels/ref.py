@@ -102,7 +102,45 @@ def pq_adc_topk_ref(lut, codes, k: int = 10, *, valid=None):
     return _finish(_apply_valid(scores, valid), k)
 
 
-def hamming_topk_ref(qcodes, codes, k: int = 10):
+def hamming_topk_ref(qcodes, codes, k: int = 10, *, valid=None):
     x = jnp.bitwise_xor(qcodes[:, None, :], codes[None, :, :])
     ham = popcount32(x).sum(-1).astype(jnp.float32)
-    return _finish(ham, k)
+    return _finish(_apply_valid(ham, valid), k)
+
+
+def bm25_dists_ref(q_terms, q_weights, terms, tf_sat):
+    """(B, N) BM25 ranking distances (``-score``), reduced in the same
+    (term-slot, then doc-slot) order as the fused kernel's static loop —
+    the order match is what keeps fused vs unfused bitwise on CPU."""
+    qt = q_terms.astype(jnp.int32)
+    qw = q_weights.astype(jnp.float32)
+    t = terms.astype(jnp.int32)
+    f = tf_sat.astype(jnp.float32)
+    score = jnp.zeros((qt.shape[0], t.shape[0]), jnp.float32)
+    for slot in range(qt.shape[1]):
+        s = qt[:, slot]                                       # (B,)
+        m = (t[None, :, :] == s[:, None, None]) & (
+            s[:, None, None] >= 0)                            # (B, N, S)
+        hit = jnp.sum(jnp.where(m, f[None, :, :], 0.0), axis=-1)
+        score = score + hit * qw[:, slot][:, None]
+    return -score
+
+
+def bm25_topk_ref(q_terms, q_weights, terms, tf_sat, k: int = 10,
+                  *, valid=None):
+    """Oracle for the fused BM25 scan (dists = -score, ascending)."""
+    dist = bm25_dists_ref(q_terms, q_weights, terms, tf_sat)
+    return _finish(_apply_valid(dist, valid), k)
+
+
+def hybrid_topk_ref(queries, db, q_terms, q_weights, terms, tf_sat,
+                    alpha, k: int = 10, *, valid=None):
+    """Oracle for the fused hybrid scan:
+    ``alpha * l2sq - (1 - alpha) * bm25``, ``alpha`` a (1, 1) operand."""
+    q = queries.astype(jnp.float32)
+    x = db.astype(jnp.float32)
+    d2 = pairwise_l2sq(q, x)
+    score = -bm25_dists_ref(q_terms, q_weights, terms, tf_sat)
+    a = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    dist = a * d2 - (1.0 - a) * score
+    return _finish(_apply_valid(dist, valid), k)

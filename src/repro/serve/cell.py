@@ -58,6 +58,19 @@ class CellFailure:
     error: BaseException
 
 
+def _opts_extra(filter_spec, mode: str, alpha: float) -> bytes:
+    """Cache-key suffix for request options that change the answer
+    (filter predicates, search mode, hybrid alpha).  Returns ``b""`` for
+    a default semantic unfiltered request so existing cache keys — and
+    fleet affinity routing, which shares the digest — are unchanged."""
+    if mode == "semantic" and (filter_spec is None or filter_spec.empty):
+        return b""
+    fkey = (b"" if filter_spec is None or filter_spec.empty
+            else filter_spec.key())
+    return b"|".join((fkey, mode.encode(),
+                      np.float32(alpha).tobytes()))
+
+
 @dataclasses.dataclass
 class _Request:
     query: np.ndarray
@@ -66,6 +79,16 @@ class _Request:
     cancelled: threading.Event
     trace_id: int = 0
     t_batch: float = 0.0
+    # request options: ``opts`` is the hashable micro-batch grouping key
+    # (empty for a default semantic request — those batch exactly as
+    # before); requests with different opts never share a backend call,
+    # because one dispatch carries one filter/mode/alpha
+    opts: tuple = ()
+    filter_spec: "object | None" = None
+    mode: str = "semantic"
+    alpha: float = 0.5
+    q_terms: "np.ndarray | None" = None
+    q_weights: "np.ndarray | None" = None
 
 
 @dataclasses.dataclass
@@ -292,7 +315,9 @@ class ServingCell:
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray, *, future: "queue.Queue" = None,
                cancelled: Optional[threading.Event] = None,
-               trace_id: int = 0) -> "queue.Queue":
+               trace_id: int = 0, filter_spec=None, mode: str = "semantic",
+               alpha: float = 0.5, q_terms=None,
+               q_weights=None) -> "queue.Queue":
         """Enqueue one request; returns the future its result lands in.
 
         ``future`` lets a router share one result queue between a
@@ -301,12 +326,22 @@ class ServingCell:
         worker drops the request instead of computing it.  ``trace_id``
         threads a router-assigned trace through the worker's spans so
         the queue wait and dispatch of one request share an id.
+        ``filter_spec``/``mode``/``alpha``/``q_terms``/``q_weights`` are
+        the filtered/hybrid search options (docs/filtering.md); the
+        worker micro-batches only requests sharing the same options.
         """
         fut = queue.Queue() if future is None else future
+        extra = _opts_extra(filter_spec, mode, alpha)
         self.q.put(_Request(
             query=query, t_enqueue=time.perf_counter(), future=fut,
             cancelled=cancelled if cancelled is not None
-            else threading.Event(), trace_id=trace_id))
+            else threading.Event(), trace_id=trace_id,
+            opts=(extra,) if extra else (),
+            filter_spec=filter_spec, mode=mode, alpha=alpha,
+            q_terms=None if q_terms is None
+            else np.asarray(q_terms, np.int32).reshape(-1),
+            q_weights=None if q_weights is None
+            else np.asarray(q_weights, np.float32).reshape(-1)))
         return fut
 
     def depth(self) -> int:
@@ -319,7 +354,9 @@ class ServingCell:
         with self._stats_lock:
             return self._failure
 
-    def search(self, query: np.ndarray, timeout: float = 30.0):
+    def search(self, query: np.ndarray, timeout: float = 30.0, *,
+               filter=None, mode: str = "semantic", alpha: float = 0.5,
+               q_terms=None, q_weights=None):
         """Blocking single-query call, fronted by the result cache.
 
         Raises :class:`TimeoutError` when no result arrives in
@@ -329,11 +366,19 @@ class ServingCell:
         stats.  Cached results are only offered back under the
         generation observed at miss time, so a search that raced an
         ``apply_updates`` can never re-insert a stale result.
+
+        ``filter`` (a :class:`repro.core.metadata.FilterSpec`), ``mode``
+        (``"semantic"``/``"lexical"``/``"hybrid"``), ``alpha``, and the
+        lexical query operands ``q_terms``/``q_weights`` pass through to
+        the backend; they are folded into the cache key, so a filtered
+        result can never satisfy an unfiltered request for the same
+        query vector (or any other option mix-up).
         """
         tracer = get_tracer()
         key = gen = None
         if self.cache is not None:
-            key = self.cache.key_for(query)
+            key = self.cache.key_for(query,
+                                     _opts_extra(filter, mode, alpha))
             gen = self.cache.generation
             hit = self.cache.get(key)
             if hit is not None:
@@ -348,7 +393,9 @@ class ServingCell:
                 return hit
         cancelled = threading.Event()
         trace_id = tracer.new_trace_id()
-        fut = self.submit(query, cancelled=cancelled, trace_id=trace_id)
+        fut = self.submit(query, cancelled=cancelled, trace_id=trace_id,
+                          filter_spec=filter, mode=mode, alpha=alpha,
+                          q_terms=q_terms, q_weights=q_weights)
         try:
             out = fut.get(timeout=timeout)
         except queue.Empty:
@@ -402,13 +449,24 @@ class ServingCell:
 
     def _run(self):
         while not self._stop.is_set():
-            batch, t_first = self._collect()
+            collected, t_first = self._collect()
             # requests abandoned by their caller (timeout) are dropped
             # here — computing them anyway would waste backend work AND
             # pollute the latency stats with latencies nobody observed
-            batch = [r for r in batch if not r.cancelled.is_set()]
-            if not batch:
+            collected = [r for r in collected if not r.cancelled.is_set()]
+            if not collected:
                 continue
+            # one backend dispatch carries one filter/mode/alpha, so a
+            # collected batch is served as one group per distinct option
+            # set; default semantic requests all share the () group and
+            # batch exactly as before
+            groups: "dict[tuple, list[_Request]]" = {}
+            for r in collected:
+                groups.setdefault(r.opts, []).append(r)
+            for batch in groups.values():
+                self._serve_batch(batch, t_first)
+
+    def _serve_batch(self, batch: "list[_Request]", t_first: float):
             tracer = get_tracer()
             qs = np.stack([r.query for r in batch])
             b = qs.shape[0]
@@ -428,7 +486,7 @@ class ServingCell:
                 with tracer.span("dispatch",
                                  trace_id=batch[0].trace_id,
                                  cell=self.name, size=b, bucket=bb):
-                    result = self._dispatch(qs)
+                    result = self._dispatch(qs, self._group_kw(batch, bb))
             except Exception as e:
                 # fail fast, keep the worker alive: every request in the
                 # batch gets a CellFailure sentinel so a router can
@@ -439,7 +497,7 @@ class ServingCell:
                 fail = CellFailure(cell=self.name, error=e)
                 for r in batch:
                     r.future.put(fail)
-                continue
+                return
             t1 = time.perf_counter()
             d, i = result
             served = [(j, r) for j, r in enumerate(batch)
@@ -463,14 +521,41 @@ class ServingCell:
                 except Exception:       # telemetry must never kill serving
                     self._c_est_err.inc()
 
-    def _dispatch(self, qs):
+    @staticmethod
+    def _group_kw(batch: "list[_Request]", bb: int) -> dict:
+        """Backend kwargs for one option group: the shared
+        filter/mode/alpha plus the stacked per-request lexical operands
+        (term rows padded to the group's pow2 slot width with -1/0, the
+        bucket's pad queries scoring nothing)."""
+        r0 = batch[0]
+        if not r0.opts:
+            return {}
+        kw = {"filter_spec": r0.filter_spec, "mode": r0.mode,
+              "alpha": r0.alpha}
+        if r0.mode != "semantic" and r0.q_terms is not None:
+            slots = _bucket(max(r.q_terms.size for r in batch))
+            qt = np.full((bb, slots), -1, np.int32)
+            qw = np.zeros((bb, slots), np.float32)
+            for j, r in enumerate(batch):
+                qt[j, :r.q_terms.size] = r.q_terms
+                qw[j, :r.q_weights.size] = r.q_weights
+            kw["q_terms"] = qt
+            kw["q_weights"] = qw
+        return kw
+
+    def _dispatch(self, qs, skw: Optional[dict] = None):
+        # plain-callable backends (tests pass lambdas) only ever see the
+        # bare positional call; option kwargs are only forwarded when a
+        # request actually set them
+        call = (self.search_fn if not skw
+                else lambda q: self.search_fn(q, **skw))
         if self.hedge_fn is None:
-            return self.search_fn(qs)
+            return call(qs)
         holder: dict = {}
         done = threading.Event()
 
         def primary():
-            out = self.search_fn(qs)
+            out = call(qs)
             holder.setdefault("out", out)
             done.set()
 
@@ -479,7 +564,9 @@ class ServingCell:
         if not done.wait(self.hedge_ms / 1e3):
             self._c_hedges.inc()
             get_tracer().instant("hedge-fired", cell=self.name)
-            out = self.hedge_fn(qs)      # replica answers the hedge
+            # replica answers the hedge under the same request options
+            out = (self.hedge_fn(qs) if not skw
+                   else self.hedge_fn(qs, **skw))
             holder.setdefault("out", out)
             done.set()
         done.wait()

@@ -54,7 +54,12 @@ import numpy as np
 from repro.analysis.annotations import guarded_by
 from repro.obs.metrics import Histogram, MetricsRegistry, merge_snapshots
 from repro.obs.trace import get_tracer
-from repro.serve.cell import CellFailure, EngineStats, ServingCell
+from repro.serve.cell import (
+    CellFailure,
+    EngineStats,
+    ServingCell,
+    _opts_extra,
+)
 
 __all__ = ["CellRouter", "FleetOverloadError", "build_fleet", "query_key"]
 
@@ -266,8 +271,19 @@ class CellRouter:
         return stats
 
     # -- request path --------------------------------------------------
-    def search(self, query: np.ndarray, timeout: float = 30.0):
+    def search(self, query: np.ndarray, timeout: float = 30.0, *,
+               filter=None, mode: str = "semantic", alpha: float = 0.5,
+               q_terms=None, q_weights=None):
         """Route one query through the fleet; returns ``(dists, ids)``.
+
+        ``filter``/``mode``/``alpha``/``q_terms``/``q_weights`` are the
+        filtered + hybrid search options (docs/filtering.md), forwarded
+        with every dispatch — primary, hedge, and failure re-dispatch all
+        carry the same options, and the per-cell cache key folds them in
+        so results from different option sets never alias.  Affinity
+        routing stays keyed on the query vector alone: a head query hits
+        the same cell whatever it filters by, keeping one cell's cache
+        hot for all of that query's variants.
 
         Raises :class:`FleetOverloadError` when shed at admission,
         :class:`TimeoutError` when no cell answered in ``timeout``
@@ -298,9 +314,12 @@ class CellRouter:
             # target: recurring head queries short-circuit here, and the
             # generation token makes a post-swap offer of a pre-swap
             # result impossible (see FrequencyAdmissionCache)
+            opt_kw = dict(filter_spec=filter, mode=mode, alpha=alpha,
+                          q_terms=q_terms, q_weights=q_weights)
             ckey = cgen = None
             if primary.cache is not None:
-                ckey = primary.cache.key_for(query)
+                ckey = primary.cache.key_for(
+                    query, _opts_extra(filter, mode, alpha))
                 cgen = primary.cache.generation
                 hit = primary.cache.get(ckey)
                 if hit is not None:
@@ -321,7 +340,7 @@ class CellRouter:
                         if self.hedge_ms is not None else None)
             cancelled = threading.Event()
             fut = primary.submit(query, cancelled=cancelled,
-                                 trace_id=trace_id)
+                                 trace_id=trace_id, **opt_kw)
             tried = {primary.name}
             outstanding = 1
             hedged = rerouted = False
@@ -359,7 +378,7 @@ class CellRouter:
                             # its own cell's worker
                             alt.submit(query, future=fut,
                                        cancelled=cancelled,
-                                       trace_id=trace_id)
+                                       trace_id=trace_id, **opt_kw)
                             tried.add(alt.name)
                             outstanding += 1
                     continue
@@ -375,7 +394,7 @@ class CellRouter:
                         tracer.instant("reroute", failed=out.cell,
                                        cell=alt.name, trace_id=trace_id)
                         alt.submit(query, future=fut, cancelled=cancelled,
-                                   trace_id=trace_id)
+                                   trace_id=trace_id, **opt_kw)
                         tried.add(alt.name)
                         outstanding += 1
                     elif outstanding <= 0:

@@ -293,3 +293,144 @@ def test_popcount_exhaustive_16bit():
     got = np.asarray(popcount32(x))
     want = np.array([bin(i).count("1") for i in range(1 << 16)])
     assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# mask-composition edges: the filter surface (repro.core.metadata) compiles
+# predicates into the SAME ``valid`` / ``ids`` operands these kernels
+# already take, so a filtered + tombstoned + delta-padded backend dispatch
+# is exactly: filter mask AND liveness mask, over a grid-padded corpus.
+# Every kernel must hold the contract on the four edges: selectivity 0
+# (full sentinel surface, no NaNs), selectivity 1 (bitwise-equal to the
+# unfiltered call), filter AND tombstone AND grid pad, and fewer-than-k
+# survivors.
+# ---------------------------------------------------------------------------
+
+_EN, _EB, _EK = 77, 5, 8        # 77 % 32 != 0 -> the grid pad is always on
+
+
+def _edge_dispatch(name):
+    """(n, dispatch) where dispatch(valid_or_None) -> (d, i) np arrays."""
+    from repro.kernels.ops import bm25_topk_op, hybrid_topk_op
+
+    rng = np.random.default_rng(hash(name) % 2**31)
+    n, b, k, d = _EN, _EB, _EK, 8
+    if name == "l2":
+        q = rng.normal(size=(b, d)).astype(np.float32)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        fn = lambda v: l2_topk_op(q, x, k, valid=v, force_pallas=True,
+                                  bq=8, bn=32)
+    elif name == "int8":
+        q = rng.normal(size=(b, d)).astype(np.float32)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        codes, scales = quantize_rows_int8(x)
+        fn = lambda v: l2_topk_int8_op(q, codes, scales, k, valid=v,
+                                       force_pallas=True, bq=8, bn=32)
+    elif name == "pq_adc":
+        lut = (rng.normal(size=(b, 4, 256)) ** 2).astype(np.float32)
+        codes = rng.integers(0, 256, size=(n, 4)).astype(np.int32)
+        fn = lambda v: pq_adc_topk_op(lut, codes, k, valid=v,
+                                      force_pallas=True, bq=4, bn=32)
+    elif name == "hamming":
+        qc = rng.integers(0, 2**16, size=(b, 2)).astype(np.int32)
+        cc = rng.integers(0, 2**16, size=(n, 2)).astype(np.int32)
+        fn = lambda v: hamming_topk_op(qc, cc, k, valid=v,
+                                       force_pallas=True, bq=8, bn=32)
+    elif name == "bm25":
+        terms = np.where(rng.random((n, 6)) < 0.8,
+                         rng.integers(0, 40, (n, 6)), -1).astype(np.int32)
+        tf = np.where(terms >= 0, rng.random((n, 6)), 0.0) \
+            .astype(np.float32)
+        qt = rng.integers(0, 40, size=(b, 4)).astype(np.int32)
+        qw = rng.random((b, 4)).astype(np.float32) + 0.1
+        fn = lambda v: bm25_topk_op(qt, qw, terms, tf, k, valid=v,
+                                    force_pallas=True, bq=8, bn=32)
+    elif name == "hybrid":
+        q = rng.normal(size=(b, d)).astype(np.float32)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        terms = np.where(rng.random((n, 6)) < 0.8,
+                         rng.integers(0, 40, (n, 6)), -1).astype(np.int32)
+        tf = np.where(terms >= 0, rng.random((n, 6)), 0.0) \
+            .astype(np.float32)
+        qt = rng.integers(0, 40, size=(b, 4)).astype(np.int32)
+        qw = rng.random((b, 4)).astype(np.float32) + 0.1
+        alpha = np.full((1, 1), 0.4, np.float32)
+        fn = lambda v: hybrid_topk_op(q, x, qt, qw, terms, tf, alpha, k,
+                                      valid=v, force_pallas=True,
+                                      bq=8, bn=32)
+    elif name == "bucket_topk":
+        q = rng.normal(size=(b, d)).astype(np.float32)
+        vecs = rng.normal(size=(b, n, d)).astype(np.float32)
+        ids = rng.permutation(500)[:n].astype(np.int32)
+        ids_bn = np.broadcast_to(ids, (b, n)).copy()
+        fn = lambda v: candidate_topk_op(
+            q, vecs,
+            ids_bn if v is None else np.where(
+                np.asarray(v, bool)[None, :], ids_bn, -1),
+            k, force_pallas=True, bq=8, bc=16)
+    else:
+        raise AssertionError(name)
+
+    def dispatch(v):
+        dd, ii = fn(None if v is None else np.asarray(v, np.int32))
+        return np.asarray(dd), np.asarray(ii)
+
+    # bucket_topk ranks entity ids, not row positions: expose the map
+    slot_ids = ids if name == "bucket_topk" else None
+    return n, dispatch, slot_ids
+
+
+@pytest.mark.parametrize(
+    "name", ["l2", "int8", "pq_adc", "hamming", "bm25", "hybrid",
+             "bucket_topk"])
+def test_mask_composition_edges(name):
+    n, dispatch, slot_ids = _edge_dispatch(name)
+    rng = np.random.default_rng(99)
+
+    def returned(i):
+        return i[i >= 0]
+
+    def id_pool(valid_bool):
+        """Entity ids admissible under a slot/row mask."""
+        if slot_ids is None:
+            return np.flatnonzero(valid_bool)
+        return slot_ids[valid_bool]
+
+    # selectivity 0: the full (inf, -1) sentinel surface, never NaN
+    d0, i0 = dispatch(np.zeros(n, np.int32))
+    assert np.isinf(d0).all() and (i0 == -1).all(), (
+        f"{name}: selectivity 0 must return only sentinels")
+    assert not np.isnan(d0).any()
+
+    # selectivity 1: bitwise-equal to the unfiltered dispatch
+    d1, i1 = dispatch(np.ones(n, np.int32))
+    du, iu = dispatch(None)
+    assert np.array_equal(d1, du) and np.array_equal(i1, iu), (
+        f"{name}: an all-true mask changed the unfiltered answer")
+
+    # filter AND tombstone over the grid-padded corpus (77 % 32 != 0)
+    filt = rng.random(n) < 0.5
+    tomb = rng.random(n) < 0.2
+    v = filt & ~tomb
+    if not v.any():
+        v[0] = True
+    d2, i2 = dispatch(v.astype(np.int32))
+    assert not np.isnan(d2).any()
+    pool = set(id_pool(v).tolist())
+    got = returned(i2)
+    assert set(got.tolist()) <= pool, (
+        f"{name}: composed mask leaked a dead/filtered/pad row")
+    assert (i2[np.isinf(d2)] == -1).all(), (
+        f"{name}: inf distance must pair with the -1 sentinel id")
+
+    # fewer-than-k survivors: exactly those survivors, then sentinels
+    surv = np.zeros(n, bool)
+    surv[rng.choice(n, 3, replace=False)] = True
+    d3, i3 = dispatch(surv.astype(np.int32))
+    want = set(id_pool(surv).tolist())
+    for r in range(d3.shape[0]):
+        real = returned(i3[r])
+        assert set(real.tolist()) == want and real.size == 3, (
+            f"{name}: {real} != the 3 surviving rows {sorted(want)}")
+        assert np.isinf(d3[r, 3:]).all() and (i3[r, 3:] == -1).all(), (
+            f"{name}: slots past the survivors must be (inf, -1)")
